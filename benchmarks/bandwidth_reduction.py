@@ -1,0 +1,34 @@
+"""Paper abstract/§2.2: communication-volume reduction vs per-step fp32
+data-parallel training — 400x at H=100/int8, up to 2000x at H=500, plus
+the beyond-paper int4 (+EF) mode. Exact byte accounting from the ring
+implementation (payload + codebook sidebands), not an estimate."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core.diloco import DiLoCoConfig, sync_wire_bytes
+from repro.models import common as mcommon
+from repro.models.registry import get_model
+
+
+def run(seed: int = 0) -> list[str]:
+    cfg = get_config("intellect-1")
+    model = get_model(cfg)
+    shapes, _ = mcommon.eval_axes(model.init, jax.random.PRNGKey(0))
+    n = sum(l.size for l in jax.tree.leaves(shapes))
+    k = 8
+    dp_per_step = 2 * (k - 1) * (n / k) * 4      # fp32 ring gradients
+    rows = []
+    for h, quant in [(100, "int8"), (500, "int8"), (100, "fp32"),
+                     (100, "int4"), (500, "int4")]:
+        dcfg = DiLoCoConfig(inner_steps=h, quant=quant)
+        diloco = sync_wire_bytes(shapes, k, dcfg)  # once per H steps
+        reduction = (dp_per_step * h) / diloco
+        rows.append(common.csv_row(
+            f"bandwidth_reduction/H{h}_{quant}", 0.0,
+            f"reduction={reduction:.0f}x;"
+            f"diloco_bytes_per_sync={diloco:.3e};"
+            f"dp_bytes_per_{h}_steps={dp_per_step * h:.3e}"))
+    return rows

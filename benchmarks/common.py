@@ -1,0 +1,73 @@
+"""Shared benchmark utilities: the WAN/DCI network model used to
+reproduce the paper's timing tables on CPU (no real multi-continent
+links here), with the paper's own measured anchors.
+
+Paper anchors (Table 2): inner phase 38 min (H=100 on 8xH100 nodes);
+median all-reduce 103 s (USA), 382 s (transatlantic), 469 s (global);
+checkpoint save 60 s; CPU pseudo-grad + outer step 5-10 s.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Paper Table 2 anchors
+INNER_PHASE_S = 38 * 60.0
+ALLREDUCE_MEDIAN_S = {"usa": 103.0, "transatlantic": 382.0,
+                      "global": 469.0}
+BASELINE_MFU = 0.433          # "no comm" MFU
+CKPT_SAVE_S = 60.0
+OUTER_CPU_OVERHEAD_S = 7.5    # 5-10 s
+
+
+@dataclasses.dataclass(frozen=True)
+class GeoScenario:
+    name: str
+    n_nodes: int
+    # pairwise bandwidth distribution (Gbit/s), lognormal-ish jitter
+    bw_mean_gbps: float
+    bw_sigma: float           # lognormal sigma: higher = less reliable
+    latency_ms: float
+
+
+# Bandwidth means back-calibrated from the paper's measured medians
+# (17.9-19 GB int8 payload for 10B params over 103/382/469 s implies
+# ~1.4 / 0.39 / 0.32 Gbit/s effective bottleneck links — inside the
+# paper's stated 500 Mb - 4 Gb/s envelope). Sigma grows with distance
+# (Fig. 3: variance increases toward global).
+SCENARIOS = {
+    "usa": GeoScenario("usa", 8, 1.3, 0.25, 40.0),
+    "transatlantic": GeoScenario("transatlantic", 10, 0.36, 0.45, 90.0),
+    "global": GeoScenario("global", 14, 0.28, 0.60, 150.0),
+}
+
+
+def sample_bandwidth_matrix(sc: GeoScenario, rng: np.random.Generator
+                            ) -> np.ndarray:
+    """Symmetric pairwise bandwidth (Gbit/s) with heavy-ish tails."""
+    n = sc.n_nodes
+    w = sc.bw_mean_gbps * rng.lognormal(0.0, sc.bw_sigma, size=(n, n))
+    w = (w + w.T) / 2
+    np.fill_diagonal(w, 0.0)
+    return w
+
+
+def ring_allreduce_time_s(payload_bytes_per_worker: float,
+                          ring_bw_gbps: np.ndarray,
+                          order, latency_ms: float) -> float:
+    """Time of one ring all-reduce: 2(n-1) hops, each hop paced by the
+    slowest active link (synchronous ring), plus per-hop latency."""
+    n = len(order)
+    if n <= 1:
+        return 0.0
+    hop_payload = payload_bytes_per_worker / (2 * (n - 1))
+    edges = [(order[i], order[(i + 1) % n]) for i in range(n)]
+    bws = np.array([ring_bw_gbps[a, b] for a, b in edges])
+    bottleneck = bws.min() * 1e9 / 8      # bytes/s
+    per_hop = hop_payload / bottleneck + latency_ms / 1e3
+    return 2 * (n - 1) * per_hop
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

@@ -1,0 +1,66 @@
+"""§2.2 kernel microbenchmark: quantization throughput.
+
+The paper's C++ uint8 ops had to beat 4 Gb/s link speed (60x over
+torch). Here the Pallas kernels target TPU; on this CPU container we
+time the jnp reference (compiled by XLA:CPU) and the interpret-mode
+kernels per-call, and — the deployable number — derive the bytes/s each
+path must sustain so quantization never becomes the ring bottleneck
+(paper's criterion)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(seed: int = 0) -> list[str]:
+    rng = np.random.default_rng(seed)
+    rows = []
+    n = 1 << 22              # 16 MiB fp32 chunk (one ring hop payload)
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+
+    t_ref = _time(jax.jit(ref.quantize), x)
+    gbps_ref = n * 4 / t_ref / 1e9
+    rows.append(common.csv_row(
+        "kernel/quantize_jnp_xla_cpu", t_ref * 1e6,
+        f"throughput_GBps={gbps_ref:.2f};"
+        f"sustains_4Gbit_link={int(gbps_ref * 8 > 4)}"))
+
+    q = ref.quantize(x)
+    t_deq = _time(jax.jit(ref.dequantize), q)
+    rows.append(common.csv_row(
+        "kernel/dequantize_jnp_xla_cpu", t_deq * 1e6,
+        f"throughput_GBps={n * 4 / t_deq / 1e9:.2f}"))
+
+    # interpret-mode Pallas (correctness vehicle; real target is TPU —
+    # use a small block so the python interpreter finishes quickly)
+    xs = x[: 1 << 16]
+    t_pal = _time(lambda v: ops.quantize(v, impl="pallas"), xs,
+                  iters=2)
+    rows.append(common.csv_row(
+        "kernel/quantize_pallas_interpret", t_pal * 1e6,
+        f"elems={xs.size};note=interpret-mode-correctness-only"))
+
+    # fused pseudo-grad path saves one full HBM pass
+    a = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    t_fused = _time(jax.jit(ref.quantize_pseudograd), a, x)
+    t_unfused = _time(jax.jit(lambda aa, xx: ref.quantize(aa - xx)),
+                      a, x)
+    rows.append(common.csv_row(
+        "kernel/pseudograd_fusion", t_fused * 1e6,
+        f"unfused_us={t_unfused * 1e6:.1f};"
+        f"speedup={t_unfused / t_fused:.2f}x"))
+    return rows

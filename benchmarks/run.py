@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus a header comment).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table2 fig5
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    ("table2", "benchmarks.table2_compute_util"),
+    ("bandwidth", "benchmarks.bandwidth_reduction"),
+    ("fig3", "benchmarks.fig3_allreduce_dist"),
+    ("fig5", "benchmarks.fig5_resilience"),
+    ("convergence", "benchmarks.convergence_diloco_vs_dp"),
+    ("quant", "benchmarks.quant_quality"),
+    ("kernels", "benchmarks.kernel_bench"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    print("# name,us_per_call,derived")
+    failed = []
+    for key, modname in MODULES:
+        if want and key not in want:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception:
+            failed.append(key)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""The communication stack: int8 ring all-reduce + bandwidth-aware ring
+ordering (paper §2.2/§2.5).
+
+    PYTHONPATH=src python examples/bandwidth_and_topology.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+from repro.core.diloco import DiLoCoConfig, bandwidth_reduction_factor
+from repro.core.ring_reduce import (RingConfig, ring_wire_bytes,
+                                    simulate_ring_all_reduce)
+
+rng = np.random.default_rng(0)
+
+# 1. int8 ring all-reduce: 6 workers, fp32-exactness vs int8 wire format
+xs = jnp.asarray(rng.normal(size=(6, 100_000)) * 1e-3, jnp.float32)
+exact = simulate_ring_all_reduce(xs, cfg=RingConfig(quant="fp32"))
+q8 = simulate_ring_all_reduce(xs, cfg=RingConfig(quant="int8"))
+err = float(jnp.max(jnp.abs(q8[0] - exact[0])))
+print(f"int8 ring vs exact mean: max err {err:.2e} "
+      f"(pseudo-grad sigma {float(xs.std()):.2e})")
+print(f"wire bytes per worker: int8 "
+      f"{ring_wire_bytes(100_000, 6, 'int8'):,} vs fp32 "
+      f"{ring_wire_bytes(100_000, 6, 'fp32'):,}")
+for h, q in [(100, "int8"), (500, "int8"), (100, "int4")]:
+    f = bandwidth_reduction_factor(DiLoCoConfig(inner_steps=h, quant=q))
+    print(f"  H={h} {q}: {f:.0f}x less traffic than per-step fp32 DP")
+
+# 2. bandwidth-aware ring order (max-min bottleneck Hamiltonian cycle)
+n = 10
+w = rng.uniform(0.3, 4.0, size=(n, n))
+w = (w + w.T) / 2
+np.fill_diagonal(w, 0)
+naive = tuple(range(n))
+best = topology.optimize_ring_order(w)
+print(f"\nring bottleneck bandwidth: naive order "
+      f"{topology.cycle_bottleneck(w, naive):.2f} Gb/s -> optimized "
+      f"{topology.cycle_bottleneck(w, best):.2f} Gb/s")
+print(f"optimized ring: {best}")
+
+# 3. the monitor only reorders (=> recompiles) when links drift
+mon = topology.BandwidthMonitor(n)
+mon.observe_matrix(w)
+changed, order = mon.maybe_reorder()
+print(f"monitor adopted order (recompile needed): {changed}")
+changed, _ = mon.maybe_reorder()
+print(f"stable network, second check reorders: {changed}")

@@ -1,0 +1,34 @@
+"""Quickstart: train a small LM with DiLoCo in 60 seconds on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.core.diloco import DiLoCoConfig
+from repro.core.fault_tolerance import ClusterSimulator
+from repro.data.pipeline import DataConfig
+from repro.models.registry import get_model
+from repro.train.loop import ElasticTrainer, TrainerConfig
+
+# a reduced-size sibling of the paper's own 10B config
+cfg = get_config("intellect-1").reduced()
+model = get_model(cfg)
+params, _ = model.init(jax.random.PRNGKey(0))
+
+# 4 DiLoCo workers, H=5 inner steps, int8 ring (the paper's recipe)
+trainer = ElasticTrainer(
+    model,
+    TrainerConfig(diloco=DiLoCoConfig(inner_steps=5, quant="int8"),
+                  inner_lr=3e-3, max_workers=4),
+    DataConfig(vocab=cfg.vocab, seq_len=64, batch_per_worker=4,
+               total_steps=100),
+    params,
+    ClusterSimulator([0, 1, 2, 3]),
+)
+history = trainer.run(6)
+for h in history:
+    print(f"outer={h['outer_step']} loss={h['loss']:.4f} "
+          f"live={h['live']} wire_bytes/sync={h['wire_bytes']:,}")
+print(f"\nloss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f} "
+      f"with 400x less communication than per-step DP at H=100")

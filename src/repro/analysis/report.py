@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+JSON cells written by launch/dryrun.py.
+
+    PYTHONPATH=src python -m repro.analysis.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.configs import ASSIGNED, SHAPES
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" \
+    / "dryrun"
+
+
+def load_cells(mesh: str) -> dict:
+    cells = {}
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            p = OUT_DIR / mesh / arch / f"{shape}.json"
+            if p.exists():
+                cells[(arch, shape)] = json.loads(p.read_text())
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(mesh: str = "single") -> str:
+    cells = load_cells(mesh)
+    lines = [
+        f"### Roofline — {mesh}-pod mesh "
+        f"({'512' if mesh == 'multi' else '256'} chips, v5e: "
+        f"{PEAK_FLOPS/1e12:.0f} TF/s bf16, {HBM_BW/1e9:.0f} GB/s HBM, "
+        f"{ICI_BW/1e9:.0f} GB/s link)",
+        "",
+        "| arch | shape | step | compute | memory | collective | "
+        "bottleneck | MODEL/HLO flops | roofline MFU bound | "
+        "peak GiB/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), cell in sorted(cells.items()):
+        if "skipped" in cell:
+            lines.append(
+                f"| {arch} | {shape} | — | — | — | — | skipped | — | — "
+                f"| — | ({cell['skipped']}) |")
+            continue
+        for tag in ("train_step", "serve_step", "sync_step"):
+            if tag not in cell:
+                continue
+            r = cell[tag]["roofline"]
+            mem = cell[tag]["memory"].get("peak_device_bytes", 0)
+            fits = "yes" if mem <= 16 * 2**30 else \
+                f"NO ({mem/2**30:.0f}G)"
+            lines.append(
+                f"| {arch} | {shape} | {tag.split('_')[0]} | "
+                f"{_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} | "
+                f"{_fmt_s(r['collective_s'])} | {r['bottleneck']} | "
+                f"{r['useful_ratio']:.2f} | {r['mfu']:.3f} | "
+                f"{mem/2**30:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def summary(mesh: str) -> str:
+    cells = load_cells(mesh)
+    done = sum(1 for c in cells.values() if "skipped" not in c)
+    skipped = sum(1 for c in cells.values() if "skipped" in c)
+    over = [k for k, c in cells.items() if "skipped" not in c and any(
+        c[t]["memory"].get("peak_device_bytes", 0) > 16 * 2**30
+        for t in ("train_step", "serve_step", "sync_step") if t in c)]
+    return (f"{mesh}: {done} compiled, {skipped} skipped "
+            f"(documented), {len(over)} cells over 16 GiB/dev: {over}")
+
+
+if __name__ == "__main__":
+    for mesh in ("single", "multi"):
+        print(summary(mesh))
+        print()
+        print(roofline_table(mesh))
+        print()

@@ -1,0 +1,191 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms, all in seconds (per training/serve step, per device — the
+SPMD module cost analysis is per-device):
+
+    compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16)
+    memory     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective = wire_bytes / link_bw            (~50 GB/s ICI)
+
+``wire_bytes`` is parsed from the post-SPMD HLO text: per-device payload
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with collectives inside while-loop bodies (lax.scan
+over layers / attention blocks) multiplied by the loop trip count
+(recovered from the loop condition's comparison constant).
+
+Byte model per op (ring algorithms):
+    all-gather:          result_bytes            (receives n-1/n of out)
+    reduce-scatter:      operand_bytes
+    all-reduce:          2 x operand_bytes       (RS + AG phases)
+    all-to-all:          operand_bytes
+    collective-permute:  operand_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (spec: ~50 GB/s/link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    total_bytes: float
+
+    @property
+    def breakdown(self) -> str:
+        return ", ".join(f"{k}={v/1e6:.1f}MB"
+                         for k, v in sorted(self.bytes_by_kind.items())
+                         if v)
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> its instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->", line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _loop_trip_counts(hlo: str, comps: dict) -> dict[str, int]:
+    """while-body computation name -> estimated trip count."""
+    trips: dict[str, int] = {}
+    for lines in comps.values():
+        for line in lines:
+            if " while(" not in line:
+                continue
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            if not (mc and mb):
+                continue
+            cond, body = mc.group(1), mb.group(1)
+            count = 1
+            for cl in comps.get(cond, []):
+                for c in re.findall(r"constant\((\d+)\)", cl):
+                    count = max(count, int(c))
+            trips[body] = count
+    return trips
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    trips = _loop_trip_counts(hlo, comps)
+    by_kind: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+
+    for comp_name, lines in comps.items():
+        mult = trips.get(comp_name, 1)
+        for line in lines:
+            m = re.search(
+                r"=\s*(.*?)\s*"
+                r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                r"collective-permute)(-start|-done)?\(", line)
+            if not m:
+                continue
+            result_t, kind, suffix = m.groups()
+            if suffix == "-done":
+                continue          # payload counted at the -start op
+            # result types: possibly a tuple "(bf16[..]{..}, ...)"
+            res_bytes = sum(_shape_bytes(t) for t in
+                            re.findall(r"\w+\[[\d,]*\]", result_t))
+            # operand types appear inline in the call parens
+            call = line[m.end():]
+            op_bytes = sum(_shape_bytes(t) for t in
+                           re.findall(r"\w+\[[\d,]*\]", call))
+            if kind == "all-gather":
+                b = res_bytes
+            elif kind == "all-reduce":
+                b = 2 * (op_bytes or res_bytes)
+            elif kind == "reduce-scatter":
+                b = op_bytes or res_bytes
+            else:
+                b = op_bytes or res_bytes
+            by_kind[kind] += b * mult
+    return CollectiveStats(by_kind, sum(by_kind.values()))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per device
+    hbm_bytes: float          # per device
+    wire_bytes: float         # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float        # 6*N*D (or 2*N*D serve), GLOBAL
+    useful_ratio: float       # model_flops / (flops * n_chips)
+    step_s: float
+    mfu: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, n_chips: int, model_flops: float,
+            hlo: str | None = None) -> Roofline:
+    """Trip-count-aware roofline. XLA's cost_analysis() counts while
+    bodies once (a 40-layer lax.scan would be 40x undercounted), so the
+    numbers come from analysis.hlo_cost; the XLA aggregates are kept in
+    the dry-run JSON for reference."""
+    from repro.analysis import hlo_cost
+
+    hlo = hlo if hlo is not None else compiled.as_text()
+    cost = hlo_cost.analyze_hlo(hlo)
+    flops = cost.flops
+    hbm = cost.hbm_bytes
+    wire = cost.wire_bytes
+    c = flops / PEAK_FLOPS
+    m = hbm / HBM_BW
+    x = wire / ICI_BW
+    terms = {"compute": c, "memory": m, "collective": x}
+    bottleneck = max(terms, key=terms.get)
+    step = max(c, m, x)
+    useful = model_flops / max(flops * n_chips, 1.0)
+    mfu = (model_flops / n_chips / max(step, 1e-30)) / PEAK_FLOPS
+    return Roofline(flops, hbm, wire, c, m, x, bottleneck,
+                    model_flops, useful, step, mfu)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*tokens for training, 2*N_active*tokens
+    for inference forward (decode counts one new token per sequence)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch      # decode: 1 token/seq

@@ -1,0 +1,6 @@
+from repro.checkpointing.checkpoint import (latest_step, restore, save,
+                                            save_async)
+from repro.checkpointing.p2p import CheckpointServer, fetch_checkpoint
+
+__all__ = ["save", "save_async", "restore", "latest_step",
+           "CheckpointServer", "fetch_checkpoint"]

@@ -1,0 +1,26 @@
+"""PRIME core: the paper's contribution as composable JAX modules."""
+from repro.core.diloco import (DiLoCoConfig, OuterState,
+                               bandwidth_reduction_factor,
+                               init_outer_state, init_outer_state_sim,
+                               outer_sync, outer_sync_sim, sync_wire_bytes)
+from repro.core.elastic_mesh import ElasticDeviceMesh, SlotAssignment
+from repro.core.fault_tolerance import (ClusterSimulator, EventKind,
+                                        HeartbeatMonitor, NodeEvent,
+                                        RetryPolicy)
+from repro.core.ring_reduce import (RingConfig, ring_all_reduce,
+                                    ring_wire_bytes,
+                                    simulate_ring_all_reduce)
+from repro.core.topology import (BandwidthMonitor, cycle_bottleneck,
+                                 optimize_ring_order)
+
+__all__ = [
+    "DiLoCoConfig", "OuterState", "init_outer_state",
+    "init_outer_state_sim", "outer_sync", "outer_sync_sim",
+    "sync_wire_bytes", "bandwidth_reduction_factor",
+    "ElasticDeviceMesh", "SlotAssignment",
+    "ClusterSimulator", "EventKind", "HeartbeatMonitor", "NodeEvent",
+    "RetryPolicy",
+    "RingConfig", "ring_all_reduce", "ring_wire_bytes",
+    "simulate_ring_all_reduce",
+    "BandwidthMonitor", "cycle_bottleneck", "optimize_ring_order",
+]

@@ -1,0 +1,77 @@
+"""Beyond-paper gradient-compression extensions.
+
+The paper ships int8 (4x vs fp32). Two extensions, both composable with
+the ring:
+
+  * **int4 packed quantization** (8x, -> ~800x total reduction at H=100):
+    same 6-sigma uniform scheme with 16 buckets, two codes packed per
+    uint8 byte on the wire.
+  * **Error feedback (EF14-style)**: the residual ``pg - deq(q(pg))`` is
+    kept locally and added to the next outer step's pseudo-gradient, so
+    quantization bias cannot accumulate over outer steps. The paper
+    argues pseudo-gradient quantization is robust; EF makes the claim
+    unconditional at int4.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NUM_BUCKETS4 = 16
+CLIP_SIGMAS = 6.0
+_EPS = 1e-12
+
+
+class Quantized4(NamedTuple):
+    packed: jnp.ndarray     # uint8, two 4-bit codes per byte
+    codebook: jnp.ndarray   # (16,) fp32
+
+    @property
+    def wire_bytes(self) -> int:
+        return int(self.packed.size) + 4 * NUM_BUCKETS4
+
+
+def quantize4(x: jnp.ndarray) -> Quantized4:
+    xf = x.astype(jnp.float32).reshape(-1)
+    mu, sigma = jnp.mean(xf), jnp.std(xf)
+    half = CLIP_SIGMAS * sigma
+    lo = mu - half
+    width = jnp.maximum(2 * half / NUM_BUCKETS4, _EPS)
+    idx = jnp.clip(jnp.floor((xf - lo) / width), 0, NUM_BUCKETS4 - 1)
+    codes = idx.astype(jnp.int32)
+    sums = jnp.zeros((NUM_BUCKETS4,), jnp.float32).at[codes].add(xf)
+    counts = jnp.zeros((NUM_BUCKETS4,), jnp.float32).at[codes].add(1.0)
+    centers = lo + (jnp.arange(NUM_BUCKETS4, dtype=jnp.float32) + 0.5) * width
+    book = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centers)
+    # pack pairs: pad to even length
+    n = codes.shape[0]
+    codes = jnp.pad(codes, (0, n % 2))
+    pair = codes.reshape(-1, 2)
+    packed = (pair[:, 0] * 16 + pair[:, 1]).astype(jnp.uint8)
+    return Quantized4(packed, book)
+
+
+def dequantize4(q: Quantized4, shape, dtype=jnp.float32) -> jnp.ndarray:
+    p = q.packed.astype(jnp.int32)
+    hi, lo = p // 16, p % 16
+    codes = jnp.stack([hi, lo], axis=-1).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return q.codebook[codes[:n]].reshape(shape).astype(dtype)
+
+
+def ef_compress(pg_flat: jnp.ndarray, residual: jnp.ndarray,
+                quantize_fn, dequantize_fn):
+    """Error-feedback wrapper: compress (pg + residual), return the wire
+    payload and the new residual."""
+    corrected = pg_flat + residual
+    q = quantize_fn(corrected)
+    deq = dequantize_fn(q)
+    return q, corrected - deq
+
+
+def init_residual(pg_flat_shape) -> jnp.ndarray:
+    return jnp.zeros(pg_flat_shape, jnp.float32)

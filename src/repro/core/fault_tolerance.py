@@ -1,0 +1,189 @@
+"""Fault tolerance and dynamic node management (INTELLECT-1 §2.4).
+
+Deterministic (logical-clock) re-implementation of PRIME's mechanisms:
+
+  * **HeartbeatMonitor** — each node heartbeats every ``interval`` (paper:
+    2 s); nodes silent for ``timeout`` (paper: 6 s) are evicted. A
+    *deathrattle* triggers immediate eviction (graceful exit).
+  * **MembershipLog** — the master key-value store's view of the world;
+    joins take effect only at outer-step boundaries (the paper admits
+    joiners "at the next outer step with zero pseudo-gradients").
+  * **RetryPolicy** — all-reduce retry excluding failed workers
+    (paper §2.4.5), with bounded attempts.
+  * **ClusterSimulator** — drives a schedule of join/leave/crash/
+    straggler events against an elastic training loop; used by the
+    resilience benchmark (paper Fig. 5: 4 -> 14 nodes) and the
+    integration tests.
+
+Nothing here touches wall-clock time: time is an explicit float so tests
+are deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Iterable
+
+
+class NodeState(enum.Enum):
+    JOINING = "joining"      # downloading checkpoint (P2P), not yet live
+    LIVE = "live"
+    LEFT = "left"            # graceful (deathrattle)
+    DEAD = "dead"            # evicted by heartbeat timeout
+
+
+@dataclasses.dataclass
+class Node:
+    node_id: int
+    state: NodeState = NodeState.JOINING
+    last_heartbeat: float = -1.0
+    joined_at: float = 0.0
+
+
+class HeartbeatMonitor:
+    """Paper §2.4.3: 2 s heartbeats, 6 s eviction, deathrattle fast path."""
+
+    def __init__(self, interval: float = 2.0, timeout: float = 6.0):
+        assert timeout > interval
+        self.interval = interval
+        self.timeout = timeout
+        self.nodes: dict[int, Node] = {}
+
+    def register(self, node_id: int, now: float) -> Node:
+        node = Node(node_id, NodeState.JOINING, last_heartbeat=now,
+                    joined_at=now)
+        self.nodes[node_id] = node
+        return node
+
+    def mark_live(self, node_id: int) -> None:
+        self.nodes[node_id].state = NodeState.LIVE
+
+    def heartbeat(self, node_id: int, now: float) -> None:
+        n = self.nodes.get(node_id)
+        if n is not None and n.state in (NodeState.LIVE, NodeState.JOINING):
+            n.last_heartbeat = now
+
+    def deathrattle(self, node_id: int) -> None:
+        n = self.nodes.get(node_id)
+        if n is not None:
+            n.state = NodeState.LEFT
+
+    def sweep(self, now: float) -> list[int]:
+        """Evict nodes whose heartbeat is older than ``timeout``;
+        returns the newly evicted ids."""
+        evicted = []
+        for n in self.nodes.values():
+            if n.state in (NodeState.LIVE, NodeState.JOINING) and \
+                    now - n.last_heartbeat > self.timeout:
+                n.state = NodeState.DEAD
+                evicted.append(n.node_id)
+        return evicted
+
+    def live_ids(self) -> list[int]:
+        return sorted(n.node_id for n in self.nodes.values()
+                      if n.state == NodeState.LIVE)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    max_attempts: int = 3
+
+    def run_collective(self, attempt_fn: Callable[[frozenset], object],
+                       participants: Iterable[int],
+                       failures_by_attempt: Callable[[int, frozenset],
+                                                     frozenset] = None):
+        """Run ``attempt_fn(live_set)``, excluding nodes that fail
+        mid-collective and retrying with the survivors (paper §2.4.5).
+
+        ``failures_by_attempt(attempt, live)`` models which nodes die
+        during a given attempt (empty set = success). Returns
+        (result, final_live_set, attempts_used)."""
+        live = frozenset(participants)
+        for attempt in range(self.max_attempts):
+            failed = (failures_by_attempt(attempt, live)
+                      if failures_by_attempt else frozenset())
+            failed = frozenset(failed) & live
+            if not failed:
+                return attempt_fn(live), live, attempt + 1
+            live = live - failed
+            if not live:
+                break
+        raise RuntimeError(
+            f"collective failed after {self.max_attempts} attempts")
+
+
+# -- event-driven cluster simulation ------------------------------------------
+
+
+class EventKind(enum.Enum):
+    JOIN = "join"                  # new node requests onboarding
+    LEAVE = "leave"                # graceful deathrattle
+    CRASH = "crash"                # heartbeats stop silently
+    STRAGGLE = "straggle"          # node too slow for this outer sync
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeEvent:
+    outer_step: int
+    kind: EventKind
+    node_id: int
+
+
+class ClusterSimulator:
+    """Replays a membership schedule against an elastic DiLoCo loop.
+
+    The trainer calls ``begin_outer_step``/``end_outer_step``; the
+    simulator advances logical time, injects heartbeats for healthy
+    nodes, applies scheduled events, and reports the live worker set the
+    ring must use for this sync (stragglers excluded for one round)."""
+
+    def __init__(self, initial_nodes: Iterable[int],
+                 events: Iterable[NodeEvent] = (),
+                 heartbeat: HeartbeatMonitor | None = None,
+                 seconds_per_outer_step: float = 60.0):
+        self.hb = heartbeat or HeartbeatMonitor()
+        self.events = sorted(events, key=lambda e: e.outer_step)
+        self.now = 0.0
+        self.dt = seconds_per_outer_step
+        self.crashed: set[int] = set()
+        self.history: list[tuple[int, tuple[int, ...]]] = []
+        for nid in initial_nodes:
+            self.hb.register(nid, self.now)
+            self.hb.mark_live(nid)
+
+    def begin_outer_step(self, outer_step: int) -> dict:
+        """Apply events for this step; return the sync plan:
+        {'live': [...], 'stragglers': [...], 'joined': [...],
+        'left': [...]}."""
+        joined, left, stragglers = [], [], []
+        for ev in self.events:
+            if ev.outer_step != outer_step:
+                continue
+            if ev.kind == EventKind.JOIN:
+                self.hb.register(ev.node_id, self.now)
+                # joiner downloads a checkpoint P2P, becomes live at THIS
+                # boundary with zero pseudo-gradient (paper non-blocking)
+                self.hb.mark_live(ev.node_id)
+                joined.append(ev.node_id)
+            elif ev.kind == EventKind.LEAVE:
+                self.hb.deathrattle(ev.node_id)
+                left.append(ev.node_id)
+            elif ev.kind == EventKind.CRASH:
+                self.crashed.add(ev.node_id)
+            elif ev.kind == EventKind.STRAGGLE:
+                stragglers.append(ev.node_id)
+
+        # advance logical time by one inner phase; crashed nodes stop
+        # heartbeating and age out (6 s timeout << 38 min inner phase)
+        self.now += self.dt
+        for nid in self.hb.live_ids():
+            if nid not in self.crashed:
+                self.hb.heartbeat(nid, self.now)
+        evicted = self.hb.sweep(self.now)
+        left.extend(evicted)
+
+        live = self.hb.live_ids()
+        self.history.append((outer_step, tuple(live)))
+        return {"live": live,
+                "stragglers": [s for s in stragglers if s in live],
+                "joined": joined, "left": sorted(set(left))}

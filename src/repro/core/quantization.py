@@ -1,0 +1,15 @@
+"""Public quantization API (re-export).
+
+The actual implementations live in ``repro.kernels``:
+  * ``kernels.ref``        — pure-jnp oracle (paper's exact scheme),
+  * ``kernels.int8_quant`` — Pallas TPU kernels,
+  * ``kernels.ops``        — jit'd wrappers with impl selection.
+"""
+from repro.kernels.ops import (Quantized, dequantize, dequantize_add,
+                               quantize, quantize_pseudograd,
+                               roundtrip_error)
+from repro.kernels.ref import CLIP_SIGMAS, NUM_BUCKETS
+
+__all__ = ["Quantized", "quantize", "dequantize", "dequantize_add",
+           "quantize_pseudograd", "roundtrip_error", "NUM_BUCKETS",
+           "CLIP_SIGMAS"]

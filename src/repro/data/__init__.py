@@ -1,0 +1,5 @@
+from repro.data.pipeline import (INTELLECT1_MIX, DataConfig, SourceSpec,
+                                 TokenPipeline)
+
+__all__ = ["DataConfig", "SourceSpec", "TokenPipeline",
+           "INTELLECT1_MIX"]

@@ -1,0 +1,272 @@
+"""Pallas TPU kernels for PRIME int8 pseudo-gradient quantization.
+
+TPU adaptation of the paper's custom multithreaded C++ uint8 quantization
+(INTELLECT-1 §2.2).  The GPU/CPU version scatter-adds into 256 histogram
+bins; TPUs have no fast scatter, so the per-bucket statistics (needed for
+the bucket-mean codebook) are computed as ``one_hot(codes) @ values`` —
+an MXU matmul over (slab, 256) one-hot tiles.  Decode similarly uses
+``one_hot(codes) @ codebook`` so nothing relies on vector gathers.
+
+Layout: the flat tensor is padded and viewed as (rows, 128) with fp32
+blocks of (BLOCK_ROWS, 128) staged through VMEM; per-block partial
+histograms are accumulated across the (sequential) TPU grid into a single
+(1, 256) output block.
+
+Kernels:
+  * ``encode_hist``      — codes + per-bucket (sum, count) in one pass
+  * ``pseudograd_encode``— fused (anchor - theta) + encode (+hist); saves
+                           one HBM round-trip for the DiLoCo outer step
+  * ``decode``           — codebook[codes] via one-hot matmul
+  * ``decode_add``       — fused dequantize-accumulate for the fp32 ring
+                           accumulator (one pass instead of two)
+
+All kernels are validated against ``ref.py`` in interpret mode (this
+container is CPU-only; TPU is the deployment target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+LANE = 128           # TPU lane width
+BLOCK_ROWS = 512     # (512, 128) fp32 = 256 KiB / block in VMEM
+SLAB_ROWS = 8        # histogram one-hot tile = (8*128, 256) fp32 = 1 MiB
+NUM_BUCKETS = ref.NUM_BUCKETS
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# encode (+ fused pseudo-gradient) + histogram
+# ---------------------------------------------------------------------------
+
+
+def _encode_hist_body(scal_ref, x_ref, codes_ref, sums_ref, counts_ref, *,
+                      block_rows: int, fused_sub: bool, anchor_ref=None):
+    """One grid step: encode a (block_rows, 128) tile and accumulate the
+    256-bin histogram via MXU one-hot matmuls."""
+    pid = pl.program_id(0)
+    lo = scal_ref[0]
+    inv_width = scal_ref[1]
+    nvalid = scal_ref[2]
+
+    x = x_ref[...].astype(jnp.float32)
+    if fused_sub:
+        x = anchor_ref[...].astype(jnp.float32) - x
+
+    # global element index of every lane, for masking the tail padding
+    row0 = pid * block_rows
+    rows = jax.lax.broadcasted_iota(jnp.float32, x.shape, 0) + row0
+    cols = jax.lax.broadcasted_iota(jnp.float32, x.shape, 1)
+    elem = rows * LANE + cols
+    valid = elem < nvalid
+
+    idx = jnp.floor((x - lo) * inv_width)
+    idx = jnp.clip(idx, 0.0, float(NUM_BUCKETS - 1))
+    codes = jnp.where(valid, idx, 0.0).astype(jnp.int32)
+    codes_ref[...] = codes
+
+    # zero the accumulators on the first grid step (TPU grid is sequential)
+    @pl.when(pid == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    buckets = jax.lax.broadcasted_iota(
+        jnp.int32, (SLAB_ROWS * LANE, NUM_BUCKETS), 1)
+
+    def slab(i, carry):
+        s, c = carry
+        xs = jax.lax.dynamic_slice(x, (i * SLAB_ROWS, 0), (SLAB_ROWS, LANE))
+        cs = jax.lax.dynamic_slice(codes, (i * SLAB_ROWS, 0), (SLAB_ROWS, LANE))
+        vs = jax.lax.dynamic_slice(
+            valid, (i * SLAB_ROWS, 0), (SLAB_ROWS, LANE))
+        oh = (cs.reshape(-1, 1) == buckets).astype(jnp.float32)
+        oh = oh * vs.reshape(-1, 1).astype(jnp.float32)
+        xf = jnp.where(vs, xs, 0.0).reshape(1, -1)
+        s = s + jnp.dot(xf, oh, preferred_element_type=jnp.float32)
+        c = c + jnp.sum(oh, axis=0, keepdims=True)
+        return s, c
+
+    s0 = jnp.zeros((1, NUM_BUCKETS), jnp.float32)
+    c0 = jnp.zeros((1, NUM_BUCKETS), jnp.float32)
+    s, c = jax.lax.fori_loop(0, block_rows // SLAB_ROWS, slab, (s0, c0))
+    sums_ref[...] += s
+    counts_ref[...] += c
+
+
+def _pad_rows(flat: jnp.ndarray, block_rows: int) -> tuple[jnp.ndarray, int]:
+    n = flat.size
+    per_block = block_rows * LANE
+    nblocks = max(1, -(-n // per_block))
+    padded = nblocks * per_block
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(nblocks * block_rows, LANE), nblocks
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "fused_sub", "interpret"))
+def _encode_hist_call(x_flat, anchor_flat, lo, width, nvalid, *,
+                      block_rows: int, fused_sub: bool, interpret: bool):
+    x2d, nblocks = _pad_rows(x_flat, block_rows)
+    scal = jnp.stack([lo, 1.0 / width, jnp.float32(nvalid)])
+
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+    ]
+    args = [scal, x2d]
+    kernel = functools.partial(
+        _encode_hist_body, block_rows=block_rows, fused_sub=fused_sub)
+    if fused_sub:
+        a2d, _ = _pad_rows(anchor_flat, block_rows)
+        in_specs.append(pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)))
+        args.append(a2d)
+
+        def kernel(scal_ref, x_ref, anchor_ref, codes_ref, sums_ref,
+                   counts_ref):
+            _encode_hist_body(scal_ref, x_ref, codes_ref, sums_ref,
+                              counts_ref, block_rows=block_rows,
+                              fused_sub=True, anchor_ref=anchor_ref)
+
+    codes2d, sums, counts = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, NUM_BUCKETS), lambda i: (0, 0)),
+            pl.BlockSpec((1, NUM_BUCKETS), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2d.shape, jnp.int32),
+            jax.ShapeDtypeStruct((1, NUM_BUCKETS), jnp.float32),
+            jax.ShapeDtypeStruct((1, NUM_BUCKETS), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+    return codes2d, sums[0], counts[0]
+
+
+def encode_hist(x: jnp.ndarray, lo, width, *, block_rows: int = BLOCK_ROWS,
+                interpret: bool | None = None):
+    """codes (uint8, x.shape) + per-bucket (sums, counts)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    flat = x.astype(jnp.float32).reshape(-1)
+    codes2d, sums, counts = _encode_hist_call(
+        flat, flat, jnp.float32(lo), jnp.float32(width), flat.size,
+        block_rows=block_rows, fused_sub=False, interpret=interpret)
+    codes = codes2d.reshape(-1)[: flat.size].reshape(x.shape)
+    return codes.astype(jnp.uint8), sums, counts
+
+
+def pseudograd_encode_hist(anchor: jnp.ndarray, theta: jnp.ndarray, lo, width,
+                           *, block_rows: int = BLOCK_ROWS,
+                           interpret: bool | None = None):
+    """Fused (anchor - theta) encode: codes + histogram, one HBM pass."""
+    if interpret is None:
+        interpret = _interpret_default()
+    tf = theta.astype(jnp.float32).reshape(-1)
+    af = anchor.astype(jnp.float32).reshape(-1)
+    codes2d, sums, counts = _encode_hist_call(
+        tf, af, jnp.float32(lo), jnp.float32(width), tf.size,
+        block_rows=block_rows, fused_sub=True, interpret=interpret)
+    codes = codes2d.reshape(-1)[: tf.size].reshape(theta.shape)
+    return codes.astype(jnp.uint8), sums, counts
+
+
+# ---------------------------------------------------------------------------
+# decode (+ fused accumulate)
+# ---------------------------------------------------------------------------
+
+
+def _decode_body(codes_ref, book_ref, out_ref, *, block_rows: int,
+                 accumulate: bool, acc_ref=None):
+    codes = codes_ref[...].astype(jnp.int32)
+    book = book_ref[...].astype(jnp.float32)  # (1, 256)
+    buckets = jax.lax.broadcasted_iota(
+        jnp.int32, (SLAB_ROWS * LANE, NUM_BUCKETS), 1)
+
+    def slab(i, out):
+        cs = jax.lax.dynamic_slice(codes, (i * SLAB_ROWS, 0),
+                                   (SLAB_ROWS, LANE))
+        oh = (cs.reshape(-1, 1) == buckets).astype(jnp.float32)
+        vals = jnp.dot(oh, book.reshape(-1, 1),
+                       preferred_element_type=jnp.float32)
+        return jax.lax.dynamic_update_slice(
+            out, vals.reshape(SLAB_ROWS, LANE), (i * SLAB_ROWS, 0))
+
+    out = jnp.zeros((block_rows, LANE), jnp.float32)
+    out = jax.lax.fori_loop(0, block_rows // SLAB_ROWS, slab, out)
+    if accumulate:
+        out = out + acc_ref[...].astype(jnp.float32)
+    out_ref[...] = out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "accumulate", "interpret"))
+def _decode_call(codes_flat, codebook, acc_flat, *, block_rows: int,
+                 accumulate: bool, interpret: bool):
+    c2d, nblocks = _pad_rows(codes_flat.astype(jnp.int32), block_rows)
+    book = codebook.astype(jnp.float32).reshape(1, NUM_BUCKETS)
+    in_specs = [
+        pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        pl.BlockSpec((1, NUM_BUCKETS), lambda i: (0, 0)),
+    ]
+    args = [c2d, book]
+    if accumulate:
+        a2d, _ = _pad_rows(acc_flat.astype(jnp.float32), block_rows)
+        in_specs.append(pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)))
+        args.append(a2d)
+
+        def kernel(codes_ref, book_ref, acc_ref, out_ref):
+            _decode_body(codes_ref, book_ref, out_ref,
+                         block_rows=block_rows, accumulate=True,
+                         acc_ref=acc_ref)
+    else:
+        kernel = functools.partial(
+            _decode_body, block_rows=block_rows, accumulate=False)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(c2d.shape, jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out
+
+
+def decode(codes: jnp.ndarray, codebook: jnp.ndarray, *,
+           block_rows: int = BLOCK_ROWS,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """codebook[codes] as fp32 (one-hot matmul; no vector gather)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    flat = codes.reshape(-1)
+    out = _decode_call(flat, codebook, flat, block_rows=block_rows,
+                       accumulate=False, interpret=interpret)
+    return out.reshape(-1)[: flat.size].reshape(codes.shape)
+
+
+def decode_add(codes: jnp.ndarray, codebook: jnp.ndarray, acc: jnp.ndarray,
+               *, block_rows: int = BLOCK_ROWS,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """acc + codebook[codes] fused in one VMEM pass (ring accumulator)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    flat = codes.reshape(-1)
+    out = _decode_call(flat, codebook, acc.reshape(-1),
+                       block_rows=block_rows, accumulate=True,
+                       interpret=interpret)
+    return out.reshape(-1)[: flat.size].reshape(acc.shape).astype(acc.dtype)

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant)
+so importing this module never touches jax device state. The dry-run
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import to get placeholder devices.
+
+Single pod: (16, 16) = (data, model) — 256 chips.
+Multi-pod:  (2, 16, 16) = (pod, data, model) — 512 chips; the 'pod'
+axis is the DiLoCo axis (slow inter-pod fabric).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n: int = 1, axis: str = "data"):
+    """Small local mesh for tests/examples on CPU devices."""
+    return jax.make_mesh((n,), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,151 @@
+"""Shared model substrate: parameter builder with logical sharding axes,
+norms, RoPE, SwiGLU. Pure JAX (no flax) — params are nested dicts of
+arrays; every init has a parallel tree of *logical axis names* consumed
+by ``sharding.partition`` to derive PartitionSpecs.
+
+Logical axis vocabulary:
+  'vocab'   — embedding rows            (TP: sharded over model axis)
+  'embed'   — the d_model dim           (FSDP candidate)
+  'heads'   — attention head-dim products (TP)
+  'ff'      — MLP hidden                (TP)
+  'experts' — MoE expert dim            (EP)
+  'layers'  — stacked-layer leading dim (never sharded; lax.scan)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Axes = Any
+
+
+@dataclasses.dataclass
+class ParamBuilder:
+    """Builds a params tree and its logical-axes twin in lockstep."""
+
+    key: jax.Array
+    dtype: Any = jnp.float32
+    params: dict = dataclasses.field(default_factory=dict)
+    axes: dict = dataclasses.field(default_factory=dict)
+
+    def _split(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def add(self, path: str, shape, axes, *, init: str = "normal",
+            scale: float | None = None, dtype=None):
+        """Register one parameter. ``path`` is '/'-separated."""
+        dtype = dtype or self.dtype
+        if init == "zeros":
+            val = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, dtype)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            s = scale if scale is not None else fan_in ** -0.5
+            val = (jax.random.normal(self._split(), shape, jnp.float32)
+                   * s).astype(dtype)
+        assert len(axes) == len(shape), (path, shape, axes)
+        d_p, d_a = self.params, self.axes
+        parts = path.split("/")
+        for p in parts[:-1]:
+            d_p = d_p.setdefault(p, {})
+            d_a = d_a.setdefault(p, {})
+        d_p[parts[-1]] = val
+        d_a[parts[-1]] = tuple(axes)
+        return val
+
+def eval_axes(init_fn, key):
+    """Logical-axes tree of an ``init_fn(key) -> (params, axes)`` without
+    allocating: runs it under eval_shape and captures the axes side
+    channel (axes are plain python, invisible to tracing)."""
+    cell = {}
+
+    def wrapper(k):
+        p, a = init_fn(k)
+        cell["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(wrapper, key)
+    return shapes, cell["axes"]
+
+
+def stack_layer_params(per_layer: list[Params]) -> Params:
+    """Stack identical per-layer trees along a leading 'layers' dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def stack_layer_axes(axes: Axes) -> Axes:
+    return jax.tree.map(lambda a: ("layers",) + tuple(a), axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# -- layers -------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray,
+             eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+            ).astype(dt)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def rope_frequencies(head_dim: int, theta: float = 1e4) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                      # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """One-hot-free gather; XLA shards it fine over a vocab-sharded table."""
+    return jnp.take(table, ids, axis=0)
+
+
+def cross_entropy_max_z(logits: jnp.ndarray, targets: jnp.ndarray,
+                        mask: jnp.ndarray | None = None,
+                        z_weight: float = 2e-4):
+    """CE + auxiliary max-z loss (paper: Yang et al. 2023, weight 2e-4).
+
+    logits: (..., V) fp32-upcast internally; targets int ids; mask 0/1.
+    Returns (loss, metrics dict)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    ce = lse - ll
+    z = z_weight * lse * lse
+    tok = ce + z
+    if mask is None:
+        mask = jnp.ones(tok.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (tok * mask).sum() / denom
+    ce_mean = (ce * mask).sum() / denom
+    return loss, {"ce": ce_mean, "z": (z * mask).sum() / denom,
+                  "loss": loss}

@@ -1,0 +1,297 @@
+"""SSM and hybrid LMs.
+
+* ``mamba_lm``  — pure Mamba2 stack (mamba2-130m): 24 SSD layers, tied
+  embeddings, attention-free (long_500k runs with O(1)-per-token state).
+* ``zamba_lm``  — Zamba2-style hybrid (zamba2-2.7b): a Mamba2 backbone
+  with ONE shared attention+MLP transformer block applied every
+  ``attn_every`` layers (9 applications at 54 layers). Simplification vs
+  the real Zamba2 (which adds per-application LoRAs on the shared
+  block): we share the block verbatim and give each application its own
+  input layernorm gain, which is the part that matters for stability.
+  Noted in DESIGN.md §Arch-applicability.
+
+Both use stacked layers + lax.scan; the zamba scan is grouped
+(outer scan over attention periods, inner scan over the mamba layers of
+the group) so the shared block stays un-stacked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, ssm
+from repro.models.common import ParamBuilder
+
+
+def _ssm_cfg(cfg) -> ssm.SSMConfig:
+    return ssm.SSMConfig(d_model=cfg.d_model, d_state=cfg.ssm.d_state,
+                         head_dim=cfg.ssm.head_dim,
+                         n_groups=cfg.ssm.n_groups,
+                         conv_kernel=cfg.ssm.conv_kernel,
+                         expand=cfg.ssm.expand, chunk=cfg.ssm.chunk)
+
+
+def _init_mamba_layer(cfg, key):
+    b = ParamBuilder(key, dtype=cfg.np_dtype)
+    b.add("ln", (cfg.d_model,), ("embed",), init="ones")
+    ssm.init_mamba2(b, "mamba", _ssm_cfg(cfg))
+    return b.params, b.axes
+
+
+def _init_shared_block(cfg, key, n_apps: int):
+    b = ParamBuilder(key, dtype=cfg.np_dtype)
+    d, hd = cfg.d_model, cfg.d_model // cfg.n_heads
+    b.add("ln_attn", (n_apps, d), (None, "embed"), init="ones")
+    b.add("wq", (d, cfg.n_heads * hd), ("embed", "heads"))
+    b.add("wk", (d, cfg.n_kv_heads * hd), ("embed", "heads"))
+    b.add("wv", (d, cfg.n_kv_heads * hd), ("embed", "heads"))
+    b.add("wo", (cfg.n_heads * hd, d), ("heads", "embed"),
+          scale=(cfg.n_heads * hd) ** -0.5)
+    b.add("ln_mlp", (n_apps, d), (None, "embed"), init="ones")
+    b.add("mlp/gate", (d, cfg.d_ff), ("embed", "ff"))
+    b.add("mlp/up", (d, cfg.d_ff), ("embed", "ff"))
+    b.add("mlp/down", (cfg.d_ff, d), ("ff", "embed"),
+          scale=cfg.d_ff ** -0.5)
+    return b.params, b.axes
+
+
+def init_hybrid(cfg, key):
+    """Covers both families: cfg.attn_every=None -> pure SSM."""
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    b = ParamBuilder(k0, dtype=cfg.np_dtype)
+    b.add("embed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+          scale=0.02)
+    b.add("ln_f", (cfg.d_model,), ("embed",), init="ones")
+    if not cfg.tie_embeddings:
+        b.add("lm_head", (cfg.d_model, cfg.padded_vocab),
+              ("embed", "vocab"))
+    params, axes = b.params, b.axes
+    keys = jax.random.split(k1, cfg.n_layers)
+    params["mamba"] = jax.vmap(
+        lambda k: _init_mamba_layer(cfg, k)[0])(keys)
+    _, ma = common.eval_axes(functools.partial(_init_mamba_layer, cfg), k2)
+    axes["mamba"] = common.stack_layer_axes(ma)
+    if cfg.attn_every:
+        n_apps = cfg.n_layers // cfg.attn_every
+        sp, sa = _init_shared_block(cfg, k3, n_apps)
+        params["shared"] = sp
+        axes["shared"] = sa
+    return params, axes
+
+
+def _shared_attn_apply(cfg, p, x, app_idx, *, positions,
+                       layer_cache=None, return_kv=False):
+    """One application of the shared transformer block."""
+    hd = cfg.d_model // cfg.n_heads
+    b, s, _ = x.shape
+    h = common.rms_norm(x, p["ln_attn"][app_idx], cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"]).reshape(
+        b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"]).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"]).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if layer_cache is not None and s == 1:
+        new_cache = attn.cache_update(layer_cache, k, v)
+        o = attn.decode_attention(q, new_cache)
+    else:
+        o = attn.attention(q, k, v, causal=True, block_q=cfg.block_q)
+        if return_kv:
+            new_cache = (k, v)
+    x = x + jnp.einsum("bsh,hd->bsd", o.reshape(b, s, -1), p["wo"])
+    h = common.rms_norm(x, p["ln_mlp"][app_idx], cfg.norm_eps)
+    x = x + common.swiglu(h, p["mlp"]["gate"], p["mlp"]["up"],
+                          p["mlp"]["down"])
+    return x, new_cache
+
+
+def forward(cfg, params, tokens, *, remat: bool = False,
+            collect_state: bool = False, states=None, kv_caches=None):
+    """Training forward (and prefill when collect_state=True).
+
+    Returns (logits, (ssm_states, kv_caches) or None)."""
+    scfg = _ssm_cfg(cfg)
+    x = common.embedding_lookup(params["embed"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def mamba_block(p, x, st):
+        h = common.rms_norm(x, p["ln"], cfg.norm_eps)
+        out, new_st = ssm.apply_mamba2(p["mamba"], h, scfg, state=st,
+                                       return_state=collect_state)
+        return x + out, new_st
+
+    if remat:
+        mamba_block = jax.checkpoint(mamba_block)
+
+    with_state = collect_state or states is not None
+
+    def scan_body(x, inp):
+        if with_state:
+            p, st = inp
+        else:
+            p, st = inp, None
+        y, new_st = mamba_block(p, x, st)
+        return y, new_st
+
+    def scan_xs(p_group, st_group):
+        return (p_group, st_group) if with_state else p_group
+
+    if not cfg.attn_every:
+        sts = states if states is not None else (
+            _dummy_states(cfg, b) if with_state else None)
+        x, new_states = jax.lax.scan(scan_body, x,
+                                     scan_xs(params["mamba"], sts))
+        x = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = _head(cfg, params, x)
+        return logits, (new_states, None)
+
+    # hybrid: groups of `attn_every` mamba layers + one shared-attn app
+    ae = cfg.attn_every
+    n_apps = cfg.n_layers // ae
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_apps, ae) + a.shape[1:]), params["mamba"])
+    sts = states if states is not None else (
+        _dummy_states(cfg, b) if with_state else None)
+    grouped_sts = jax.tree.map(
+        lambda a: a.reshape((n_apps, ae) + a.shape[1:]), sts) \
+        if with_state else None
+    new_states_acc, new_kv_acc = [], []
+    for g in range(n_apps):
+        gp = jax.tree.map(lambda a: a[g], grouped)
+        gs = jax.tree.map(lambda a: a[g], grouped_sts) \
+            if with_state else None
+        x, g_states = jax.lax.scan(scan_body, x, scan_xs(gp, gs))
+        cache_g = None if kv_caches is None else jax.tree.map(
+            lambda a: a[g], kv_caches)
+        x, kv = _shared_attn_apply(cfg, params["shared"], x, g,
+                                   positions=positions,
+                                   layer_cache=cache_g,
+                                   return_kv=collect_state)
+        new_states_acc.append(g_states)
+        new_kv_acc.append(kv)
+    x = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = _head(cfg, params, x)
+    new_states = None
+    if with_state and new_states_acc[0] is not None:
+        new_states = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                  *new_states_acc)
+    new_kv = None
+    if collect_state and new_kv_acc[0] is not None:
+        new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv_acc)
+    return logits, (new_states, new_kv)
+
+
+def _dummy_states(cfg, batch):
+    """Per-layer zero SSMStates (scan xs); None fields not allowed in
+    scan, so always materialize (they are small)."""
+    scfg = _ssm_cfg(cfg)
+    k = scfg.conv_kernel
+    gn = scfg.n_groups * scfg.d_state
+
+    def one():
+        return ssm.SSMState(
+            jnp.zeros((batch, scfg.n_heads, scfg.head_dim,
+                       scfg.d_state), jnp.float32),
+            jnp.zeros((batch, k - 1, scfg.d_inner), cfg.np_dtype),
+            jnp.zeros((batch, k - 1, gn), cfg.np_dtype),
+            jnp.zeros((batch, k - 1, gn), cfg.np_dtype))
+
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[one() for _ in range(cfg.n_layers)])
+
+
+def _head(cfg, params, x):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def loss_fn(cfg, params, batch, *, remat: bool = False):
+    logits, _ = forward(cfg, params, batch["tokens"], remat=remat)
+    loss, metrics = common.cross_entropy_max_z(
+        logits, batch["targets"], batch.get("mask"),
+        z_weight=cfg.max_z_weight)
+    return loss, metrics
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    cache = {"ssm": _dummy_states(cfg, batch_size), "kv": None}
+    if cfg.attn_every:
+        n_apps = cfg.n_layers // cfg.attn_every
+        hd = cfg.d_model // cfg.n_heads
+        cache["kv"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[attn.KVCache.init(batch_size, max_len, cfg.n_kv_heads,
+                                hd, cfg.np_dtype)
+              for _ in range(n_apps)])
+    return cache
+
+
+def prefill(cfg, params, tokens, cache):
+    logits, (states, kvs) = forward(cfg, params, tokens,
+                                    collect_state=True)
+    new_kv = cache["kv"]
+    if kvs is not None:
+        k_new, v_new = kvs  # stacked (n_apps, B, S, Hk, hd)
+
+        def write(c, k, v):
+            return attn.cache_update(c, k, v)
+
+        new_kv = jax.vmap(write)(cache["kv"], k_new, v_new)
+    return logits[:, -1], {"ssm": states, "kv": new_kv}
+
+
+def decode_step(cfg, params, token, cache):
+    """One-token step: recurrent SSM updates + cached shared attention."""
+    scfg = _ssm_cfg(cfg)
+    x = common.embedding_lookup(params["embed"], token)
+    b = x.shape[0]
+
+    def scan_body(x, inp):
+        p, st = inp
+        h = common.rms_norm(x, p["ln"], cfg.norm_eps)
+        out, new_st = ssm.decode_mamba2(p["mamba"], h, scfg, st)
+        return x + out, new_st
+
+    if not cfg.attn_every:
+        x, new_states = jax.lax.scan(scan_body, x,
+                                     (params["mamba"], cache["ssm"]))
+        x = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _head(cfg, params, x)[:, 0], dict(cache, ssm=new_states)
+
+    ae = cfg.attn_every
+    n_apps = cfg.n_layers // ae
+    length = cache["kv"].length[0]
+    positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(
+        jnp.int32)
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_apps, ae) + a.shape[1:]), params["mamba"])
+    grouped_sts = jax.tree.map(
+        lambda a: a.reshape((n_apps, ae) + a.shape[1:]), cache["ssm"])
+    new_states_acc, new_kv_acc = [], []
+    for g in range(n_apps):
+        gp = jax.tree.map(lambda a: a[g], grouped)
+        gs = jax.tree.map(lambda a: a[g], grouped_sts)
+        x, g_states = jax.lax.scan(scan_body, x, (gp, gs))
+        cache_g = jax.tree.map(lambda a: a[g], cache["kv"])
+        x, kv = _shared_attn_apply(cfg, params["shared"], x, g,
+                                   positions=positions,
+                                   layer_cache=cache_g)
+        new_states_acc.append(g_states)
+        new_kv_acc.append(kv)
+    x = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    new_states = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                              *new_states_acc)
+    new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv_acc)
+    return _head(cfg, params, x)[:, 0], {"ssm": new_states,
+                                         "kv": new_kv}

@@ -1,0 +1,160 @@
+"""Mixture-of-Experts FFN (deepseek-moe-16b: 2 shared + 64 routed top-6;
+dbrx-132b: 16 routed top-4).
+
+Dispatch is capacity-based gather/scatter with static shapes (GShard-
+style token dropping), which is the TPU-friendly formulation:
+
+  1. router softmax -> top-k experts per token;
+  2. per expert, take the top-C tokens by gate score (C = capacity);
+  3. gather those tokens -> (E, C, d), run the expert SwiGLU as a
+     batched einsum whose leading dim shards over the EP mesh axis;
+  4. scatter-add weighted outputs back.
+
+FLOPs scale with C*E = capacity_factor * (active tokens) — i.e. with the
+ACTIVE parameter count, not the total (important for the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio). Shared experts (DeepSeek-MoE) are a plain
+dense SwiGLU on every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def _constrain_ep(x, *spec_attempts):
+    """Best-effort sharding constraint with graceful fallback: specs
+    are tried in order; axes that are manual in the enclosing shard_map
+    region or missing from the ambient mesh make an attempt fail."""
+    for spec in spec_attempts:
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:
+            continue
+    return x
+
+
+def init_moe(b: common.ParamBuilder, prefix: str, d_model: int,
+             d_expert: int, n_experts: int, n_shared: int) -> None:
+    b.add(f"{prefix}/router", (d_model, n_experts), ("embed", None),
+          scale=d_model ** -0.5)
+    for nm in ("gate", "up"):
+        b.add(f"{prefix}/experts/{nm}", (n_experts, d_model, d_expert),
+              ("experts", "embed", "ff"))
+    b.add(f"{prefix}/experts/down", (n_experts, d_expert, d_model),
+          ("experts", "ff", "embed"), scale=d_expert ** -0.5)
+    if n_shared:
+        for nm in ("gate", "up"):
+            b.add(f"{prefix}/shared/{nm}", (d_model, n_shared * d_expert),
+                  ("embed", "ff"))
+        b.add(f"{prefix}/shared/down", (n_shared * d_expert, d_model),
+              ("ff", "embed"), scale=(n_shared * d_expert) ** -0.5)
+
+
+TOKEN_BLOCK = 65536
+
+
+def apply_moe(p, x: jnp.ndarray, *, top_k: int,
+              capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (B, S, d), aux metrics dict.
+
+    Tokens are processed in blocks of <= TOKEN_BLOCK (GShard 'group'
+    semantics: capacity applies per block). This bounds the peak memory
+    of the dispatch structurally: XLA's SPMD strategy for the
+    token-gather is an operand all-gather, which on a 0.5M-token pod
+    batch would materialize the full (T, d) stream on every device —
+    per-block it is a few hundred MB."""
+    bsz, seq, d = x.shape
+    t = bsz * seq
+    xf = x.reshape(t, d)
+    n_experts = p["router"].shape[1]
+
+    if t > TOKEN_BLOCK and t % TOKEN_BLOCK == 0:
+        nb = t // TOKEN_BLOCK
+        blocks = xf.reshape(nb, TOKEN_BLOCK, d)
+
+        def body(lb_acc, xb):
+            yb, aux_b = _moe_block(p, xb, top_k=top_k,
+                                   capacity_factor=capacity_factor)
+            return lb_acc + aux_b["lb_loss"], (yb, aux_b["dropped_frac"])
+
+        lb, (ys, dropped) = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32), blocks)
+        out = ys.reshape(bsz, seq, d)
+        return out, {"lb_loss": lb / nb,
+                     "dropped_frac": jnp.mean(dropped)}
+
+    out, aux = _moe_block(p, xf, top_k=top_k,
+                          capacity_factor=capacity_factor)
+    return out.reshape(bsz, seq, d), aux
+
+
+def _moe_block(p, xf: jnp.ndarray, *, top_k: int,
+               capacity_factor: float):
+    """One token block: (T, d) -> (T, d), aux."""
+    t, d = xf.shape
+    n_experts = p["router"].shape[1]
+
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # score of each (token, expert): gate if selected else 0
+    sel = jnp.zeros((t, n_experts), jnp.float32).at[
+        jnp.arange(t)[:, None], gate_idx].set(gate_vals)
+
+    if t <= 64:
+        # decode / tiny batches: full capacity (no drops) — a fractional
+        # capacity at T~batch_size would drop tokens nondeterministically
+        capacity = t
+    else:
+        capacity = max(1, int(capacity_factor * top_k * t / n_experts))
+        capacity = min(capacity, t)
+    # per-expert top-C tokens by gate score  -> (E, C)
+    scores_e = sel.T                                            # (E, T)
+    top_scores, top_tokens = jax.lax.top_k(scores_e, capacity)  # (E, C)
+    keep = top_scores > 0.0
+
+    from jax.sharding import PartitionSpec as P
+
+    xe_flat = jnp.take(xf, top_tokens.reshape(-1), axis=0)
+    # constrain the (E*C, d) gather BEFORE the reshape — otherwise XLA
+    # may materialize it replicated (E-major merged dim shards cleanly
+    # over ('model','data'))
+    xe_flat = _constrain_ep(xe_flat, P(("model", "data"), None),
+                            P(("model",), None))
+    xe = xe_flat.reshape(n_experts, capacity, d)
+    # expert-parallel layout: experts over 'model', capacity over the
+    # data axes (no-op when the mesh/axes are unavailable)
+    xe = _constrain_ep(xe, P("model", "data", None),
+                       P("model", None, None))
+    g = jnp.einsum("ecd,edf->ecf", xe, p["experts"]["gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["experts"]["up"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                    p["experts"]["down"])
+    ye = _constrain_ep(ye, P("model", "data", None),
+                       P("model", None, None))
+    w = (top_scores * keep).astype(ye.dtype)[..., None]         # (E, C, 1)
+    upd = _constrain_ep((ye * w).reshape(-1, d),
+                        P(("model", "data"), None),
+                        P(("model",), None))
+    out = jnp.zeros((t, d), ye.dtype).at[
+        top_tokens.reshape(-1)].add(upd)
+    # token dim = merged (batch x seq): keep the combined sharding when
+    # the batch is data-sharded and the seq dim SP-sharded over 'model'
+    out = _constrain_ep(out, P(("data", "model"), None),
+                        P("data", None))
+
+    if "shared" in p:
+        out = out + common.swiglu(xf, p["shared"]["gate"],
+                                  p["shared"]["up"],
+                                  p["shared"]["down"]).astype(out.dtype)
+
+    # load-balance auxiliaries (Switch-style)
+    me = probs.mean(0)                                          # (E,)
+    ce = (sel > 0).astype(jnp.float32).mean(0) * n_experts / top_k
+    aux = {"lb_loss": n_experts * jnp.sum(me * ce),
+           "dropped_frac": 1.0 - keep.sum() / (t * top_k)}
+    return out.astype(xf.dtype), aux

@@ -1,0 +1,197 @@
+"""Model registry: a family-uniform interface over the model zoo.
+
+Every architecture exposes:
+  * ``init(key) -> (params, logical_axes)``
+  * ``loss(params, batch, remat=False) -> (loss, metrics)``
+  * ``init_cache(batch_size, shape) -> cache``
+  * ``prefill(params, batch, cache) -> (logits, cache)``
+  * ``decode(params, token, cache) -> (logits, cache)``
+  * ``input_specs(shape) -> batch of ShapeDtypeStructs`` (dry-run)
+
+The dry-run lowers against ``jax.eval_shape`` of these — no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, transformer
+
+# enc-dec decode shapes: one decoder token, cross-attn KV over a source
+# of seq_len frames, and a modest self cache (generated audio/text side)
+ENCDEC_SELF_CACHE = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], tuple[Any, Any]]
+    loss: Callable[..., tuple[jnp.ndarray, dict]]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., tuple[jnp.ndarray, Any]]
+    decode: Callable[..., tuple[jnp.ndarray, Any]]
+    input_specs: Callable[[ShapeConfig], dict]
+
+    def cache_pspecs(self, cache_shapes, plan, mesh_axes):
+        """PartitionSpec tree for a cache pytree (path-aware: KV caches
+        shard batch/heads or seq (SP); SSM states shard batch/heads;
+        scalars replicate)."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.sharding.partition import cache_pspec
+
+        def leaf_spec(path, leaf):
+            names = [getattr(p, "name", getattr(p, "key", ""))
+                     for p in path]
+            name = names[-1] if names else ""
+            rank = len(leaf.shape)
+            if rank == 0 or name in ("length", "src_len"):
+                return P()
+            if name in ("k", "v") or name.startswith("cross"):
+                if rank == 5:    # (L, B, S, Hk, dh)
+                    return cache_pspec(leaf.shape, plan, mesh_axes,
+                                       batch_dim=1, heads_dim=3,
+                                       seq_dim=2)
+                if rank == 4:    # (B, S, Hk, dh) unstacked
+                    return cache_pspec(leaf.shape, plan, mesh_axes,
+                                       batch_dim=0, heads_dim=2,
+                                       seq_dim=1)
+            if name == "state" and rank == 5:   # (L, B, H, P, N)
+                return cache_pspec(leaf.shape, plan, mesh_axes,
+                                   batch_dim=1, heads_dim=2,
+                                   seq_dim=None)
+            if name.startswith("conv") and rank == 4:  # (L, B, K-1, C)
+                return cache_pspec(leaf.shape, plan, mesh_axes,
+                                   batch_dim=1, heads_dim=3,
+                                   seq_dim=None)
+            # fallback: shard the batch dim if identifiable
+            bdim = 1 if rank >= 3 else 0
+            return cache_pspec(leaf.shape, plan, mesh_axes,
+                               batch_dim=bdim, heads_dim=None,
+                               seq_dim=None)
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f(cfg, *shape):
+    return jax.ShapeDtypeStruct(shape, cfg.np_dtype)
+
+
+# -- decoder-only families (dense / moe / vlm) --------------------------------
+
+
+def _lm_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    nf = cfg.n_frontend
+    if shape.kind == "train":
+        specs = {"tokens": _i32(b, s - nf), "targets": _i32(b, s - nf),
+                 "mask": jax.ShapeDtypeStruct((b, s - nf), jnp.float32)}
+        if nf:
+            specs["frontend"] = _f(cfg, b, nf, cfg.d_model)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _i32(b, s - nf)}
+        if nf:
+            specs["frontend"] = _f(cfg, b, nf, cfg.d_model)
+        return specs
+    return {"token": _i32(b, 1)}     # decode
+
+
+def _lm_def(cfg: ArchConfig) -> ModelDef:
+    def loss(params, batch, remat=False):
+        return transformer.loss_fn(cfg, params, batch, remat=remat)
+
+    def init_cache(batch_size, shape: ShapeConfig):
+        return transformer.init_cache(cfg, batch_size, shape.seq_len)
+
+    def prefill(params, batch, cache):
+        return transformer.prefill(cfg, params, batch["tokens"], cache,
+                                   frontend=batch.get("frontend"))
+
+    def decode(params, token, cache):
+        return transformer.decode_step(cfg, params, token, cache)
+
+    return ModelDef(cfg, functools.partial(transformer.init_lm, cfg),
+                    loss, init_cache, prefill, decode,
+                    functools.partial(_lm_input_specs, cfg))
+
+
+# -- encoder-decoder -----------------------------------------------------------
+
+
+def _encdec_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        half = s // 2
+        return {"src_embeds": _f(cfg, b, half, cfg.d_model),
+                "tokens": _i32(b, half), "targets": _i32(b, half),
+                "mask": jax.ShapeDtypeStruct((b, half), jnp.float32)}
+    if shape.kind == "prefill":
+        return {"src_embeds": _f(cfg, b, s, cfg.d_model),
+                "bos": _i32(b, 1)}
+    return {"token": _i32(b, 1)}
+
+
+def _encdec_def(cfg: ArchConfig) -> ModelDef:
+    def loss(params, batch, remat=False):
+        return encdec.loss_fn(cfg, params, batch, remat=remat)
+
+    def init_cache(batch_size, shape: ShapeConfig):
+        src = shape.seq_len if shape.kind != "train" else \
+            shape.seq_len // 2
+        return encdec.init_cache(cfg, batch_size,
+                                 min(ENCDEC_SELF_CACHE, shape.seq_len),
+                                 src)
+
+    def prefill(params, batch, cache):
+        return encdec.prefill(cfg, params, batch["src_embeds"],
+                              batch["bos"], cache)
+
+    def decode(params, token, cache):
+        return encdec.decode_step(cfg, params, token, cache)
+
+    return ModelDef(cfg, functools.partial(encdec.init_encdec, cfg),
+                    loss, init_cache, prefill, decode,
+                    functools.partial(_encdec_input_specs, cfg))
+
+
+# -- ssm / hybrid --------------------------------------------------------------
+
+
+def _hybrid_def(cfg: ArchConfig) -> ModelDef:
+    def loss(params, batch, remat=False):
+        return hybrid.loss_fn(cfg, params, batch, remat=remat)
+
+    def init_cache(batch_size, shape: ShapeConfig):
+        # attention cache bounded by the window for SWA-style reuse;
+        # hybrid shared-attn caches hold the full context
+        return hybrid.init_cache(cfg, batch_size, shape.seq_len)
+
+    def prefill(params, batch, cache):
+        return hybrid.prefill(cfg, params, batch["tokens"], cache)
+
+    def decode(params, token, cache):
+        return hybrid.decode_step(cfg, params, token, cache)
+
+    return ModelDef(cfg, functools.partial(hybrid.init_hybrid, cfg),
+                    loss, init_cache, prefill, decode,
+                    functools.partial(_lm_input_specs, cfg))
+
+
+def get_model(cfg: ArchConfig) -> ModelDef:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _lm_def(cfg)
+    if cfg.family == "encdec":
+        return _encdec_def(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        return _hybrid_def(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,244 @@
+"""Mamba2 — State Space Duality (SSD), arXiv:2405.21060.
+
+Chunked SSD: the sequence is split into chunks of Q tokens; intra-chunk
+interactions are computed as masked matmuls (the "attention-like" dual
+form, MXU-friendly), inter-chunk via a lax.scan state recurrence —
+O(L*Q + L*N*P) instead of O(L^2), which is what qualifies the SSM and
+hybrid archs for the ``long_500k`` shape.
+
+Projections are split per stream (z, x, B, C, dt) instead of one fused
+in_proj so each output dim gets a clean sharding axis (x/z over 'ff').
+
+Decode keeps a recurrent state (B, H, P, N) + a causal-conv ring of the
+last K-1 inputs — O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_kernel: int = 4
+    expand: int = 2
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+class SSMState(NamedTuple):
+    state: jnp.ndarray       # (B, H, P, N) fp32
+    conv_x: jnp.ndarray      # (B, K-1, d_inner)
+    conv_b: jnp.ndarray      # (B, K-1, G*N)
+    conv_c: jnp.ndarray      # (B, K-1, G*N)
+
+
+def init_mamba2(b: common.ParamBuilder, prefix: str, cfg: SSMConfig):
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    gn = cfg.n_groups * cfg.d_state
+    b.add(f"{prefix}/in_z", (d, di), ("embed", "ff"))
+    b.add(f"{prefix}/in_x", (d, di), ("embed", "ff"))
+    b.add(f"{prefix}/in_b", (d, gn), ("embed", None))
+    b.add(f"{prefix}/in_c", (d, gn), ("embed", None))
+    b.add(f"{prefix}/in_dt", (d, h), ("embed", None))
+    b.add(f"{prefix}/conv_x", (cfg.conv_kernel, di), (None, "ff"),
+          scale=cfg.conv_kernel ** -0.5)
+    b.add(f"{prefix}/conv_b", (cfg.conv_kernel, gn), (None, None),
+          scale=cfg.conv_kernel ** -0.5)
+    b.add(f"{prefix}/conv_c", (cfg.conv_kernel, gn), (None, None),
+          scale=cfg.conv_kernel ** -0.5)
+    b.add(f"{prefix}/a_log", (h,), (None,), init="zeros")
+    b.add(f"{prefix}/dt_bias", (h,), (None,), init="zeros")
+    b.add(f"{prefix}/d_skip", (h,), (None,), init="ones")
+    b.add(f"{prefix}/norm", (di,), ("ff",), init="ones")
+    b.add(f"{prefix}/out", (di, d), ("ff", "embed"), scale=di ** -0.5)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 history: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv1d. x: (B, L, C), w: (K, C).
+    ``history``: (B, K-1, C) left context (decode / continuation)."""
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def _segsum(dta: jnp.ndarray) -> jnp.ndarray:
+    """(..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<k<=i} dta_k (i>=j),
+    -inf above the diagonal."""
+    q = dta.shape[-1]
+    cs = jnp.cumsum(dta, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, cfg: SSMConfig,
+                init_state: jnp.ndarray | None = None):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus); a: (H,) negative;
+    bmat/cmat: (B, L, G, N). Returns (y (B,L,H,P), final_state).
+    """
+    bsz, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    q = min(cfg.chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    hpg = h // g
+    xc = x.reshape(bsz, nc, q, g, hpg, p)
+    dtc = dt.reshape(bsz, nc, q, g, hpg)
+    bc = bmat.reshape(bsz, nc, q, g, n)
+    cc = cmat.reshape(bsz, nc, q, g, n)
+    dta = dtc * a.reshape(g, hpg)                       # (b,c,q,g,hpg)
+    xdt = xc * dtc[..., None]
+
+    # intra-chunk (dual "attention" form)
+    lmat = jnp.exp(_segsum(jnp.moveaxis(dta, 2, -1)))   # (b,c,g,hpg,q,q)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", cc, bc)
+    y_diag = jnp.einsum("bcgqk,bcghqk,bckghp->bcqghp",
+                        scores, lmat, xdt)
+
+    # per-chunk boundary states
+    cum = jnp.cumsum(dta, axis=2)                       # (b,c,q,g,hpg)
+    total = cum[:, :, -1:]                              # (b,c,1,g,hpg)
+    decay_to_end = jnp.exp(total - cum)                 # (b,c,q,g,hpg)
+    chunk_states = jnp.einsum("bckgn,bckgh,bckghp->bcghpn",
+                              bc, decay_to_end, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(total[:, :, 0])               # (b,c,g,hpg)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, g, hpg, p, n), jnp.float32)
+    else:
+        init_state = init_state.reshape(bsz, g, hpg, p, n)
+
+    def step(s, inp):
+        cs, dec = inp
+        s_new = s * dec[..., None, None] + cs
+        return s_new, s  # emit the state *entering* this chunk
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, init_state.astype(jnp.float32),
+        (jnp.moveaxis(chunk_states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (b,c,g,hpg,p,n)
+
+    y_off = jnp.einsum("bcqgn,bcghpn,bcqgh->bcqghp",
+                       cc, prev_states.astype(cc.dtype),
+                       jnp.exp(cum).astype(cc.dtype))
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)[:, :l]
+    return y, final_state.reshape(bsz, h, p, n)
+
+
+def apply_mamba2(p, x: jnp.ndarray, cfg: SSMConfig,
+                 state: SSMState | None = None,
+                 return_state: bool = False):
+    """Full Mamba2 block. x: (B, L, d_model)."""
+    bsz, l, _ = x.shape
+    h, pd, g, n = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    z = jnp.einsum("bld,df->blf", x, p["in_z"])
+    xs = jnp.einsum("bld,df->blf", x, p["in_x"])
+    bs = jnp.einsum("bld,df->blf", x, p["in_b"])
+    cs = jnp.einsum("bld,df->blf", x, p["in_c"])
+    dt = jnp.einsum("bld,dh->blh", x, p["in_dt"])
+
+    hist = (state.conv_x, state.conv_b, state.conv_c) if state else (
+        None, None, None)
+    xs_in, bs_in, cs_in = xs, bs, cs
+    xs = _causal_conv(xs, p["conv_x"], hist[0])
+    bs = _causal_conv(bs, p["conv_b"], hist[1])
+    cs = _causal_conv(cs, p["conv_c"], hist[2])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(bsz, l, h, pd)
+    y, final = ssd_chunked(
+        xh.astype(jnp.float32), dt, a,
+        bs.reshape(bsz, l, g, n).astype(jnp.float32),
+        cs.reshape(bsz, l, g, n).astype(jnp.float32), cfg,
+        init_state=state.state if state else None)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].reshape(1, 1, h, 1)
+    y = y.reshape(bsz, l, cfg.d_inner).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("blf,fd->bld", y, p["out"])
+    if not return_state:
+        return out, None
+    k = cfg.conv_kernel
+
+    def tail(seq, old):
+        if l >= k - 1:
+            return seq[:, l - (k - 1):]
+        keep = old[:, l:] if old is not None else jnp.zeros(
+            (bsz, k - 1 - l, seq.shape[-1]), seq.dtype)
+        return jnp.concatenate([keep.astype(seq.dtype), seq], axis=1)
+
+    new_state = SSMState(final,
+                         tail(xs_in, hist[0] if state else None),
+                         tail(bs_in, hist[1] if state else None),
+                         tail(cs_in, hist[2] if state else None))
+    return out, new_state
+
+
+def decode_mamba2(p, x: jnp.ndarray, cfg: SSMConfig, state: SSMState):
+    """One-token recurrent step. x: (B, 1, d_model)."""
+    bsz = x.shape[0]
+    h, pd, g, n = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    z = jnp.einsum("bld,df->blf", x, p["in_z"])
+    xs = jnp.einsum("bld,df->blf", x, p["in_x"])
+    bs = jnp.einsum("bld,df->blf", x, p["in_b"])
+    cs = jnp.einsum("bld,df->blf", x, p["in_c"])
+    dt = jnp.einsum("bld,dh->blh", x, p["in_dt"])
+
+    new_conv = (jnp.concatenate([state.conv_x[:, 1:], xs.astype(
+                    state.conv_x.dtype)], axis=1),
+                jnp.concatenate([state.conv_b[:, 1:], bs.astype(
+                    state.conv_b.dtype)], axis=1),
+                jnp.concatenate([state.conv_c[:, 1:], cs.astype(
+                    state.conv_c.dtype)], axis=1))
+    xs = _causal_conv(xs, p["conv_x"], state.conv_x)[:, -1:]
+    bs = _causal_conv(bs, p["conv_b"], state.conv_b)[:, -1:]
+    cs = _causal_conv(cs, p["conv_c"], state.conv_c)[:, -1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                           # (B,H)
+    xh = xs.reshape(bsz, h, pd).astype(jnp.float32)
+    hpg = h // g
+    bh = jnp.repeat(bs.reshape(bsz, g, n), hpg, axis=1)            # (B,H,N)
+    ch = jnp.repeat(cs.reshape(bsz, g, n), hpg, axis=1)
+    xdt = xh * dt[..., None]
+    s_new = (state.state * da[..., None, None]
+             + xdt[..., :, None] * bh[:, :, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", s_new, ch.astype(jnp.float32))
+    y = y + xh * p["d_skip"].reshape(1, h, 1)
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("blf,fd->bld", y, p["out"])
+    return out, SSMState(s_new, *new_conv)

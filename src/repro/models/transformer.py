@@ -1,0 +1,291 @@
+"""Decoder-only transformer LM (Llama-3-like, the paper's own family):
+RMSNorm pre-norm blocks, GQA attention with RoPE, SwiGLU or MoE FFN,
+optional sliding-window attention and multimodal prefix embeddings.
+
+Layers are *stacked* (leading 'layers' dim) and applied with lax.scan —
+essential to keep XLA compile time sane at 512 devices x 40+ layers.
+Optional leading dense layers (DeepSeek-MoE's first-layer-dense) are
+kept unstacked.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, moe
+from repro.models.common import ParamBuilder
+from repro.sharding.act_hints import hint_residual
+
+
+def _head_dim(cfg) -> int:
+    return cfg.head_dim or cfg.d_model // cfg.n_heads
+
+
+def init_layer(cfg, key, is_moe: bool):
+    b = ParamBuilder(key, dtype=cfg.np_dtype)
+    d, hd = cfg.d_model, _head_dim(cfg)
+    b.add("ln_attn", (d,), ("embed",), init="ones")
+    b.add("wq", (d, cfg.n_heads * hd), ("embed", "heads"))
+    b.add("wk", (d, cfg.n_kv_heads * hd), ("embed", "heads"))
+    b.add("wv", (d, cfg.n_kv_heads * hd), ("embed", "heads"))
+    b.add("wo", (cfg.n_heads * hd, d), ("heads", "embed"),
+          scale=(cfg.n_heads * hd) ** -0.5)
+    b.add("ln_mlp", (d,), ("embed",), init="ones")
+    if is_moe:
+        moe.init_moe(b, "moe", d, cfg.moe.d_expert, cfg.moe.n_experts,
+                     cfg.moe.n_shared)
+    else:
+        b.add("mlp/gate", (d, cfg.d_ff), ("embed", "ff"))
+        b.add("mlp/up", (d, cfg.d_ff), ("embed", "ff"))
+        b.add("mlp/down", (cfg.d_ff, d), ("ff", "embed"),
+              scale=cfg.d_ff ** -0.5)
+    return b.params, b.axes
+
+
+def init_lm(cfg, key):
+    """Returns (params, logical_axes)."""
+    ke, kl, kh, kp = jax.random.split(key, 4)
+    b = ParamBuilder(ke, dtype=cfg.np_dtype)
+    b.add("embed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+          scale=0.02)
+    b.add("ln_f", (cfg.d_model,), ("embed",), init="ones")
+    if not cfg.tie_embeddings:
+        b.add("lm_head", (cfg.d_model, cfg.padded_vocab),
+              ("embed", "vocab"))
+    params, axes = b.params, b.axes
+
+    n_dense_prefix = cfg.moe.first_dense if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense_prefix
+    keys = jax.random.split(kl, n_scan)
+    layer_p = jax.vmap(
+        lambda k: init_layer(cfg, k, is_moe=cfg.moe is not None)[0])(keys)
+    _, layer_axes = common.eval_axes(
+        lambda k: init_layer(cfg, k, is_moe=cfg.moe is not None), kh)
+    params["layers"] = layer_p
+    axes["layers"] = common.stack_layer_axes(layer_axes)
+    if n_dense_prefix:
+        pk = jax.random.split(kp, n_dense_prefix)
+        for i in range(n_dense_prefix):
+            pp, pa = init_layer(cfg, pk[i], is_moe=False)
+            params[f"dense{i}"] = pp
+            axes[f"dense{i}"] = pa
+    return params, axes
+
+
+# -- forward ------------------------------------------------------------------
+
+
+def _attn_block(cfg, p, x, *, positions, layer_cache=None,
+                cache_update_rolling=False, window, return_kv=False):
+    """Self-attention sublayer. Returns (out, new_cache_or_kv)."""
+    hd = _head_dim(cfg)
+    h = common.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    b, s, _ = h.shape
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"]).reshape(
+        b, s, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"]).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"]).reshape(
+        b, s, cfg.n_kv_heads, hd)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    if layer_cache is not None and s == 1:      # decode
+        cache = attn.cache_update(layer_cache, k, v,
+                                  rolling=cache_update_rolling)
+        o = attn.decode_attention(q, cache, window=window)
+        new = cache
+    else:                                        # train / prefill
+        o = attn.attention(q, k, v, causal=True, window=window,
+                           block_q=cfg.block_q)
+        new = (k, v) if return_kv else None
+    o = o.reshape(b, s, cfg.n_heads * hd)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), new
+
+
+def _ffn_block(cfg, p, x, is_moe: bool):
+    h = common.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if is_moe:
+        out, aux = moe.apply_moe(p["moe"], h, top_k=cfg.moe.top_k,
+                                 capacity_factor=cfg.moe.capacity_factor)
+        return out, aux
+    return common.swiglu(h, p["mlp"]["gate"], p["mlp"]["up"],
+                         p["mlp"]["down"]), {}
+
+
+def _layer(cfg, p, x, *, positions, is_moe, layer_cache=None,
+           rolling=False, return_kv=False):
+    x = hint_residual(x)
+    a, new_cache = _attn_block(
+        cfg, p, x, positions=positions, layer_cache=layer_cache,
+        cache_update_rolling=rolling, window=cfg.sliding_window,
+        return_kv=return_kv)
+    x = hint_residual(x + a)
+    f, aux = _ffn_block(cfg, p, x, is_moe)
+    return hint_residual(x + f), new_cache, aux
+
+
+def forward(cfg, params, tokens, *, frontend=None, positions=None,
+            remat: bool = False):
+    """Training/scoring forward -> (logits, aux).
+
+    ``frontend``: optional (B, F, d_model) stub embeddings (VLM/audio)
+    prepended to the token embeddings."""
+    x = common.embedding_lookup(params["embed"], tokens)
+    if frontend is not None:
+        x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    is_moe = cfg.moe is not None
+
+    def dense_block(p, x):
+        y, _, aux = _layer(cfg, p, x, positions=positions, is_moe=False)
+        return y, aux
+
+    def scan_block(p, x):
+        y, _, aux = _layer(cfg, p, x, positions=positions, is_moe=is_moe)
+        return y, aux
+
+    if remat:
+        dense_block = jax.checkpoint(dense_block)
+        scan_block = jax.checkpoint(scan_block)
+
+    aux_acc = {}
+    n_dense_prefix = cfg.moe.first_dense if is_moe else 0
+    for i in range(n_dense_prefix):
+        x, _ = dense_block(params[f"dense{i}"], x)
+
+    def body(x, p):
+        y, aux = scan_block(p, x)
+        return y, aux.get("lb_loss", jnp.zeros((), jnp.float32))
+
+    x, lb = jax.lax.scan(body, x, params["layers"])
+    aux_acc["lb_loss"] = jnp.sum(lb)
+
+    x = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, aux_acc
+
+
+def loss_fn(cfg, params, batch, *, remat: bool = False):
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          frontend=batch.get("frontend"), remat=remat)
+    n_front = 0 if batch.get("frontend") is None \
+        else batch["frontend"].shape[1]
+    logits = logits[:, n_front:]
+    loss, metrics = common.cross_entropy_max_z(
+        logits, batch["targets"], batch.get("mask"),
+        z_weight=cfg.max_z_weight)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.lb_weight * aux["lb_loss"]
+        metrics["lb_loss"] = aux["lb_loss"]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    """Stacked per-layer KV cache (+ unstacked dense-prefix caches)."""
+    hd = _head_dim(cfg)
+    s_max = min(max_len, cfg.sliding_window) if cfg.sliding_window \
+        else max_len
+    n_dense_prefix = cfg.moe.first_dense if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense_prefix
+
+    def one(_):
+        return attn.KVCache.init(batch_size, s_max, cfg.n_kv_heads, hd,
+                                 dtype=cfg.np_dtype)
+
+    scan_cache = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one(i) for i in range(n_scan)]) \
+        if n_scan else None
+    prefix = [one(i) for i in range(n_dense_prefix)]
+    return {"scan": scan_cache, "prefix": prefix}
+
+
+def prefill(cfg, params, tokens, cache, *, frontend=None):
+    """Run the full prompt, fill the cache -> (last-token logits, cache)."""
+    x = common.embedding_lookup(params["embed"], tokens)
+    if frontend is not None:
+        x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    is_moe = cfg.moe is not None
+    rolling = cfg.sliding_window is not None
+    s_max = cache["scan"].k.shape[2] if cache["scan"] is not None else 0
+
+    def write(cache_layer, kv):
+        k, v = kv
+        if rolling and s > s_max:
+            k, v = k[:, -s_max:], v[:, -s_max:]
+            cache_layer = cache_layer._replace(
+                length=cache_layer.length + (s - s_max))
+        return attn.cache_update(cache_layer, k, v)
+
+    n_dense_prefix = cfg.moe.first_dense if is_moe else 0
+    new_prefix = []
+    for i in range(n_dense_prefix):
+        x, kv, _ = _layer(cfg, params[f"dense{i}"], x,
+                          positions=positions, is_moe=False,
+                          return_kv=True)
+        new_prefix.append(write(cache["prefix"][i], kv))
+
+    def body(x, pc):
+        p, c = pc
+        y, kv, _ = _layer(cfg, p, x, positions=positions, is_moe=is_moe,
+                          return_kv=True)
+        return y, write(c, kv)
+
+    x, new_scan = jax.lax.scan(body, x, (params["layers"],
+                                         cache["scan"]))
+    x = common.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, {"scan": new_scan, "prefix": new_prefix}
+
+
+def decode_step(cfg, params, token, cache):
+    """One decode step. token: (B, 1) -> (logits (B, V), cache)."""
+    x = common.embedding_lookup(params["embed"], token)
+    b = x.shape[0]
+    is_moe = cfg.moe is not None
+    rolling = cfg.sliding_window is not None
+    length = (cache["scan"].length[0] if cache["scan"] is not None
+              else cache["prefix"][0].length)
+    positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(
+        jnp.int32)
+
+    n_dense_prefix = cfg.moe.first_dense if is_moe else 0
+    new_prefix = []
+    for i in range(n_dense_prefix):
+        x2, c, _ = _layer(cfg, params[f"dense{i}"], x,
+                          positions=positions, is_moe=False,
+                          layer_cache=cache["prefix"][i], rolling=rolling)
+        x = x2
+        new_prefix.append(c)
+
+    def body(x, pc):
+        p, c = pc
+        y, new_c, _ = _layer(cfg, p, x, positions=positions,
+                             is_moe=is_moe, layer_cache=c,
+                             rolling=rolling)
+        return y, new_c
+
+    x, new_scan = jax.lax.scan(body, x, (params["layers"],
+                                         cache["scan"]))
+    x = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, {"scan": new_scan, "prefix": new_prefix}

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.nesterov import NesterovSGD, NesterovState
+from repro.optim import schedules
+
+__all__ = ["AdamW", "AdamWState", "NesterovSGD", "NesterovState",
+           "schedules"]

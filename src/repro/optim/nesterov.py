@@ -1,0 +1,43 @@
+"""Nesterov-momentum SGD — the DiLoCo *outer* optimizer (paper: outer lr
+0.7, momentum 0.9). Operates on averaged pseudo-gradients
+``delta = anchor - theta_i`` (Alg. 1 lines 10-12)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NesterovState(NamedTuple):
+    momentum: Any  # fp32 pytree, same structure as params
+
+
+@dataclasses.dataclass(frozen=True)
+class NesterovSGD:
+    lr: float = 0.7
+    momentum: float = 0.9
+
+    def init(self, params) -> NesterovState:
+        return NesterovState(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(self, delta, state: NesterovState, params):
+        """theta <- theta - lr * (mu * m_new + delta)  (Nesterov form),
+        where m_new = mu * m + delta and delta is the averaged
+        pseudo-gradient (already points from theta toward the anchor)."""
+        mu = self.momentum
+
+        def upd(d, m, p):
+            d = d.astype(jnp.float32)
+            m_new = mu * m + d
+            step = mu * m_new + d  # Nesterov look-ahead
+            new_p = p.astype(jnp.float32) - self.lr * step
+            return new_p.astype(p.dtype), m_new
+
+        out = jax.tree.map(upd, delta, state.momentum, params)
+        is_pair = lambda t: isinstance(t, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+        return new_params, NesterovState(new_m)

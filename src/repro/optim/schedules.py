@@ -1,0 +1,34 @@
+"""Learning-rate schedules. The paper (and MiniCPM, one of the assigned
+archs) uses WSD — Warmup / Stable / Decay (Hägele et al., 2024): constant
+lr after warmup, cool-down during the final fraction of training.
+INTELLECT-1: 1000 warmup steps, anneal over the last 20%."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(peak_lr: float, warmup_steps: int, total_steps: int,
+        decay_fraction: float = 0.2, final_ratio: float = 0.0,
+        decay_shape: str = "one_minus_sqrt"):
+    """Warmup-Stable-Decay schedule: step -> lr."""
+    decay_steps = max(1, int(total_steps * decay_fraction))
+    decay_start = total_steps - decay_steps
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(1, warmup_steps), 1.0)
+        frac = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        if decay_shape == "linear":
+            mult = 1.0 - (1.0 - final_ratio) * frac
+        elif decay_shape == "cosine":
+            mult = final_ratio + (1 - final_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac))
+        else:  # "one_minus_sqrt" (Hägele et al. recommended)
+            mult = 1.0 - (1.0 - final_ratio) * jnp.sqrt(frac)
+        return warm * jnp.where(step >= decay_start, mult, 1.0)
+
+    return schedule
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)

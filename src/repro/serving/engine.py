@@ -1,0 +1,113 @@
+"""Batched serving engine over the model zoo's prefill/decode steps.
+
+Wave-scheduled static batching: when all slots are free, up to
+``batch_slots`` queued requests are admitted together — prompts are
+padded to a common length and prefilled in one batched call — then the
+wave decodes in lockstep, one token per engine step, retiring requests
+on EOS/max-tokens and finishing when the whole wave is done. (The KV/SSM
+cache tracks a single sequence length per layer, so admission happens at
+wave boundaries; per-slot continuous batching would need per-slot length
+bookkeeping — noted as future work.)
+
+Serving is not a PRIME contribution — the paper trains — but the
+assigned decode/long shapes require a real serve_step; this engine is
+the production wrapper around it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, batch_slots: int = 4,
+                 max_len: int = 512, eos_id: int = 1,
+                 pad_id: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * batch_slots
+        self.cache = None
+        self.tokens = None
+        self.remaining = np.zeros((batch_slots,), np.int64)
+        self._decode = jax.jit(lambda p, t, c: model.decode(p, t, c))
+        self._prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
+        self.stats = {"waves": 0, "decode_steps": 0, "tokens_out": 0}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit_wave(self) -> bool:
+        if not self.queue:
+            return False
+        wave: list[Request] = []
+        while self.queue and len(wave) < self.slots:
+            wave.append(self.queue.popleft())
+        # left-pad prompts to a common length (causal => pads attend
+        # nothing useful but are masked out of the loss-free decode)
+        plen = max(len(w.prompt) for w in wave)
+        tokens = np.full((self.slots, plen), self.pad_id, np.int32)
+        for i, w in enumerate(wave):
+            tokens[i, plen - len(w.prompt):] = w.prompt
+        shape = ShapeConfig("serve", "decode", self.max_len, self.slots)
+        self.cache = self.model.init_cache(self.slots, shape)
+        logits, self.cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(tokens)}, self.cache)
+        first = jnp.argmax(logits, axis=-1)
+        self.tokens = first[:, None].astype(jnp.int32)
+        for i in range(self.slots):
+            if i < len(wave):
+                self.active[i] = wave[i]
+                wave[i].out_tokens.append(int(first[i]))
+                self.remaining[i] = wave[i].max_new_tokens - 1
+            else:
+                self.active[i] = None
+                self.remaining[i] = 0
+        self.stats["waves"] += 1
+        return True
+
+    def step(self) -> int:
+        """One engine iteration; returns number of active slots."""
+        if not any(r is not None for r in self.active):
+            if not self._admit_wave():
+                return 0
+        logits, self.cache = self._decode(self.params, self.tokens,
+                                          self.cache)
+        next_tok = jnp.argmax(logits, axis=-1)
+        self.stats["decode_steps"] += 1
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(next_tok[slot])
+            req.out_tokens.append(tok)
+            self.stats["tokens_out"] += 1
+            self.remaining[slot] -= 1
+            if tok == self.eos_id or self.remaining[slot] <= 0:
+                req.done = True
+                self.active[slot] = None
+        self.tokens = next_tok[:, None].astype(jnp.int32)
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                return

@@ -1,0 +1,7 @@
+from repro.sharding.partition import (batch_pspec, cache_pspec,
+                                      param_pspec, param_pspecs,
+                                      to_named, with_leading)
+from repro.sharding.plans import ParallelismPlan, make_plan
+
+__all__ = ["ParallelismPlan", "make_plan", "param_pspec", "param_pspecs",
+           "batch_pspec", "cache_pspec", "with_leading", "to_named"]

@@ -1,0 +1,45 @@
+"""Activation-sharding hints.
+
+Model code is mesh-agnostic; the step builder knows the plan. This
+module bridges them: the builder activates a hint spec for the duration
+of tracing and models call ``hint_residual`` on their (B, S, D) residual
+stream at block boundaries. The canonical use is sequence parallelism on
+multi-pod training where the per-pod batch (128) cannot cover
+data x model (256): batch shards over 'data', the sequence dim over
+'model', which divides the attention score tiles and their FLOPs by the
+model-axis size.
+
+No-ops outside a mesh context or when no hint is active (CPU trainer,
+shard_map regions where the axis is manual).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_SPEC = None
+
+
+@contextlib.contextmanager
+def activation_hints(spec):
+    """Activate ``spec`` (a PartitionSpec for (B, S, D) activations)
+    while tracing a step function."""
+    global _SPEC
+    prev = _SPEC
+    _SPEC = spec
+    try:
+        yield
+    finally:
+        _SPEC = prev
+
+
+def hint_residual(x):
+    """Constrain a (B, S, D) activation to the active hint (no-op when
+    unset/invalid in the current tracing context)."""
+    if _SPEC is None or x.ndim != 3:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, _SPEC)
+    except Exception:
+        return x

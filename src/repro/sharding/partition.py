@@ -1,0 +1,118 @@
+"""Logical axes -> PartitionSpecs.
+
+Every param's logical axis tuple (from the model's ParamBuilder) is
+mapped through the plan's rules with conflict resolution: a mesh axis is
+used at most once per param (first logical axis wins) and a dim is only
+sharded when the mesh axis divides it (no padded shards on the memory-
+critical parameters)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.plans import ParallelismPlan
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def param_pspec(axes: tuple, shape: tuple, plan: ParallelismPlan,
+                mesh_axes: dict[str, int]) -> P:
+    rules = plan.rules_dict()
+    used: set[str] = set()
+    out = []
+    for logical, dim in zip(axes, shape):
+        rule = rules.get(logical)
+        # rule: None | 'axis' | ('a','b') combined | ['pref1', 'pref2']
+        prefs = rule if isinstance(rule, list) else [rule]
+        chosen = None
+        for cand in prefs:
+            if cand is None:
+                continue
+            parts = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(p in used or p not in mesh_axes for p in parts):
+                continue
+            size = 1
+            for p in parts:
+                size *= mesh_axes[p]
+            if dim % size == 0:
+                chosen = cand if isinstance(cand, str) else parts
+                used.update(parts)
+                break
+        out.append(chosen)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_pspecs(axes_tree: Any, shapes_tree: Any,
+                 plan: ParallelismPlan, mesh_axes: dict[str, int]) -> Any:
+    return jax.tree.map(
+        lambda a, s: param_pspec(a, s.shape, plan, mesh_axes),
+        axes_tree, shapes_tree, is_leaf=_is_axes)
+
+
+def with_leading(pspec_tree: Any, axis: str | None) -> Any:
+    """Prepend the DiLoCo worker axis to every spec (stacked state)."""
+    if axis is None:
+        return pspec_tree
+    return jax.tree.map(lambda s: P(axis, *s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(plan: ParallelismPlan,
+                batch_size: int | None = None,
+                mesh_axes: dict[str, int] | None = None) -> P:
+    """Batch-leading activation/input sharding (dim 0 over batch axes).
+    When ``batch_size`` is given, axes are dropped (outermost first)
+    until the product divides it — argument shardings must divide."""
+    ax = list(plan.batch_axes)
+    if batch_size is not None and mesh_axes is not None:
+        while ax:
+            prod = 1
+            for a in ax:
+                prod *= mesh_axes[a]
+            if batch_size % prod == 0 and batch_size >= prod:
+                break
+            ax.pop()
+    if not ax:
+        return P()
+    lead = ax[0] if len(ax) == 1 else tuple(ax)
+    return P(lead)
+
+
+def cache_pspec(shape: tuple, plan: ParallelismPlan,
+                mesh_axes: dict[str, int], *, batch_dim: int,
+                heads_dim: int | None, seq_dim: int | None) -> P:
+    """KV/SSM cache sharding: batch over data axes; heads over 'model'
+    when divisible; else SP over the sequence dim for long contexts."""
+    out: list = [None] * len(shape)
+    bsz = shape[batch_dim]
+    ax = plan.batch_axes
+    if ax:
+        n = 1
+        for a in ax:
+            n *= mesh_axes[a]
+        if bsz % n == 0 and bsz >= n:
+            out[batch_dim] = ax[0] if len(ax) == 1 else ax
+    model = mesh_axes.get("model")
+    if model:
+        if (heads_dim is not None
+                and shape[heads_dim] % model == 0):
+            out[heads_dim] = "model"
+        elif (plan.seq_axis and seq_dim is not None
+              and shape[seq_dim] % model == 0):
+            out[seq_dim] = plan.seq_axis
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def to_named(tree: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,198 @@
+"""ElasticTrainer: the full PRIME training loop.
+
+Per outer step t (paper Alg. 1 + §2.4):
+  1. ``ClusterSimulator.begin_outer_step`` applies membership events
+     (join / graceful leave / crash / straggler) — heartbeat sweep
+     evicts silent nodes; joiners are admitted at this boundary and
+     P2P-fetch the latest checkpoint (blocking or non-blocking mode);
+  2. every live worker runs H inner AdamW steps on its data shard;
+  3. the bandwidth monitor re-solves the max-min ring order if links
+     drifted (a changed order recompiles the sync step — same cost the
+     paper pays re-rendezvousing process groups);
+  4. the int8 ring all-reduce averages pseudo-gradients over live
+     workers (weight 0 for joiners/stragglers) with the RetryPolicy
+     excluding workers that die mid-collective;
+  5. the shared Nesterov outer step updates the anchor; all workers
+     reset to it; async checkpoint.
+
+This class runs the *stacked single-process simulation* (k workers on
+one device) so the complete protocol is testable on CPU; the
+distributed path shares every component (see train/step.py builders +
+launch/train.py) and the two are bit-equivalence-tested in
+tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diloco as dl
+from repro.core import topology
+from repro.core.elastic_mesh import SlotAssignment
+from repro.core.fault_tolerance import ClusterSimulator, RetryPolicy
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.optim.adamw import AdamW
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    diloco: dl.DiLoCoConfig
+    inner_lr: float | Callable = 7.5e-5
+    ckpt_dir: str | None = None
+    ckpt_every_outer: int = 1
+    max_workers: int = 16
+    blocking_join: bool = True     # paper used blocking in production
+    seconds_per_outer_step: float = 60.0
+
+
+class ElasticTrainer:
+    def __init__(self, model, cfg: TrainerConfig, data_cfg: DataConfig,
+                 init_params, sim: ClusterSimulator):
+        self.model = model
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.sim = sim
+        self.optimizer = AdamW(lr=cfg.inner_lr)
+        self.retry = RetryPolicy()
+        live = sim.hb.live_ids()
+        self.slots = SlotAssignment(cfg.max_workers)
+        for nid in live:
+            self.slots.assign(nid)
+        k = cfg.max_workers
+        self.k = k
+        # stacked worker state (slot-major)
+        stack = lambda t: jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), t)
+        self.params = stack(init_params)
+        self.opt_state = jax.vmap(self.optimizer.init)(self.params)
+        self.outer = dl.init_outer_state_sim(init_params, cfg.diloco, k)
+        self.bw = topology.BandwidthMonitor(k)
+        self.ring_order = tuple(range(k))
+        self.inner_step_jit = jax.jit(self._inner_step)
+        self.history: list[dict] = []
+        self._pipelines = {}
+
+    # -- inner phase ----------------------------------------------------------
+
+    def _inner_step(self, params, opt_state, batch, active):
+        """One vmapped inner step; inactive slots are frozen."""
+        def one(p, o, b):
+            (_, metrics), g = jax.value_and_grad(
+                self.model.loss, has_aux=True)(p, b)
+            new_p, new_o = self.optimizer.update(g, o, p)
+            return new_p, new_o, metrics
+
+        new_p, new_o, metrics = jax.vmap(one)(params, opt_state, batch)
+        keep = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(
+                active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            new, old)
+        return keep(new_p, params), keep(new_o, opt_state), metrics
+
+    def _pipeline(self, slot: int) -> TokenPipeline:
+        if slot not in self._pipelines:
+            self._pipelines[slot] = TokenPipeline(
+                self.data_cfg, slot, self.k)
+        return self._pipelines[slot]
+
+    def _batches(self, step: int):
+        bs = [self._pipeline(s).batch_at(step) for s in range(self.k)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+
+    # -- outer loop -----------------------------------------------------------
+
+    def run(self, n_outer_steps: int, *, inner_steps: int | None = None,
+            bandwidth_sampler=None) -> list[dict]:
+        h = inner_steps or self.cfg.diloco.inner_steps
+        global_step = int(self.outer.outer_step) * h
+        for t in range(n_outer_steps):
+            plan = self.sim.begin_outer_step(t)
+            live_slots = self._sync_membership(plan)
+            active = jnp.asarray(
+                self.slots.live_mask(plan["live"]), jnp.float32)
+
+            losses = []
+            for i in range(h):
+                batch = self._batches(global_step + i)
+                self.params, self.opt_state, m = self.inner_step_jit(
+                    self.params, self.opt_state, batch, active)
+                losses.append(m["loss"])
+            global_step += h
+
+            # bandwidth-aware ring re-ordering (paper §2.5)
+            if bandwidth_sampler is not None:
+                self.bw.observe_matrix(bandwidth_sampler(t))
+                changed, order = self.bw.maybe_reorder()
+                if changed:
+                    self.ring_order = order
+
+            # elastic weighted sync with mid-collective retry
+            weights = self.slots.live_mask(
+                plan["live"],
+                zero_weight_ids=plan["joined"] + plan["stragglers"])
+
+            def attempt(live_set):
+                w = np.array(weights)
+                for nid, slot in self.slots.slot_of.items():
+                    if nid not in live_set:
+                        w[slot] = 0.0
+                return self._outer_sync(jnp.asarray(w))
+
+            (self.params, self.outer), _, attempts = \
+                self.retry.run_collective(attempt, plan["live"])
+
+            mean_loss = float(jnp.stack(losses)[-1][
+                jnp.asarray(weights) > 0].mean()) if np.any(
+                np.asarray(weights) > 0) else float("nan")
+            rec = {"outer_step": t, "live": plan["live"],
+                   "joined": plan["joined"], "left": plan["left"],
+                   "loss": mean_loss, "ring_order": self.ring_order,
+                   "attempts": attempts,
+                   "wire_bytes": dl.sync_wire_bytes(
+                       jax.tree.map(lambda p: p[0], self.params),
+                       max(1, int(np.sum(np.asarray(weights) > 0))),
+                       self.cfg.diloco)}
+            self.history.append(rec)
+
+            if self.cfg.ckpt_dir and \
+                    (t + 1) % self.cfg.ckpt_every_outer == 0:
+                from repro.checkpointing import save_async
+                save_async(self.cfg.ckpt_dir, global_step,
+                           {"params": jax.tree.map(
+                               lambda p: p[0], self.params),
+                            "outer_momentum": self.outer.opt.momentum,
+                            "anchor": self.outer.anchor},
+                           extra_meta={"outer_step": t + 1})
+        return self.history
+
+    def _outer_sync(self, weights):
+        return dl.outer_sync_sim(self.params, self.outer,
+                                 self.cfg.diloco,
+                                 ring_order=self.ring_order[: self.k],
+                                 weights=weights)
+
+    def _sync_membership(self, plan) -> list[int]:
+        for nid in plan["left"]:
+            self.slots.release(nid)
+        slots = []
+        for nid in plan["live"]:
+            slot = self.slots.assign(nid)
+            slots.append(slot)
+            if nid in plan["joined"]:
+                # joiner adopts the anchor (P2P checkpoint in the
+                # distributed path) and fresh optimizer state
+                anchor = self.outer.anchor
+                self.params = jax.tree.map(
+                    lambda stacked, a: stacked.at[slot].set(
+                        a.astype(stacked.dtype)),
+                    self.params, anchor)
+                fresh = self.optimizer.init(
+                    jax.tree.map(lambda p: p[slot], self.params))
+                self.opt_state = jax.tree.map(
+                    lambda stacked, f: stacked.at[slot].set(f),
+                    self.opt_state, fresh)
+        return slots

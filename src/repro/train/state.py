@@ -1,0 +1,18 @@
+"""Training state pytrees."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+from repro.core.diloco import OuterState
+from repro.optim.adamw import AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+class DiLoCoTrainState(NamedTuple):
+    """Stacked (leading DiLoCo-worker dim) inner state + shared outer."""
+    inner: TrainState
+    outer: OuterState

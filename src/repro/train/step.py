@@ -1,0 +1,294 @@
+"""Step builders: jit/shard_map-wired train, sync and serve steps.
+
+The inner train step runs as a plain pjit program over (data, model)
+*inside* a shard_map region manual over the DiLoCo axis (paper §2.3:
+FSDP inside, DiLoCo outside). The outer sync step runs the int8 ring
+all-reduce over the same manual axis. When the plan has no DiLoCo axis
+(huge models on one pod; serving) everything is plain pjit.
+
+Each builder returns (fn, sharding spec pytrees) so the dry-run can
+lower against ShapeDtypeStructs and the trainer can device_put real
+state identically.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import diloco as dl
+from repro.models import common
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.nesterov import NesterovState
+from repro.sharding import partition
+from repro.train.state import TrainState
+
+
+def mesh_axes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _constrain(mesh, tree, spec_tree):
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, s)),
+        tree, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(model, plan, mesh) -> Any:
+    shapes, axes = common.eval_axes(model.init, jax.random.PRNGKey(0))
+    return partition.param_pspecs(axes, shapes, plan, mesh_axes(mesh))
+
+
+def batch_pspecs(model, shape, plan, mesh, *, stacked: bool) -> Any:
+    """Leading-batch-dim specs for every input leaf (+ worker dim)."""
+    specs = model.input_specs(shape)
+    per_worker = shape.global_batch // plan.n_workers
+    bp = partition.batch_pspec(plan, per_worker, mesh_axes(mesh))
+    if stacked and plan.diloco_axis:
+        bp = P(plan.diloco_axis, *bp)
+    return {k: bp for k in specs}
+
+
+# -- train --------------------------------------------------------------------
+
+
+def build_train_step(model, plan, mesh, optimizer: AdamW):
+    """Returns (train_step, state_specs).
+
+    state/batch carry a leading DiLoCo-worker dim iff plan.diloco_axis.
+    train_step(state: TrainState, batch) -> (state, metrics)."""
+    pspecs = param_specs(model, plan, mesh)
+
+    bspec = partition.batch_pspec(plan)
+    # (B, S, D) residual-stream spec: batch over the batch axes, seq
+    # over the SP axis when the plan enables it
+    batch_entry = bspec[0] if len(bspec) else None
+    act_spec = P(batch_entry, plan.act_seq_axis) \
+        if plan.act_seq_axis else None
+
+    def _soft_constrain(tree):
+        """Bare-spec grad constraints: work inside vmap (spmd_axis_name
+        prepends the worker axis) and no-op without a mesh context."""
+        def one(x, s):
+            try:
+                return jax.lax.with_sharding_constraint(x, s)
+            except Exception:
+                return x
+
+        return jax.tree.map(one, tree, pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def grads_of(params, batch):
+        """Microbatched (gradient-accumulation) value_and_grad with the
+        activation hints active."""
+        from repro.sharding.act_hints import activation_hints
+
+        with activation_hints(act_spec):
+            if plan.microbatches == 1:
+                (_, metrics), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, batch,
+                                              remat=plan.remat)
+                return _soft_constrain(grads), metrics
+            nmb = plan.microbatches
+            mb = jax.tree.map(
+                lambda x: x.reshape((nmb, x.shape[0] // nmb)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, b_i):
+                (_, m), g = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, b_i,
+                                              remat=plan.remat)
+                g = _soft_constrain(g)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return _soft_constrain(acc), m
+
+            zeros = _soft_constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            grads, ms = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+            return grads, metrics
+
+    def inner(params, opt_state, batch):
+        # anchor the activation batch sharding (FSDP-style: batch over
+        # the data axes and, when divisible, 'model' too) + optional
+        # sequence parallelism hint on the residual stream
+        batch = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, bspec)), batch)
+        grads, metrics = grads_of(params, batch)
+        grads = _constrain(mesh, grads, pspecs)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        params = _constrain(mesh, params, pspecs)
+        return params, opt_state, metrics
+
+    dax = plan.diloco_axis
+    if dax is None:
+        def step(state: TrainState, batch):
+            params, opt, metrics = inner(state.params, state.opt, batch)
+            return TrainState(params, opt), metrics
+
+        state_specs = TrainState(pspecs,
+                                 AdamWState(P(), pspecs, pspecs))
+        return step, state_specs
+
+    lead = lambda t: partition.with_leading(t, dax)
+    state_specs = TrainState(
+        lead(pspecs), AdamWState(P(dax), lead(pspecs), lead(pspecs)))
+
+    def _uses_data(spec: P) -> bool:
+        return any(e == "data" or (isinstance(e, tuple) and "data" in e)
+                   for e in spec)
+
+    needs_data_sharded_params = any(
+        _uses_data(s) for s in jax.tree.leaves(
+            pspecs, is_leaf=lambda x: isinstance(x, P)))
+
+    if needs_data_sharded_params:
+        # XLA's SPMD partitioner CHECK-fails on manual('pod') subgroups
+        # combined with data-axis-sharded params (spmd_partitioner_util
+        # partition-group math). Equivalent formulation with NO manual
+        # axes: vmap the per-worker step over the stacked leading dim
+        # and let pjit shard it over the DiLoCo axis.
+        def step(state: TrainState, batch):
+            batch = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(dax, *bspec))), batch)
+
+            # spmd_axis_name prepends dax to every constraint inside
+            # the vmapped body, so hints use the per-worker spec
+            grads, metrics = jax.vmap(
+                grads_of, spmd_axis_name=dax)(state.params, batch)
+            grads = _constrain(mesh, grads, lead(pspecs))
+            params, opt = jax.vmap(optimizer.update)(
+                grads, state.opt, state.params)
+            params = _constrain(mesh, params, lead(pspecs))
+            return TrainState(params, opt), metrics
+
+        return step, state_specs
+
+    def per_worker(state: TrainState, batch):
+        unlift = lambda t: jax.tree.map(lambda x: x[0], t)
+        lift = lambda t: jax.tree.map(lambda x: x[None], t)
+        params, opt = unlift(state.params), unlift(state.opt)
+        params, opt, metrics = inner(params, opt, unlift(batch))
+        return TrainState(lift(params), lift(opt)), lift(metrics)
+
+    step = jax.shard_map(per_worker, mesh=mesh, in_specs=P(dax),
+                         out_specs=P(dax), check_vma=False,
+                         axis_names=frozenset({dax}))
+    return step, state_specs
+
+
+def build_outer_sync(model, plan, mesh, diloco_cfg: dl.DiLoCoConfig,
+                     ring_order=None):
+    """Returns (sync_step, outer_specs).
+
+    sync_step(params_stacked, outer_state, weights)
+        -> (params_stacked, outer_state).
+    The outer state (fp32 anchor + Nesterov momentum) is SHARED
+    (replicated over the DiLoCo axis, data/model-sharded like params —
+    the paper's host-offloaded master copy; on TPU targets pass
+    ``host_offload_outer=True`` to place it in pinned_host memory)."""
+    pspecs = param_specs(model, plan, mesh)
+    dax = plan.diloco_axis
+
+    if dax is None:
+        # degenerate DiLoCo (one worker): PER-LEAF pseudo-gradient +
+        # outer update — flattening to one vector would concat sharded
+        # leaves and force a full all-gather (observed: 1.8 TB/device
+        # for dbrx)
+        def sync_single(params, outer_state, weights):
+            del weights
+            delta = jax.tree.map(
+                lambda a, p: a - p.astype(jnp.float32),
+                outer_state.anchor, params)
+            new_anchor, new_opt = diloco_cfg.outer_opt.update(
+                delta, outer_state.opt, outer_state.anchor)
+            new_params = jax.tree.map(
+                lambda a, p: a.astype(p.dtype), new_anchor, params)
+            return new_params, dl.OuterState(
+                new_anchor, new_opt, outer_state.residual,
+                outer_state.outer_step + 1)
+
+        outer_specs = dl.OuterState(pspecs, NesterovState(pspecs),
+                                    P(), P())
+        return sync_single, outer_specs
+
+    # Hybrid FSDP + DiLoCo (paper §2.3): "only ranks responsible for the
+    # same shard communicate". The sync runs FULLY manual — every device
+    # rings ITS OWN model-shard of the pseudo-gradient across the DiLoCo
+    # axis; the 16 model columns run 16 parallel rings (the paper's
+    # per-shard process groups / parallel TCP stores).
+    sharded_params = any(
+        s != P() for s in jax.tree.leaves(
+            pspecs, is_leaf=lambda x: isinstance(x, P)))
+    if diloco_cfg.error_feedback and sharded_params:
+        raise NotImplementedError(
+            "error feedback requires per-shard residual bookkeeping; "
+            "supported with replicated-inner-params plans only")
+
+    def per_worker(params, anchor, momentum, residual, outer_step,
+                   weights):
+        p_i = jax.tree.map(lambda x: x[0], params)
+        st = dl.OuterState(anchor, NesterovState(momentum),
+                           residual[0], outer_step)
+        new_p, new_st = dl.outer_sync(
+            p_i, st, diloco_cfg, dax, ring_order=ring_order,
+            weight=weights[0])
+        return (jax.tree.map(lambda x: x[None], new_p), new_st.anchor,
+                new_st.opt.momentum, new_st.residual[None],
+                new_st.outer_step)
+
+    lead = lambda t: partition.with_leading(t, dax)
+
+    def sync(params_stacked, outer_state: dl.OuterState, weights):
+        new_p, anchor, momentum, residual, ostep = jax.shard_map(
+            per_worker, mesh=mesh,
+            in_specs=(lead(pspecs), pspecs, pspecs, P(dax), P(),
+                      P(dax)),
+            out_specs=(lead(pspecs), pspecs, pspecs, P(dax), P()),
+            check_vma=False)(
+                params_stacked, outer_state.anchor,
+                outer_state.opt.momentum, outer_state.residual,
+                outer_state.outer_step, weights)
+        return new_p, dl.OuterState(anchor, NesterovState(momentum),
+                                    residual, ostep)
+
+    outer_specs = dl.OuterState(pspecs, NesterovState(pspecs),
+                                P(dax), P())
+    return sync, outer_specs
+
+
+# -- serve --------------------------------------------------------------------
+
+
+def build_serve_step(model, plan, mesh, kind: str):
+    """kind in {'prefill', 'decode'}. Returns (fn, param_specs)."""
+    pspecs = param_specs(model, plan, mesh)
+    axes = mesh_axes(mesh)
+
+    # prefill SP: when KV heads don't divide the model axis (MHA
+    # archs), shard the 32k sequence over 'model' for the prefill
+    # activations — the attention q-block tiles divide accordingly
+    hint = None
+    if (kind == "prefill"
+            and model.cfg.n_kv_heads % axes.get("model", 1) != 0
+            and model.cfg.family not in ("ssm", "hybrid")):
+        b_entry = plan.batch_axes[0] if plan.batch_axes else None
+        hint = P(b_entry, "model")
+
+    if kind == "prefill":
+        def fn(params, batch, cache):
+            from repro.sharding.act_hints import activation_hints
+            with activation_hints(hint):
+                return model.prefill(params, batch, cache)
+    else:
+        def fn(params, token, cache):
+            return model.decode(params, token, cache)
+
+    return fn, pspecs

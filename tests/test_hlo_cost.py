@@ -1,0 +1,126 @@
+"""The trip-count-aware HLO cost analyzer: exact FLOPs on known
+programs (incl. scanned loops, which XLA's own cost_analysis counts
+only once) and collective-byte parsing on shard-mapped programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.analysis.roofline import Roofline, analyze, model_flops_for
+
+
+def _compiled(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_flops_counted_per_iteration():
+    def body(x, _):
+        return x @ x, None
+
+    def f(x):
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    c = _compiled(f, jax.ShapeDtypeStruct((256, 256), jnp.float32))
+    cost = analyze_hlo(c.as_text())
+    expected = 2 * 256 ** 3 * 10
+    assert abs(cost.flops - expected) / expected < 0.01
+    # XLA's own counter sees one iteration (documents why we re-derive)
+    assert c.cost_analysis()["flops"] == expected / 10
+
+
+def test_nested_scan_multipliers():
+    def inner(x, _):
+        return x @ x, None
+
+    def outer(x, _):
+        return jax.lax.scan(inner, x, None, length=4)[0], None
+
+    def f(x):
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    c = _compiled(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    cost = analyze_hlo(c.as_text())
+    expected = 2 * 128 ** 3 * 12
+    assert abs(cost.flops - expected) / expected < 0.01
+
+
+def test_unrolled_matches_scanned():
+    def f_u(x):
+        for _ in range(6):
+            x = x @ x
+        return x
+
+    def f_s(x):
+        return jax.lax.scan(lambda c, _: (c @ c, None), x, None,
+                            length=6)[0]
+
+    spec = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    fu = analyze_hlo(_compiled(f_u, spec).as_text()).flops
+    fs = analyze_hlo(_compiled(f_s, spec).as_text()).flops
+    assert abs(fu - fs) / fu < 0.01
+
+
+def test_bytes_reasonable_for_elementwise():
+    def f(x):
+        return x * 2 + 1
+
+    c = _compiled(f, jax.ShapeDtypeStruct((1 << 20,), jnp.float32))
+    cost = analyze_hlo(c.as_text())
+    # read + write of 4 MiB, within 2x for copies
+    assert 0.5 * 8e6 < cost.hbm_bytes < 3 * 8e6
+
+
+def test_collective_bytes_on_psum():
+    import pathlib
+    import subprocess
+    import sys
+    import textwrap
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, {src!r})
+    """) + textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.analysis.hlo_cost import analyze_hlo
+        mesh = jax.make_mesh((4,), ("x",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        def f(v):
+            return jax.lax.psum(v, "x")
+        g = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_vma=False)
+        c = jax.jit(g).lower(
+            jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
+        cost = analyze_hlo(c.as_text())
+        # all-reduce of 4 KiB -> 2x operand model = 8 KiB
+        assert 4096 <= cost.collective_bytes["all-reduce"] <= 16384, \\
+            cost.collective_bytes
+        print("PSUM-BYTES-OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", prog],
+                         capture_output=True, text=True, timeout=300)
+    assert "PSUM-BYTES-OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_roofline_terms_and_bottleneck():
+    def f(x):
+        return x @ x
+
+    c = _compiled(f, jax.ShapeDtypeStruct((512, 512), jnp.float32))
+    r = analyze(c, n_chips=1, model_flops=2 * 512 ** 3)
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert r.compute_s > 0 and r.memory_s > 0
+    assert 0.9 < r.useful_ratio < 1.1
+
+
+def test_model_flops_for_shapes():
+    from repro.configs import CONFIGS, SHAPES
+    cfg = CONFIGS["internlm2-1.8b"]
+    n = cfg.active_param_count()
+    t = SHAPES["train_4k"]
+    assert model_flops_for(cfg, t) == 6.0 * n * 256 * 4096
+    d = SHAPES["decode_32k"]
+    assert model_flops_for(cfg, d) == 2.0 * n * 128

@@ -1,0 +1,171 @@
+"""Per-architecture smoke tests (REDUCED same-family configs, as
+assigned): one forward/train step on CPU asserting output shapes and
+finiteness, plus decode-vs-teacher-forcing consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, CONFIGS
+from repro.configs.base import ShapeConfig
+from repro.models.registry import get_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(model, cfg, shape, key=KEY):
+    specs = model.input_specs(shape)
+    out = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            out[k] = jax.random.randint(key, v.shape, 0, cfg.vocab)
+        elif k == "mask":
+            out[k] = jnp.ones(v.shape, v.dtype)
+        else:
+            out[k] = jax.random.normal(key, v.shape, jnp.float32
+                                       ).astype(v.dtype) * 0.02
+    return out
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED) + ["intellect-1"])
+def test_smoke_train_step(arch):
+    cfg = CONFIGS[arch].reduced()
+    model = get_model(cfg)
+    params, axes = model.init(KEY)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    shape = ShapeConfig("t", "train", 64, 2)
+    batch = _batch(model, cfg, shape)
+
+    def step(p, b):
+        loss, metrics = model.loss(p, b)
+        g = jax.grad(lambda pp: model.loss(pp, b)[0])(p)
+        return loss, metrics, g
+
+    loss, metrics, g = jax.jit(step)(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    # gradients exist, are finite, and at least most are nonzero
+    leaves = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all()
+               for l in leaves)
+    nonzero = sum(float(jnp.abs(l).sum()) > 0 for l in leaves)
+    assert nonzero >= 0.8 * len(leaves)
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_smoke_decode_shapes(arch):
+    cfg = CONFIGS[arch].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(KEY)
+    pshape = ShapeConfig("p", "prefill", 32, 2)
+    batch = _batch(model, cfg, pshape)
+    cache = model.init_cache(2, pshape)
+    logits, cache = jax.jit(
+        lambda p, b, c: model.prefill(p, b, c))(params, batch, cache)
+    assert logits.shape == (2, cfg.padded_vocab)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache = jax.jit(
+        lambda p, t, c: model.decode(p, t, c))(params, tok, cache)
+    assert logits2.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "granite-3-2b",
+                                  "mamba2-130m", "zamba2-2.7b",
+                                  "deepseek-moe-16b"])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill(t_0..t_{n-1}) then decode(t_n) must equal the full
+    forward at position n (KV-cache correctness)."""
+    cfg = CONFIGS[arch].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(KEY)
+    n = 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, n + 1), 0,
+                                cfg.vocab)
+    shape = ShapeConfig("p", "prefill", 32, 2)
+    cache = model.init_cache(2, shape)
+    _, cache = model.prefill(params, {"tokens": tokens[:, :n]}, cache)
+    logits_dec, _ = model.decode(params, tokens[:, n:n + 1], cache)
+
+    full = {"tokens": tokens, "targets": tokens, "mask":
+            jnp.ones((2, n + 1), jnp.float32)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+        logits_full, _ = transformer.forward(cfg, params,
+                                             tokens)
+    else:
+        from repro.models import hybrid
+        logits_full, _ = hybrid.forward(cfg, params, tokens)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_full[:, n], np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_swa_masks_long_range():
+    """Sliding-window attention must ignore tokens beyond the window."""
+    cfg = CONFIGS["h2o-danube-1.8b"].reduced()  # window 32
+    model = get_model(cfg)
+    params, _ = model.init(KEY)
+    key = jax.random.PRNGKey(3)
+    n = 80
+    t1 = jax.random.randint(key, (1, n), 0, cfg.vocab)
+    # change tokens far outside the window of the last position
+    t2 = t1.at[:, :8].set((t1[:, :8] + 7) % cfg.vocab)
+    from repro.models import transformer
+    l1, _ = transformer.forward(cfg, params, t1)
+    l2, _ = transformer.forward(cfg, params, t2)
+    np.testing.assert_allclose(np.asarray(l1[:, -1], np.float32),
+                               np.asarray(l2[:, -1], np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vlm_frontend_changes_logits():
+    cfg = CONFIGS["phi-3-vision-4.2b"].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(KEY)
+    shape = ShapeConfig("t", "train", 64, 2)
+    b1 = _batch(model, cfg, shape)
+    b2 = dict(b1, frontend=b1["frontend"] + 1.0)
+    l1, _ = model.loss(params, b1)
+    l2, _ = model.loss(params, b2)
+    assert abs(float(l1) - float(l2)) > 1e-6
+
+
+def test_moe_load_balance_aux_present():
+    cfg = CONFIGS["deepseek-moe-16b"].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(KEY)
+    shape = ShapeConfig("t", "train", 64, 2)
+    loss, metrics = model.loss(params, _batch(model, cfg, shape))
+    assert "lb_loss" in metrics
+    assert float(metrics["lb_loss"]) > 0
+
+
+def test_max_z_loss_weight():
+    """max-z aux (paper: weight 2e-4) contributes to the total loss."""
+    from repro.models.common import cross_entropy_max_z
+    logits = jnp.asarray(np.random.default_rng(0).normal(
+        size=(4, 8, 32)) * 5, jnp.float32)
+    targets = jnp.zeros((4, 8), jnp.int32)
+    loss_z, m = cross_entropy_max_z(logits, targets, z_weight=2e-4)
+    loss_0, _ = cross_entropy_max_z(logits, targets, z_weight=0.0)
+    assert float(loss_z) > float(loss_0)
+    assert float(m["z"]) > 0
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_param_counts_match_analytics(arch):
+    from repro.models import common
+    cfg = CONFIGS[arch]
+    model = get_model(cfg)
+    shapes, _ = common.eval_axes(model.init, KEY)
+    actual = sum(l.size for l in jax.tree.leaves(shapes))
+    assert abs(actual - cfg.param_count()) / actual < 1e-3
+
+
+def test_long_500k_applicability():
+    from repro.configs import SHAPES
+    long = SHAPES["long_500k"]
+    runs = {a for a in ASSIGNED if CONFIGS[a].supports(long)}
+    assert runs == {"h2o-danube-1.8b", "zamba2-2.7b", "mamba2-130m"}

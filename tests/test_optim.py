@@ -1,0 +1,50 @@
+"""AdamW vs a numpy reference; WSD schedule shape (paper: warmup 1000,
+stable, anneal final 20%)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamW, schedules
+
+
+def test_adamw_matches_numpy_reference(rng):
+    opt = AdamW(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1)
+    p = {"w": jnp.asarray(rng.normal(size=(16,)), jnp.float32)}
+    st = opt.init(p)
+    pw = np.asarray(p["w"], np.float64)
+    m = np.zeros(16)
+    v = np.zeros(16)
+    for t in range(1, 4):
+        g = rng.normal(size=(16,)).astype(np.float32)
+        m = 0.9 * m + 0.1 * g
+        v = 0.95 * v + 0.05 * g * g
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.95 ** t)
+        pw = pw - 1e-2 * (mh / (np.sqrt(vh) + 1e-8) + 0.1 * pw)
+        p, st = opt.update({"w": jnp.asarray(g)}, st, p)
+    np.testing.assert_allclose(np.asarray(p["w"]), pw, rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_adamw_schedule_callable():
+    sched = schedules.wsd(1e-3, warmup_steps=10, total_steps=100)
+    opt = AdamW(lr=sched)
+    p = {"w": jnp.ones((4,))}
+    st = opt.init(p)
+    p2, st = opt.update({"w": jnp.ones((4,))}, st, p)
+    assert not np.allclose(np.asarray(p2["w"]), np.asarray(p["w"]))
+
+
+def test_wsd_schedule_phases():
+    s = schedules.wsd(1.0, warmup_steps=100, total_steps=1000,
+                      decay_fraction=0.2)
+    assert float(s(0)) == 0.0
+    assert float(s(50)) == 0.5          # linear warmup
+    assert float(s(100)) == 1.0
+    assert float(s(500)) == 1.0          # stable phase
+    assert float(s(799)) == 1.0
+    assert float(s(900)) < 1.0           # annealing
+    assert float(s(1000)) <= 0.05        # fully decayed
+    # monotone decay in the anneal phase
+    vals = [float(s(t)) for t in range(800, 1001, 25)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))

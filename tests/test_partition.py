@@ -1,0 +1,96 @@
+"""Sharding plans and partition rules."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import CONFIGS, SHAPES
+from repro.sharding import make_plan, partition
+
+MESH_S = {"data": 16, "model": 16}
+MESH_M = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_plan_diloco_axis_selection():
+    cfg = CONFIGS["granite-3-2b"]
+    assert make_plan(cfg, SHAPES["train_4k"], MESH_S).diloco_axis == \
+        "data"
+    assert make_plan(cfg, SHAPES["train_4k"], MESH_M).diloco_axis == \
+        "pod"
+    # dbrx: a 132B replica per worker only fits one per pod
+    dbrx = CONFIGS["dbrx-132b"]
+    assert make_plan(dbrx, SHAPES["train_4k"], MESH_S).diloco_axis \
+        is None
+    assert make_plan(dbrx, SHAPES["train_4k"], MESH_M).diloco_axis == \
+        "pod"
+    # serving never uses DiLoCo
+    assert make_plan(cfg, SHAPES["decode_32k"], MESH_M).diloco_axis \
+        is None
+
+
+def test_plan_tiny_model_inner_dp():
+    cfg = CONFIGS["mamba2-130m"]
+    plan = make_plan(cfg, SHAPES["train_4k"], MESH_S)
+    assert all(ax is None for _, ax in plan.rules)
+    assert "model" in plan.batch_axes
+
+
+def test_param_pspec_rules_and_conflicts():
+    plan = make_plan(CONFIGS["granite-3-2b"], SHAPES["train_4k"],
+                     MESH_S)
+    # vocab-sharded embedding
+    s = partition.param_pspec(("vocab", "embed"), (49408, 2048), plan,
+                              MESH_S)
+    assert s == P("model")
+    # ff sharded
+    s = partition.param_pspec(("embed", "ff"), (2048, 8192), plan,
+                              MESH_S)
+    assert s == P(None, "model")
+    # conflict: two logical axes both wanting 'model' -> first wins
+    s = partition.param_pspec(("experts", "embed", "ff"),
+                              (64, 2048, 1408), plan, MESH_S)
+    assert s == P("model")
+
+
+def test_param_pspec_divisibility_guard():
+    plan = make_plan(CONFIGS["granite-3-2b"], SHAPES["train_4k"],
+                     MESH_S)
+    # 24 heads don't divide 16 -> replicated
+    s = partition.param_pspec(("heads",), (24,), plan, MESH_S)
+    assert s == P()
+
+
+def test_batch_pspec_divisibility_fallback():
+    plan = make_plan(CONFIGS["granite-3-2b"], SHAPES["decode_32k"],
+                     MESH_M)
+    assert partition.batch_pspec(plan, 128, MESH_M) != P()
+    # batch=1 (long_500k) can't shard
+    assert partition.batch_pspec(plan, 1, MESH_M) == P()
+
+
+def test_cache_pspec_heads_vs_seq():
+    plan = make_plan(CONFIGS["internlm2-1.8b"], SHAPES["decode_32k"],
+                     MESH_S)
+    # kv heads 8 don't divide 16 -> fall to sequence parallelism
+    s = partition.cache_pspec((24, 128, 32768, 8, 128), plan, MESH_S,
+                              batch_dim=1, heads_dim=3, seq_dim=2)
+    assert s == P(None, "data", "model")
+    # 32 kv heads divide -> heads sharding preferred
+    plan2 = make_plan(CONFIGS["phi-3-vision-4.2b"],
+                      SHAPES["decode_32k"], MESH_S)
+    s2 = partition.cache_pspec((32, 128, 32768, 32, 96), plan2, MESH_S,
+                               batch_dim=1, heads_dim=3, seq_dim=2)
+    assert s2 == P(None, "data", None, "model")
+
+
+def test_remat_on_for_all_train_shapes():
+    for arch in ("mamba2-130m", "dbrx-132b"):
+        plan = make_plan(CONFIGS[arch], SHAPES["train_4k"], MESH_S)
+        assert plan.remat
+        plan = make_plan(CONFIGS[arch], SHAPES["decode_32k"], MESH_S)
+        assert not plan.remat
+
+
+def test_vocab_padding_divisible():
+    for name, cfg in CONFIGS.items():
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab
+        assert cfg.padded_vocab - cfg.vocab < 256

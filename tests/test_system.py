@@ -1,0 +1,99 @@
+"""End-to-end behaviour tests of the PRIME system: the paper's headline
+claims in miniature.
+
+  * DiLoCo (H inner steps + int8 ring + outer Nesterov) reaches a loss
+    comparable to fully-synchronous data-parallel training on the same
+    token budget (paper: "comparable performance", Table 2/3 context);
+  * int8 pseudo-gradient quantization does not hurt convergence vs an
+    fp32 ring (§2.2 claim);
+  * the full elastic run (paper Fig. 5): nodes join/crash mid-training
+    and the loss still goes down;
+  * communication accounting reproduces the 400x reduction headline.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.core.diloco import DiLoCoConfig, sync_wire_bytes
+from repro.core.fault_tolerance import (ClusterSimulator, EventKind,
+                                        NodeEvent)
+from repro.data.pipeline import DataConfig
+from repro.models.registry import get_model
+from repro.train.loop import ElasticTrainer, TrainerConfig
+
+
+def _train(quant, outer_steps=4, h=4, workers=4, seed=0):
+    cfg = CONFIGS["internlm2-1.8b"].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    sim = ClusterSimulator(list(range(workers)))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=64, batch_per_worker=4,
+                      total_steps=200)
+    tcfg = TrainerConfig(diloco=DiLoCoConfig(inner_steps=h,
+                                             quant=quant),
+                         inner_lr=3e-3, max_workers=workers)
+    tr = ElasticTrainer(model, tcfg, dcfg, params, sim)
+    hist = tr.run(outer_steps)
+    return [x["loss"] for x in hist], tr
+
+
+def _dp_baseline(outer_steps=4, h=4, workers=4, seed=0):
+    """Fully-synchronous DP analogue: sync every step (H=1, fp32)."""
+    losses, _ = _train("fp32", outer_steps=outer_steps * h, h=1,
+                       workers=workers, seed=seed)
+    return losses
+
+
+def test_diloco_comparable_to_dp():
+    diloco_losses, _ = _train("int8")
+    dp_losses = _dp_baseline()
+    # same token budget; tiny-scale proxy of the paper's
+    # "comparable performance" claim
+    assert diloco_losses[-1] < 1.25 * dp_losses[-1], (
+        diloco_losses, dp_losses)
+    assert diloco_losses[-1] < diloco_losses[0]
+
+
+def test_int8_matches_fp32_ring():
+    l8, _ = _train("int8", seed=1)
+    l32, _ = _train("fp32", seed=1)
+    assert abs(l8[-1] - l32[-1]) / l32[-1] < 0.1, (l8, l32)
+
+
+def test_elastic_run_fig5():
+    cfg = CONFIGS["mamba2-130m"].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    events = [NodeEvent(1, EventKind.JOIN, 4),
+              NodeEvent(2, EventKind.JOIN, 5),
+              NodeEvent(3, EventKind.CRASH, 0),
+              NodeEvent(4, EventKind.LEAVE, 1)]
+    sim = ClusterSimulator([0, 1, 2, 3], events=events)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=48, batch_per_worker=4,
+                      total_steps=200)
+    tcfg = TrainerConfig(diloco=DiLoCoConfig(inner_steps=3,
+                                             quant="int8"),
+                         inner_lr=3e-3, max_workers=8)
+    tr = ElasticTrainer(model, tcfg, dcfg, params, sim)
+    hist = tr.run(6)
+    sizes = [len(h["live"]) for h in hist]
+    assert sizes == [4, 5, 6, 5, 4, 4]
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_bandwidth_reduction_headline():
+    """Paper abstract: ~400x reduction vs fp32 per-step DP at H=100."""
+    cfg = CONFIGS["intellect-1"]
+    model = get_model(cfg)
+    from repro.models import common
+    shapes, _ = common.eval_axes(model.init, jax.random.PRNGKey(0))
+    n_params = sum(l.size for l in jax.tree.leaves(shapes))
+    k = 8
+    dcfg = DiLoCoConfig(inner_steps=100, quant="int8")
+    diloco_bytes_per_h_steps = sync_wire_bytes(shapes, k, dcfg)
+    # per-step fp32 DP ring all-reduce of gradients
+    dp_bytes_per_h_steps = 100 * 2 * (k - 1) * (n_params / k) * 4
+    reduction = dp_bytes_per_h_steps / diloco_bytes_per_h_steps
+    assert 350 < reduction < 450, reduction

@@ -1,0 +1,82 @@
+"""Bandwidth-aware ring order: exact solver vs brute force, greedy
+quality, monitor re-ordering policy."""
+import itertools
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import topology
+
+
+def _rand_w(rng, n):
+    w = rng.uniform(1, 10, size=(n, n))
+    w = (w + w.T) / 2
+    np.fill_diagonal(w, 0)
+    return w
+
+
+def _brute(w):
+    n = w.shape[0]
+    return max(topology.cycle_bottleneck(w, (0,) + p)
+               for p in itertools.permutations(range(1, n)))
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(3, 7), st.integers(0, 2**31 - 1))
+def test_exact_solver_optimal(n, seed):
+    w = _rand_w(np.random.default_rng(seed), n)
+    order = topology.solve_exact(w)
+    assert sorted(order) == list(range(n))
+    assert abs(topology.cycle_bottleneck(w, order) - _brute(w)) < 1e-9
+
+
+def test_exact_solver_paper_scale():
+    # the paper ran up to 14 nodes; 12 is still fast for Held-Karp
+    w = _rand_w(np.random.default_rng(1), 12)
+    order = topology.optimize_ring_order(w)
+    assert sorted(order) == list(range(12))
+
+
+def test_greedy_reasonable_quality():
+    rng = np.random.default_rng(2)
+    w = _rand_w(rng, 8)
+    exact = topology.cycle_bottleneck(w, topology.solve_exact(w))
+    greedy = topology.cycle_bottleneck(w, topology.solve_greedy(w))
+    assert greedy >= 0.6 * exact
+
+
+def test_greedy_used_above_exact_limit():
+    w = _rand_w(np.random.default_rng(3), 20)
+    order = topology.optimize_ring_order(w)
+    assert sorted(order) == list(range(20))
+
+
+def test_bandwidth_monitor_reorders_on_degradation():
+    n = 5
+    mon = topology.BandwidthMonitor(n)
+    good = np.full((n, n), 10.0)
+    np.fill_diagonal(good, 0)
+    mon.observe_matrix(good)
+    changed, order0 = mon.maybe_reorder()
+    # degrade one edge of the current ring badly
+    w = good.copy()
+    a, b = order0[0], order0[1]
+    w[a, b] = w[b, a] = 0.1
+    mon.ewma = 1.0
+    mon.observe_matrix(w)
+    changed, order1 = mon.maybe_reorder()
+    assert changed
+    assert topology.cycle_bottleneck(w, order1) > \
+        topology.cycle_bottleneck(w, order0)
+
+
+def test_monitor_no_spurious_reorder():
+    n = 4
+    mon = topology.BandwidthMonitor(n)
+    w = np.full((n, n), 5.0)
+    np.fill_diagonal(w, 0)
+    mon.observe_matrix(w)
+    changed, _ = mon.maybe_reorder()
+    changed2, _ = mon.maybe_reorder()
+    assert not changed2  # stable link quality -> no recompile churn
