@@ -54,13 +54,20 @@ def run(seed: int = 0) -> list[str]:
         "kernel/quantize_pallas_interpret", t_pal * 1e6,
         f"elems={xs.size};note=interpret-mode-correctness-only"))
 
-    # fused pseudo-grad path saves one full HBM pass
+    # fused pseudo-grad path: ops.quantize_pseudograd is ONE jit program
+    # (stats fused over anchor/theta, pg never materialized) vs a
+    # two-program pipeline that materializes pg in HBM between jits —
+    # both sides compiled, so the delta is the extra round-trip only
     a = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
-    t_fused = _time(jax.jit(ref.quantize_pseudograd), a, x)
-    t_unfused = _time(jax.jit(lambda aa, xx: ref.quantize(aa - xx)),
-                      a, x)
+    t_fused = _time(lambda aa, xx: ops.quantize_pseudograd(
+        aa, xx, impl="jnp"), a, x)
+
+    j_sub = jax.jit(lambda aa, xx: aa - xx)
+    j_quant = jax.jit(ref.quantize)
+    t_unfused = _time(lambda aa, xx: j_quant(j_sub(aa, xx)), a, x)
     rows.append(common.csv_row(
         "kernel/pseudograd_fusion", t_fused * 1e6,
         f"unfused_us={t_unfused * 1e6:.1f};"
-        f"speedup={t_unfused / t_fused:.2f}x"))
+        f"speedup={t_unfused / t_fused:.2f}x;"
+        f"note=cpu-parity-expected-tpu-saves-hbm-pass"))
     return rows

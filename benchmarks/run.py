@@ -3,9 +3,15 @@ Prints ``name,us_per_call,derived`` CSV (plus a header comment).
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table2 fig5
+    PYTHONPATH=src python -m benchmarks.run sync --json
+
+``--json``: modules exposing ``run_json()`` additionally contribute a
+machine-readable payload, merged into ``BENCH_sync.json`` (the perf
+trajectory file future PRs diff against).
 """
 from __future__ import annotations
 
+import json
 import sys
 import traceback
 
@@ -17,23 +23,38 @@ MODULES = [
     ("convergence", "benchmarks.convergence_diloco_vs_dp"),
     ("quant", "benchmarks.quant_quality"),
     ("kernels", "benchmarks.kernel_bench"),
+    ("sync", "benchmarks.sync_bench"),
 ]
+
+JSON_PATH = "BENCH_sync.json"
 
 
 def main() -> None:
-    want = set(sys.argv[1:])
+    args = sys.argv[1:]
+    json_mode = "--json" in args
+    want = {a for a in args if not a.startswith("-")}
     print("# name,us_per_call,derived")
     failed = []
+    payload: dict = {}
     for key, modname in MODULES:
         if want and key not in want:
             continue
         try:
             mod = __import__(modname, fromlist=["run"])
-            for row in mod.run():
+            if json_mode and hasattr(mod, "run_json"):
+                rows, part = mod.run_json()
+                payload.update(part)
+            else:
+                rows = mod.run()
+            for row in rows:
                 print(row, flush=True)
         except Exception:
             failed.append(key)
             traceback.print_exc()
+    if json_mode and payload:
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {JSON_PATH}", file=sys.stderr)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -1,0 +1,232 @@
+"""Outer-sync engine benchmark: fused/bucketed SyncEngine vs the seed's
+flatten -> quantize -> ring -> unflatten monolith.
+
+The seed path (reproduced verbatim below as ``_seed_*``) re-flattened
+the anchor pytree once per worker inside a vmap (plus once more in the
+outer apply), materialized the pseudo-gradient before quantizing, ran
+the ring simulation as O(k^2) per-hop Python loops over ``jnp.stack``
+copies of the full stacked accumulator, and dequantized + accumulated
+in two passes. The SyncEngine path keeps a persistent flat fp32 anchor,
+quantizes the first hop straight off (anchor, theta), accumulates with
+the fused decode+add, and runs workers under ``vmap`` / hops under
+``fori_loop``.
+
+Reports XLA:CPU wall time for a >=16M-element model, per-worker wire
+bytes, and the analytic count of full-model HBM round-trips on each
+path. ``python -m benchmarks.run sync --json`` additionally writes
+``BENCH_sync.json`` so future PRs have a perf trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import diloco as dl
+from repro.kernels import ops as qops
+from repro.optim.nesterov import NesterovState
+
+N_ELEMS = 1 << 24           # 16.8M params (~64 MiB fp32)
+N_WORKERS = 4
+
+
+# -- seed path, reproduced verbatim (pre-SyncEngine) -------------------------
+
+
+def _seed_flatten_pytree(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves]) \
+        if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(vec, like=None):
+        out, off = [], 0
+        ref_leaves = jax.tree.leaves(like) if like is not None else leaves
+        for s, shp, ref in zip(sizes, shapes, ref_leaves):
+            out.append(vec[off:off + s].reshape(shp).astype(ref.dtype))
+            off += s
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def _seed_pad_to_chunks(x, n):
+    size = x.shape[-1]
+    chunk = -(-size // n)
+    pad = n * chunk - size
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, chunk
+
+
+def _seed_get_chunk(acc, idx, chunk):
+    return jax.lax.dynamic_slice_in_dim(acc, idx * chunk, chunk, axis=-1)
+
+
+def _seed_set_chunk(acc, idx, val, chunk):
+    return jax.lax.dynamic_update_slice_in_dim(acc, val, idx * chunk,
+                                               axis=-1)
+
+
+def _seed_tx_quant(val):
+    q = qops.quantize(val, impl="jnp")
+    return tuple(q), lambda p: qops.dequantize(qops.Quantized(*p),
+                                               impl="jnp")
+
+
+def _seed_simulate_ring(xs):
+    """Seed ``simulate_ring_all_reduce`` (int8, identity order)."""
+    k, orig_size = xs.shape
+    xs = xs.astype(jnp.float32)
+    weights = jnp.ones((k,), jnp.float32)
+    total_w = jnp.sum(weights)
+    accs = jnp.stack([xs[p] * weights[p] for p in range(k)])
+    accs, chunk = _seed_pad_to_chunks(accs, k)
+
+    def quant_chunks(vals):
+        payloads, deqs = [], []
+        for p in range(k):
+            pay, deq = _seed_tx_quant(vals[p])
+            payloads.append(pay)
+            deqs.append(deq)
+        return payloads, deqs
+
+    for s in range(k - 1):
+        sends = [_seed_get_chunk(accs[p], (p - s) % k, chunk)
+                 for p in range(k)]
+        payloads, deqs = quant_chunks(sends)
+        new = []
+        for p in range(k):
+            src = (p - 1) % k
+            recv_idx = (p - s - 1) % k
+            val = _seed_get_chunk(accs[p], recv_idx, chunk) + deqs[src](
+                payloads[src])
+            new.append(_seed_set_chunk(accs[p], recv_idx, val, chunk))
+        accs = jnp.stack(new)
+
+    sends = [_seed_get_chunk(accs[p], (p + 1) % k, chunk)
+             for p in range(k)]
+    payloads, deqs = quant_chunks(sends)
+    accs = jnp.stack([
+        _seed_set_chunk(accs[p], (p + 1) % k, deqs[p](payloads[p]), chunk)
+        for p in range(k)])
+    bufs, buf_deqs = payloads, deqs
+    for s in range(k - 1):
+        nbufs = [bufs[(p - 1) % k] for p in range(k)]
+        ndeqs = [buf_deqs[(p - 1) % k] for p in range(k)]
+        accs = jnp.stack([
+            _seed_set_chunk(accs[p], (p - s) % k, ndeqs[p](nbufs[p]),
+                            chunk) for p in range(k)])
+        bufs, buf_deqs = nbufs, ndeqs
+    return accs[..., :orig_size] / jnp.maximum(total_w, 1e-20)
+
+
+def _seed_outer_sync_sim(stacked_params, state, cfg):
+    k = jax.tree.leaves(stacked_params)[0].shape[0]
+
+    def per_worker(params_i):
+        p_flat, _ = _seed_flatten_pytree(params_i)
+        a_flat, _ = _seed_flatten_pytree(state.anchor)
+        return a_flat - p_flat
+
+    pgs = jax.vmap(per_worker)(stacked_params)
+    reduced = _seed_simulate_ring(pgs)
+    any_params = jax.tree.map(lambda p: p[0], stacked_params)
+    delta = _seed_flatten_pytree(state.anchor)[1](
+        reduced[0], like=state.anchor)
+    new_anchor, new_opt = cfg.outer_opt.update(delta, state.opt,
+                                               state.anchor)
+    new_params = jax.tree.map(
+        lambda a, p: a.astype(p.dtype), new_anchor, any_params)
+    stacked_new = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (k,) + p.shape), new_params)
+    return stacked_new, state._replace(anchor=new_anchor, opt=new_opt)
+
+
+# -- harness -----------------------------------------------------------------
+
+
+def _model(rng, n=N_ELEMS):
+    """8-leaf pytree totalling n elements (flatten is part of the cost)."""
+    per = n // 8
+    return {f"w{i}": jnp.asarray(rng.normal(size=(per,)) * 0.02,
+                                 jnp.float32) for i in range(8)}
+
+
+def _drift(params, k):
+    return jax.tree.map(
+        lambda a: jnp.stack([a * (1 + 0.01 * i) for i in range(k)]),
+        params)
+
+
+def _time(fn, iters=2):
+    jax.block_until_ready(fn())  # warmup / op-cache fill
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def _measure(seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    params = _model(rng)
+    stacked = _drift(params, N_WORKERS)
+    cfg = dl.DiLoCoConfig(quant="int8", sync_buckets=2)
+    st = dl.init_outer_state_sim(params, cfg, N_WORKERS)
+
+    t_fused = _time(lambda: dl.outer_sync_sim(stacked, st, cfg)[1]
+                    .anchor_flat)
+    t_seed = _time(lambda: _seed_outer_sync_sim(stacked, st, cfg)[1]
+                   .anchor["w0"])
+
+    n = sum(l.size for l in jax.tree.leaves(params))
+    # analytic full-model HBM round-trips around the ring (per outer
+    # step, per worker; the ring's chunk traffic itself is identical):
+    #   seed : anchor flatten inside vmap (k reads + k writes of the
+    #          anchor) + theta flatten + pg materialize + anchor
+    #          re-flatten in apply + delta unflatten + tree-map outer
+    #   fused: theta flatten + pg subtract off the persistent buffer +
+    #          momentum flatten + 3 unflattens (anchor/momentum/params)
+    hbm = {"seed_anchor_flattens_per_step": N_WORKERS + 1,
+           "fused_anchor_flattens_per_step": 0,
+           "seed_ring_stack_copies": 2 * (N_WORKERS - 1) + 2,
+           "fused_ring_stack_copies": 0}
+    return {
+        "elements": int(n),
+        "workers": N_WORKERS,
+        "quant": cfg.quant,
+        "sync_buckets": cfg.sync_buckets,
+        "fused_outer_sync_s": t_fused,
+        "seed_outer_sync_s": t_seed,
+        "speedup": t_seed / t_fused,
+        "wire_bytes_per_worker": dl.sync_wire_bytes(
+            params, N_WORKERS, cfg),
+        "hbm_passes": hbm,
+    }
+
+
+def _rows(m: dict) -> list[str]:
+    return [
+        common.csv_row("sync/outer_sync_fused", m["fused_outer_sync_s"]
+                       * 1e6, f"elems={m['elements']};k={m['workers']};"
+                       f"buckets={m['sync_buckets']}"),
+        common.csv_row("sync/outer_sync_seed_path",
+                       m["seed_outer_sync_s"] * 1e6,
+                       f"speedup_fused={m['speedup']:.2f}x"),
+        common.csv_row("sync/wire_bytes", 0.0,
+                       f"per_worker_bytes={m['wire_bytes_per_worker']}"),
+    ]
+
+
+def run(seed: int = 0) -> list[str]:
+    return _rows(_measure(seed))
+
+
+def run_json(seed: int = 0):
+    m = _measure(seed)
+    return _rows(m), {"sync": m}

@@ -148,7 +148,12 @@ def _multipliers(comps: dict) -> tuple[dict, set]:
                 fusion_bodies.add(ref)
                 stack.append((ref, m))
             for ref in re.findall(r"to_apply=%?([\w\.\-]+)", ins.line):
-                applier_bodies.add(ref)
+                if ins.op == "call":
+                    # real call (e.g. XLA:CPU's parallel-task fusion
+                    # wrappers), not a reduce/scatter scalar applier
+                    stack.append((ref, m))
+                else:
+                    applier_bodies.add(ref)
             for ref in re.findall(
                     r"(?:true_computation|false_computation|"
                     r"branch_computations)=.*?%?([\w\.\-]+)", ins.line):
@@ -163,11 +168,15 @@ def _dot_flops(ins: Instruction, comp: Computation) -> float:
     mo = re.search(r"\(([^)]*)\)", ins.line[ins.line.find(ins.op):])
     lhs_shape: list[int] = []
     if mo:
-        first = mo.group(1).split(",")[0].strip()
-        sym = first.lstrip("%")
-        t = comp.symbols.get(sym)
+        seg = mo.group(1)
+        # operands may be printed typed ('f32[a,b]{1,0} %x') or bare
+        # ('%x' / 'x'); commas inside shape brackets break naive
+        # splitting, so resolve the lhs via its %name first and fall
+        # back to the first inline shape in the segment (lhs is first)
+        syms = _operand_syms(ins)
+        t = comp.symbols.get(syms[0]) if syms else None
         if t is None:
-            tm = _SHAPE_RE.search(first)
+            tm = _SHAPE_RE.search(seg)
             t = tm.group(0) if tm else None
         if t:
             sm = _SHAPE_RE.search(t)
@@ -186,8 +195,14 @@ def _operand_syms(ins: Instruction) -> list[str]:
     mo = re.search(r"\((.*?)\)[,)]?", ins.line[ins.line.find(ins.op):])
     if not mo:
         return []
+    seg = mo.group(1)
+    # typed operand form ('f32[a,b]{1,0} %x') has commas inside the
+    # shape brackets — pull the %names directly when present
+    named = re.findall(r"%([\w\.\-]+)", seg)
+    if named:
+        return named
     out = []
-    for operand in mo.group(1).split(","):
+    for operand in seg.split(","):
         operand = operand.strip()
         if operand:
             out.append(operand.split()[-1].lstrip("%"))
@@ -251,15 +266,11 @@ def _instr_bytes(ins: Instruction, comp: Computation,
 def _collective_payload(ins: Instruction, comp: Computation) -> float:
     res_b, _ = _type_bytes_and_elems(ins.type_str)
     op_b = 0
-    mo = re.search(r"\(([^)]*)\)", ins.line[ins.line.find(ins.op):])
-    if mo:
-        for operand in mo.group(1).split(","):
-            sym = operand.strip().split()[-1].lstrip("%") \
-                if operand.strip() else ""
-            t = comp.symbols.get(sym)
-            if t:
-                ob, _ = _type_bytes_and_elems(t)
-                op_b += ob
+    for sym in _operand_syms(ins):
+        t = comp.symbols.get(sym)
+        if t:
+            ob, _ = _type_bytes_and_elems(t)
+            op_b += ob
     kind = ins.op.replace("-start", "")
     if kind == "all-gather":
         return res_b

@@ -1,0 +1,68 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern public API (``jax.shard_map`` with
+``check_vma``/``axis_names``, ``jax.make_mesh(..., axis_types=...)``);
+older jax releases (<= 0.4.x, like the one baked into this container)
+only ship ``jax.experimental.shard_map.shard_map`` with
+``check_rep``/``auto`` and a ``jax.make_mesh`` without ``axis_types``.
+Everything in-repo goes through these two wrappers so both API
+generations lower to identical programs.
+"""
+from __future__ import annotations
+
+import inspect
+
+import numpy as np
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types when supported; manual
+    ``Mesh`` construction on jax releases predating ``make_mesh``."""
+    axis_shapes, axis_names = tuple(axis_shapes), tuple(axis_names)
+    mk = getattr(jax, "make_mesh", None)
+    if mk is None:
+        devs = np.asarray(devices if devices is not None
+                          else jax.devices())
+        return jax.sharding.Mesh(
+            devs.reshape(axis_shapes), axis_names)
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if "axis_types" in inspect.signature(mk).parameters:
+        kwargs["axis_types"] = (
+            jax.sharding.AxisType.Auto,) * len(axis_names)
+    return mk(axis_shapes, axis_names, **kwargs)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a manual mesh axis (``jax.lax.axis_size`` on new
+    jax; ``psum(1, axis)`` — which folds to a python int — on old)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False,
+              axis_names=None):
+    """Version-portable ``shard_map``.
+
+    ``axis_names`` is the set of MANUAL axes (new-API semantics); on old
+    jax it is translated to the complementary ``auto`` set.  ``check_vma``
+    maps to the old ``check_rep``.
+    """
+    if _HAS_NEW_SHARD_MAP:
+        kwargs = {"mesh": mesh, "in_specs": in_specs,
+                  "out_specs": out_specs, "check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)

@@ -10,6 +10,7 @@ from repro.core.fault_tolerance import (ClusterSimulator, EventKind,
 from repro.core.ring_reduce import (RingConfig, ring_all_reduce,
                                     ring_wire_bytes,
                                     simulate_ring_all_reduce)
+from repro.core.sync_engine import SyncEngine
 from repro.core.topology import (BandwidthMonitor, cycle_bottleneck,
                                  optimize_ring_order)
 
@@ -21,6 +22,6 @@ __all__ = [
     "ClusterSimulator", "EventKind", "HeartbeatMonitor", "NodeEvent",
     "RetryPolicy",
     "RingConfig", "ring_all_reduce", "ring_wire_bytes",
-    "simulate_ring_all_reduce",
+    "simulate_ring_all_reduce", "SyncEngine",
     "BandwidthMonitor", "cycle_bottleneck", "optimize_ring_order",
 ]

@@ -15,6 +15,13 @@ Two synchronization paths, sharing all math:
   * ``outer_sync_sim`` — stacked (k, ...) single-process mirror used by
     the CPU cluster simulator / examples / tests.
 
+The outer step runs on the **SyncEngine** (``core.sync_engine``): the
+anchor is kept as a persistent flat fp32 buffer (``OuterState.anchor_flat``)
+so the pseudo-gradient is one subtract off the buffer instead of a
+flatten of two pytrees, the outer Nesterov update runs in flat space,
+and the flat (anchor, theta) pair feeds the ring's fused first-hop
+transmit quantizer. See ``docs/sync_pipeline.md`` for the dataflow.
+
 The anchor is kept in fp32 (it is the paper's CPU-offloaded master copy;
 on TPU it can live in ``pinned_host`` memory — see
 ``sharding.plans.outer_state_sharding``).
@@ -31,6 +38,7 @@ from repro.core import compression
 from repro.core.ring_reduce import (RingConfig, ring_all_reduce,
                                     ring_wire_bytes,
                                     simulate_ring_all_reduce)
+from repro.core.sync_engine import SyncEngine
 from repro.kernels import ops as qops
 from repro.optim.nesterov import NesterovSGD, NesterovState
 
@@ -42,12 +50,16 @@ class DiLoCoConfig:
     outer_momentum: float = 0.9
     quant: str = "int8"             # 'int8' | 'fp32' | 'int4'
     quant_impl: str = "jnp"         # 'jnp' | 'pallas'
+    sync_buckets: int = 1           # sub-buckets per ring chunk-hop
+    fused_sync: bool = True         # fused tx/rx kernels in the ring
     error_feedback: bool = False    # beyond-paper (see core.compression)
     host_offload_outer: bool = False  # TPU-only placement flag
 
     @property
     def ring(self) -> RingConfig:
-        return RingConfig(quant=self.quant, impl=self.quant_impl)
+        return RingConfig(quant=self.quant, impl=self.quant_impl,
+                          buckets=self.sync_buckets,
+                          fused=self.fused_sync)
 
     @property
     def outer_opt(self) -> NesterovSGD:
@@ -59,36 +71,21 @@ class OuterState(NamedTuple):
     opt: NesterovState         # fp32 outer momentum
     residual: Any              # fp32 flat EF residual (zeros if disabled)
     outer_step: jnp.ndarray
-
-
-# -- flat <-> pytree helpers --------------------------------------------------
-
-
-def flatten_pytree(tree):
-    leaves, treedef = jax.tree.flatten(tree)
-    shapes = [l.shape for l in leaves]
-    sizes = [l.size for l in leaves]
-    flat = jnp.concatenate(
-        [l.reshape(-1).astype(jnp.float32) for l in leaves]) \
-        if leaves else jnp.zeros((0,), jnp.float32)
-
-    def unflatten(vec, like=None):
-        out, off = [], 0
-        ref_leaves = jax.tree.leaves(like) if like is not None else leaves
-        for s, shp, ref in zip(sizes, shapes, ref_leaves):
-            out.append(vec[off:off + s].reshape(shp).astype(ref.dtype))
-            off += s
-        return jax.tree.unflatten(treedef, out)
-
-    return flat, unflatten
+    anchor_flat: Any = None    # persistent flat fp32 anchor (SyncEngine);
+    #                            None -> re-derived from ``anchor``.  Must
+    #                            match the local view of ``anchor`` (i.e.
+    #                            leave it None inside shard_map regions
+    #                            where the anchor leaves are shards).
 
 
 def init_outer_state(params, cfg: DiLoCoConfig) -> OuterState:
     anchor = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    eng = SyncEngine.for_tree(anchor)
     opt = cfg.outer_opt.init(anchor)
-    n = sum(l.size for l in jax.tree.leaves(params))
-    residual = jnp.zeros((n if cfg.error_feedback else 0,), jnp.float32)
-    return OuterState(anchor, opt, residual, jnp.zeros((), jnp.int32))
+    residual = jnp.zeros(
+        (eng.numel if cfg.error_feedback else 0,), jnp.float32)
+    return OuterState(anchor, opt, residual, jnp.zeros((), jnp.int32),
+                      eng.flatten(anchor))
 
 
 def init_outer_state_sim(params_one_worker, cfg: DiLoCoConfig,
@@ -100,34 +97,53 @@ def init_outer_state_sim(params_one_worker, cfg: DiLoCoConfig,
     return st._replace(residual=jnp.zeros((k, n), jnp.float32))
 
 
+def _ef_roundtrip(pg: jnp.ndarray, cfg: DiLoCoConfig) -> jnp.ndarray:
+    """Quantize/dequantize roundtrip used by error feedback."""
+    if cfg.quant == "int8":
+        q = qops.quantize(pg, impl=cfg.quant_impl)
+        return qops.dequantize(q, impl=cfg.quant_impl)
+    q = compression.quantize4(pg)
+    return compression.dequantize4(q, pg.shape)
+
+
 def _pseudograd(params, state: OuterState, cfg: DiLoCoConfig):
-    """Flat fp32 pseudo-gradient (+EF residual), and the unflatten fn."""
-    p_flat, unflatten = flatten_pytree(params)
-    a_flat, _ = flatten_pytree(state.anchor)
+    """Flat fp32 pseudo-gradient (+EF residual) off the persistent
+    anchor buffer. Returns (pg, new_residual, theta_flat, anchor_flat)."""
+    eng = SyncEngine.for_tree(params)
+    p_flat = eng.flatten(params)
+    a_flat = (state.anchor_flat if state.anchor_flat is not None
+              else eng.flatten(state.anchor))
     pg = a_flat - p_flat
     new_residual = state.residual
     if cfg.error_feedback:
         pg = pg + state.residual
-        q = qops.quantize(pg, impl=cfg.quant_impl) if cfg.quant == "int8" \
-            else compression.quantize4(pg)
-        deq = (qops.dequantize(q, impl=cfg.quant_impl)
-               if cfg.quant == "int8"
-               else compression.dequantize4(q, pg.shape))
+        deq = _ef_roundtrip(pg, cfg)
         new_residual = pg - deq
         pg = deq
-    return pg, new_residual, unflatten
+    return pg, new_residual, p_flat, a_flat
 
 
 def _apply_outer(reduced_pg_flat, params, state: OuterState,
-                 cfg: DiLoCoConfig, new_residual):
-    delta = flatten_pytree(state.anchor)[1](
-        reduced_pg_flat, like=state.anchor)
-    new_anchor, new_opt = cfg.outer_opt.update(delta, state.opt,
-                                               state.anchor)
-    new_params = jax.tree.map(
-        lambda a, p: a.astype(p.dtype), new_anchor, params)
+                 cfg: DiLoCoConfig, new_residual, a_flat):
+    """Flat-space outer Nesterov step + a single unflatten per output
+    tree (bit-identical to the per-leaf formulation)."""
+    eng = SyncEngine.for_tree(state.anchor)
+    m_flat = eng.flatten(state.opt.momentum)
+    new_a_flat, new_m_flat = cfg.outer_opt.update_flat(
+        reduced_pg_flat, m_flat, a_flat)
+    new_anchor = eng.unflatten(new_a_flat)
+    new_opt = NesterovState(eng.unflatten(new_m_flat))
+    new_params = eng.unflatten(new_a_flat, like=params)
     return new_params, OuterState(new_anchor, new_opt, new_residual,
-                                  state.outer_step + 1)
+                                  state.outer_step + 1, new_a_flat)
+
+
+def _fused_src_ok(cfg: DiLoCoConfig) -> bool:
+    """The fused first-hop transmit sends quantize(w*(anchor-theta))
+    straight off the model buffers — only valid when the wire payload IS
+    the raw pseudo-gradient (no EF rewrite) and the ring is int8."""
+    return cfg.fused_sync and cfg.quant == "int8" and \
+        not cfg.error_feedback
 
 
 # -- distributed path (inside shard_map, manual over `axis_name`) ------------
@@ -137,10 +153,12 @@ def outer_sync(params, state: OuterState, cfg: DiLoCoConfig,
                axis_name: str, ring_order: Sequence[int] | None = None,
                weight: jnp.ndarray | None = None):
     """One DiLoCo outer step for this worker. Returns (params', state')."""
-    pg, new_residual, _ = _pseudograd(params, state, cfg)
+    pg, new_residual, p_flat, a_flat = _pseudograd(params, state, cfg)
+    fused_src = (a_flat, p_flat) if _fused_src_ok(cfg) else None
     reduced = ring_all_reduce(pg, axis_name, ring_order=ring_order,
-                              cfg=cfg.ring, weight=weight)
-    return _apply_outer(reduced, params, state, cfg, new_residual)
+                              cfg=cfg.ring, weight=weight,
+                              fused_src=fused_src)
+    return _apply_outer(reduced, params, state, cfg, new_residual, a_flat)
 
 
 # -- single-process simulation (stacked workers) ------------------------------
@@ -150,23 +168,35 @@ def outer_sync_sim(stacked_params, state: OuterState, cfg: DiLoCoConfig,
                    ring_order: Sequence[int] | None = None,
                    weights: jnp.ndarray | None = None):
     """Mirror of ``outer_sync`` over stacked (k, ...) worker params with a
-    SHARED outer state. Residuals are per-worker when EF is on."""
+    SHARED outer state. Residuals are per-worker when EF is on.
+
+    The anchor flatten is hoisted out of the worker dimension (the seed
+    re-flattened the full anchor pytree once per worker inside a vmap);
+    per-worker work is a single vmapped flatten + subtract.
+    """
     k = jax.tree.leaves(stacked_params)[0].shape[0]
-
-    def per_worker(params_i, residual_i):
-        st = state._replace(residual=residual_i)
-        return _pseudograd(params_i, st, cfg)[:2]
-
-    residuals = (state.residual if cfg.error_feedback
-                 else jnp.zeros((k, 0), jnp.float32))
-    pgs, new_residuals = jax.vmap(per_worker)(stacked_params, residuals)
-    reduced = simulate_ring_all_reduce(pgs, ring_order=ring_order,
-                                       cfg=cfg.ring, weights=weights)
-    # every worker's reduced copy is identical -> apply outer once
     any_params = jax.tree.map(lambda p: p[0], stacked_params)
+    eng = SyncEngine.for_tree(any_params)
+
+    a_flat = (state.anchor_flat if state.anchor_flat is not None
+              else eng.flatten(state.anchor))
+    p_flats = jax.vmap(eng.flatten)(stacked_params)
+    pgs = a_flat[None, :] - p_flats
+    new_residuals = state.residual
+    if cfg.error_feedback:
+        pgs = pgs + state.residual
+        deqs = jax.vmap(lambda pg: _ef_roundtrip(pg, cfg))(pgs)
+        new_residuals = pgs - deqs
+        pgs = deqs
+
+    fused_src = (a_flat, p_flats) if _fused_src_ok(cfg) else None
+    reduced = simulate_ring_all_reduce(pgs, ring_order=ring_order,
+                                       cfg=cfg.ring, weights=weights,
+                                       fused_src=fused_src)
+    # every worker's reduced copy is identical -> apply outer once
     new_params, new_state = _apply_outer(
         reduced[0], any_params, state._replace(residual=new_residuals),
-        cfg, new_residuals)
+        cfg, new_residuals, a_flat)
     stacked_new = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (k,) + p.shape), new_params)
     return stacked_new, new_state
@@ -175,7 +205,8 @@ def outer_sync_sim(stacked_params, state: OuterState, cfg: DiLoCoConfig,
 def sync_wire_bytes(params, n_workers: int, cfg: DiLoCoConfig) -> int:
     """Per-worker wire bytes of ONE outer sync (benchmark helper)."""
     n = sum(l.size for l in jax.tree.leaves(params))
-    return ring_wire_bytes(n, n_workers, cfg.quant)
+    return ring_wire_bytes(n, n_workers, cfg.quant,
+                           buckets=cfg.sync_buckets)
 
 
 def bandwidth_reduction_factor(cfg: DiLoCoConfig,

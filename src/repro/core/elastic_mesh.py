@@ -117,10 +117,8 @@ class ElasticDeviceMesh:
         devices = np.asarray(self.mesh.devices).reshape(-1)[:need]
         new_shape = tuple(new_diloco_size if a == self.diloco_axis
                           else shape[a] for a in axes)
-        mesh = jax.make_mesh(
-            new_shape, tuple(axes),
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-            devices=devices)
+        from repro.compat import make_mesh
+        mesh = make_mesh(new_shape, tuple(axes), devices=devices)
         out = ElasticDeviceMesh(mesh, self.diloco_axis)
         out.slots = SlotAssignment(new_diloco_size)
         for nid, slot in sorted(self.slots.slot_of.items(),

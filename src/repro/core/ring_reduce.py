@@ -20,11 +20,27 @@ The paper's scheme, mapped to TPU collectives:
     the total live weight (paper §2.4: joiners enter with zero
     pseudo-gradient; failed workers are excluded from the average).
 
+Fused + bucketed sync engine (see ``docs/sync_pipeline.md``):
+
+  * each per-hop chunk is split into ``RingConfig.buckets`` sub-buckets
+    with independent codebooks and independent ``ppermute``s, so the
+    quantization of bucket ``i+1`` is data-independent of the transfer
+    of bucket ``i`` and the compiler can overlap compress and
+    communicate (the paper's pipelined all-reduce);
+  * the reduce-scatter accumulation runs through the fused
+    ``ops.dequantize_add`` (decode + accumulate in one memory pass);
+  * when the caller provides ``fused_src=(anchor_flat, theta_flat)``
+    the FIRST reduce-scatter hop quantizes straight off the model
+    buffers via the fused ``ops.quantize_pseudograd`` (anchor - theta,
+    scaled by the elastic weight, encoded in a single HBM trip) instead
+    of re-reading the materialized pseudo-gradient.
+
 Two implementations share all chunk/quant helpers and are tested for
 exact equivalence:
   * ``ring_all_reduce``          — per-device, inside shard_map;
-  * ``simulate_ring_all_reduce`` — stacked (k, D) single-process mirror,
-    used by the CPU cluster simulator and the unit tests.
+  * ``simulate_ring_all_reduce`` — stacked (k, D) single-process mirror
+    (``vmap`` over workers, ``fori_loop`` over hops), used by the CPU
+    cluster simulator and the unit tests.
 """
 from __future__ import annotations
 
@@ -35,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.kernels import ops as qops
 from repro.kernels.ref import NUM_BUCKETS
 
@@ -44,44 +61,59 @@ class RingConfig:
     quant: str = "int8"          # 'int8' | 'fp32' (paper baseline) | 'int4'
     impl: str = "jnp"            # quant backend: 'jnp' | 'pallas'
     average: bool = True
+    buckets: int = 1             # sub-buckets per chunk-hop (pipelining)
+    fused: bool = True           # fused dequantize_add / pseudograd tx
 
 
 def _bytes_per_elem(quant: str) -> float:
     return {"int8": 1.0, "int4": 0.5, "fp32": 4.0}[quant]
 
 
-def ring_wire_bytes(numel: int, n_workers: int, quant: str = "int8") -> int:
+def ring_wire_bytes(numel: int, n_workers: int, quant: str = "int8",
+                    buckets: int = 1) -> int:
     """Per-worker bytes on the wire for one all-reduce (both phases)."""
     if n_workers <= 1:
         return 0
+    # mirror _pad_to_chunks: the chunk is rounded up to a multiple of
+    # the bucket count, so padding elements ride the wire too
     chunk = -(-numel // n_workers)
+    chunk = -(-chunk // buckets) * buckets
     payload = chunk * _bytes_per_elem(quant)
-    sideband = 0 if quant == "fp32" else 4 * NUM_BUCKETS
+    sideband = 0 if quant == "fp32" else 4 * NUM_BUCKETS * buckets
     return int(2 * (n_workers - 1) * (payload + sideband))
 
 
-# -- chunk helpers -----------------------------------------------------------
+# -- chunk/bucket helpers -----------------------------------------------------
 
 
-def _pad_to_chunks(x: jnp.ndarray, n: int) -> tuple[jnp.ndarray, int]:
+def _pad_to_chunks(x: jnp.ndarray, n: int,
+                   buckets: int = 1) -> tuple[jnp.ndarray, int, int]:
+    """Pad the last dim so it splits into ``n`` chunks of ``buckets``
+    equal sub-buckets. Returns (padded, chunk, bucket_size)."""
     size = x.shape[-1]
     chunk = -(-size // n)
+    bsize = -(-chunk // buckets)
+    chunk = bsize * buckets
     pad = n * chunk - size
     if pad:
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-    return x, chunk
+    return x, chunk, bsize
 
 
-def _get_chunk(acc: jnp.ndarray, idx, chunk: int) -> jnp.ndarray:
-    return jax.lax.dynamic_slice_in_dim(acc, idx * chunk, chunk, axis=-1)
+def _get_bucket(acc: jnp.ndarray, idx, b: int, chunk: int,
+                bsize: int) -> jnp.ndarray:
+    return jax.lax.dynamic_slice_in_dim(
+        acc, idx * chunk + b * bsize, bsize, axis=-1)
 
 
-def _set_chunk(acc: jnp.ndarray, idx, val: jnp.ndarray, chunk: int):
-    return jax.lax.dynamic_update_slice_in_dim(acc, val, idx * chunk, axis=-1)
+def _set_bucket(acc: jnp.ndarray, idx, b: int, val: jnp.ndarray,
+                chunk: int, bsize: int) -> jnp.ndarray:
+    return jax.lax.dynamic_update_slice_in_dim(
+        acc, val, idx * chunk + b * bsize, axis=-1)
 
 
 def _tx_quant(val: jnp.ndarray, cfg: RingConfig):
-    """Quantize a chunk for transmission -> (payload pytree, dequant fn)."""
+    """Quantize a bucket for transmission -> (payload pytree, dequant fn)."""
     if cfg.quant == "fp32":
         return (val,), lambda p: p[0]
     if cfg.quant == "int4":
@@ -94,20 +126,36 @@ def _tx_quant(val: jnp.ndarray, cfg: RingConfig):
         qops.Quantized(*p), impl=cfg.impl)
 
 
+def _rx_add(payload, deq, acc_val: jnp.ndarray, cfg: RingConfig):
+    """Reduce-scatter accumulate: fused decode+add on the int8 path."""
+    if cfg.fused and cfg.quant == "int8":
+        return qops.dequantize_add(qops.Quantized(*payload), acc_val,
+                                   impl=cfg.impl)
+    return acc_val + deq(payload)
+
+
+def _int8_deq(cfg: RingConfig):
+    return lambda p: qops.dequantize(qops.Quantized(*p), impl=cfg.impl)
+
+
 # -- distributed ring (inside shard_map, manual over `axis_name`) ------------
 
 
 def ring_all_reduce(x: jnp.ndarray, axis_name: str,
                     ring_order: Sequence[int] | None = None,
                     cfg: RingConfig = RingConfig(),
-                    weight: jnp.ndarray | None = None) -> jnp.ndarray:
+                    weight: jnp.ndarray | None = None,
+                    fused_src=None) -> jnp.ndarray:
     """All-reduce (mean by default) of flat fp32 ``x`` over ``axis_name``.
 
     Must be called inside a shard_map region where ``axis_name`` is a
     manual axis. ``ring_order`` is the static bandwidth-optimized
     permutation of axis indices (defaults to the identity ring).
+    ``fused_src=(anchor_flat, theta_flat)`` (both shaped like ``x``,
+    with ``x == anchor_flat - theta_flat``) routes the first-hop
+    transmit through the fused pseudo-gradient quantizer.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     orig_size = x.shape[-1]
     x = x.astype(jnp.float32)
     if weight is None:
@@ -123,31 +171,60 @@ def ring_all_reduce(x: jnp.ndarray, axis_name: str,
     perm_fwd = [(order[p], order[(p + 1) % n]) for p in range(n)]
     pos = jnp.asarray(inv)[jax.lax.axis_index(axis_name)]
 
-    acc, chunk = _pad_to_chunks(x * weight, n)
+    nb = max(1, cfg.buckets)
+    acc, chunk, bsize = _pad_to_chunks(x * weight, n, nb)
+    use_fused_tx = (fused_src is not None and cfg.fused
+                    and cfg.quant == "int8")
+    if use_fused_tx:
+        a_flat, t_flat = fused_src
+        pad = acc.shape[-1] - orig_size
+        a_flat = jnp.pad(a_flat.astype(jnp.float32), (0, pad))
+        t_flat = jnp.pad(t_flat.astype(jnp.float32), (0, pad))
 
     def shift(payload):
         return tuple(jax.lax.ppermute(p, axis_name, perm_fwd)
                      for p in payload)
 
-    # Phase 1: reduce-scatter (n-1 quantized hops, fp32 accumulation)
+    # Phase 1: reduce-scatter (n-1 hops, fp32 accumulation). All buckets
+    # of a hop are quantized before any is shifted: bucket i+1's encode
+    # has no data dependency on bucket i's ppermute, so the scheduler
+    # overlaps compression with transmission (pipelined all-reduce).
     for s in range(n - 1):
         send_idx = (pos - s) % n
-        payload, deq = _tx_quant(_get_chunk(acc, send_idx, chunk), cfg)
-        payload = shift(payload)
         recv_idx = (pos - s - 1) % n
-        recvd = deq(payload)
-        acc = _set_chunk(acc, recv_idx,
-                         _get_chunk(acc, recv_idx, chunk) + recvd, chunk)
+        staged = []
+        for b in range(nb):
+            if s == 0 and use_fused_tx:
+                start = send_idx * chunk + b * bsize
+                a_c = jax.lax.dynamic_slice_in_dim(a_flat, start, bsize)
+                t_c = jax.lax.dynamic_slice_in_dim(t_flat, start, bsize)
+                q = qops.quantize_pseudograd(a_c, t_c, scale=weight,
+                                             impl=cfg.impl)
+                staged.append((tuple(q), _int8_deq(cfg)))
+            else:
+                staged.append(_tx_quant(
+                    _get_bucket(acc, send_idx, b, chunk, bsize), cfg))
+        for b, (payload, deq) in enumerate(staged):
+            payload = shift(payload)
+            acc_val = _get_bucket(acc, recv_idx, b, chunk, bsize)
+            acc = _set_bucket(acc, recv_idx, b,
+                              _rx_add(payload, deq, acc_val, cfg),
+                              chunk, bsize)
 
     # Phase 2: all-gather. The owner quantizes its reduced chunk ONCE and
-    # everyone (owner included) dequantizes the same codes.
+    # everyone (owner included) dequantizes the same forwarded codes.
     own_idx = (pos + 1) % n
-    payload, deq = _tx_quant(_get_chunk(acc, own_idx, chunk), cfg)
-    acc = _set_chunk(acc, own_idx, deq(payload), chunk)
+    staged = []
+    for b in range(nb):
+        payload, deq = _tx_quant(
+            _get_bucket(acc, own_idx, b, chunk, bsize), cfg)
+        acc = _set_bucket(acc, own_idx, b, deq(payload), chunk, bsize)
+        staged.append((payload, deq))
     for s in range(n - 1):
-        payload = shift(payload)
         recv_idx = (pos - s) % n
-        acc = _set_chunk(acc, recv_idx, deq(payload), chunk)
+        staged = [(shift(payload), deq) for payload, deq in staged]
+        for b, (payload, deq) in enumerate(staged):
+            acc = _set_bucket(acc, recv_idx, b, deq(payload), chunk, bsize)
 
     out = acc[..., :orig_size]
     if cfg.average:
@@ -158,16 +235,61 @@ def ring_all_reduce(x: jnp.ndarray, axis_name: str,
 # -- single-process mirror (stacked workers) ---------------------------------
 
 
+def _quant_rows(vals: jnp.ndarray, cfg: RingConfig):
+    """Row-wise transmit quantization of (k, bsize) stacked buckets ->
+    (payload tuple of stacked arrays, row-wise dequant fn). vmap over
+    workers is bit-identical to per-row calls on XLA:CPU (tested)."""
+    bsize = vals.shape[-1]
+    if cfg.quant == "fp32":
+        return (vals,), lambda p: p[0]
+    if cfg.quant == "int4":
+        from repro.core import compression
+        q = jax.vmap(compression.quantize4)(vals)
+        return tuple(q), lambda p: jax.vmap(
+            lambda pk, bk: compression.dequantize4(
+                compression.Quantized4(pk, bk), (bsize,)))(*p)
+    q = jax.vmap(lambda v: qops.quantize(v, impl=cfg.impl))(vals)
+    return tuple(q), lambda p: jax.vmap(
+        lambda c, bk: qops.dequantize(qops.Quantized(c, bk),
+                                      impl=cfg.impl))(*p)
+
+
+def _rx_add_rows(payload, deq, acc_vals: jnp.ndarray, cfg: RingConfig):
+    if cfg.fused and cfg.quant == "int8":
+        return jax.vmap(lambda c, bk, a: qops.dequantize_add(
+            qops.Quantized(c, bk), a, impl=cfg.impl))(*payload, acc_vals)
+    return acc_vals + deq(payload)
+
+
+def _get_bucket_rows(accs, idxs, b: int, chunk: int, bsize: int):
+    return jax.vmap(lambda a, i: jax.lax.dynamic_slice_in_dim(
+        a, i * chunk + b * bsize, bsize, axis=-1))(accs, idxs)
+
+
+def _set_bucket_rows(accs, idxs, b: int, vals, chunk: int, bsize: int):
+    return jax.vmap(lambda a, i, v: jax.lax.dynamic_update_slice_in_dim(
+        a, v, i * chunk + b * bsize, axis=-1))(accs, idxs, vals)
+
+
+def _roll1(payload):
+    """Position p receives from position p-1."""
+    return tuple(jnp.roll(p, 1, axis=0) for p in payload)
+
+
 def simulate_ring_all_reduce(xs: jnp.ndarray,
                              ring_order: Sequence[int] | None = None,
                              cfg: RingConfig = RingConfig(),
-                             weights: jnp.ndarray | None = None
-                             ) -> jnp.ndarray:
+                             weights: jnp.ndarray | None = None,
+                             fused_src=None) -> jnp.ndarray:
     """Exact single-process mirror of ``ring_all_reduce``.
 
     ``xs``: (k, D) stacked per-worker vectors. Returns (k, D) results —
     identical across workers (and bit-identical to the distributed path,
-    which the tests assert).
+    which the tests assert). Workers are handled by ``vmap`` and the
+    hop loops by ``lax.fori_loop`` — no per-hop Python copies of the
+    stacked accumulator. ``fused_src=(anchor_flat, thetas)`` mirrors the
+    distributed fused first-hop transmit (``anchor_flat``: (D,) shared,
+    ``thetas``: (k, D) per-worker).
     """
     k, orig_size = xs.shape
     xs = xs.astype(jnp.float32)
@@ -181,54 +303,86 @@ def simulate_ring_all_reduce(xs: jnp.ndarray,
 
     order = tuple(ring_order) if ring_order is not None else tuple(range(k))
     assert sorted(order) == list(range(k))
+    perm = np.asarray(order)
+    inv = np.argsort(perm)  # worker w sits at ring position inv[w]
+
+    nb = max(1, cfg.buckets)
     # accs indexed by RING POSITION p: acc[p] belongs to worker order[p]
-    accs_list = [xs[order[p]] * weights[order[p]] for p in range(k)]
-    accs = jnp.stack(accs_list)
-    accs, chunk = _pad_to_chunks(accs, k)
+    w_pos = weights[jnp.asarray(perm)]
+    accs = xs[perm] * w_pos[:, None]
+    accs, chunk, bsize = _pad_to_chunks(accs, k, nb)
+    positions = jnp.arange(k)
 
-    def quant_chunks(vals):
-        payloads, deqs = [], []
-        for p in range(k):
-            pay, deq = _tx_quant(vals[p], cfg)
-            payloads.append(pay)
-            deqs.append(deq)
-        return payloads, deqs
+    use_fused_tx = (fused_src is not None and cfg.fused
+                    and cfg.quant == "int8")
+    if use_fused_tx:
+        a_flat, thetas = fused_src
+        pad = accs.shape[-1] - orig_size
+        a_flat = jnp.pad(a_flat.astype(jnp.float32), (0, pad))
+        t_pos = jnp.pad(thetas.astype(jnp.float32)[perm],
+                        [(0, 0), (0, pad)])
 
-    # Phase 1: reduce-scatter
-    for s in range(k - 1):
-        sends = [_get_chunk(accs[p], (p - s) % k, chunk) for p in range(k)]
-        payloads, deqs = quant_chunks(sends)
-        new = []
-        for p in range(k):
-            src = (p - 1) % k  # position p receives from position p-1
-            recv_idx = (p - s - 1) % k
-            val = _get_chunk(accs[p], recv_idx, chunk) + deqs[src](
-                payloads[src])
-            new.append(_set_chunk(accs[p], recv_idx, val, chunk))
-        accs = jnp.stack(new)
+    def rs_hop(s, accs, fused: bool):
+        """One reduce-scatter hop across all positions/buckets."""
+        send_idx = (positions - s) % k
+        recv_idx = (positions - s - 1) % k
+        staged = []
+        for b in range(nb):
+            if fused:
+                starts = send_idx * chunk + b * bsize
+                a_rows = jax.vmap(lambda i: jax.lax.dynamic_slice_in_dim(
+                    a_flat, i, bsize, axis=-1))(starts)
+                t_rows = jax.vmap(
+                    lambda t, i: jax.lax.dynamic_slice_in_dim(
+                        t, i, bsize, axis=-1))(t_pos, starts)
+                q = jax.vmap(lambda a, t, w: qops.quantize_pseudograd(
+                    a, t, scale=w, impl=cfg.impl))(a_rows, t_rows, w_pos)
+                deq = lambda p: jax.vmap(
+                    lambda c, bk: qops.dequantize(
+                        qops.Quantized(c, bk), impl=cfg.impl))(*p)
+                staged.append((tuple(q), deq))
+            else:
+                staged.append(_quant_rows(
+                    _get_bucket_rows(accs, send_idx, b, chunk, bsize),
+                    cfg))
+        for b, (payload, deq) in enumerate(staged):
+            payload = _roll1(payload)
+            acc_vals = _get_bucket_rows(accs, recv_idx, b, chunk, bsize)
+            accs = _set_bucket_rows(
+                accs, recv_idx, b,
+                _rx_add_rows(payload, deq, acc_vals, cfg),
+                chunk, bsize)
+        return accs
 
-    # Phase 2: all-gather with forwarded codes
-    sends = [_get_chunk(accs[p], (p + 1) % k, chunk) for p in range(k)]
-    payloads, deqs = quant_chunks(sends)
-    accs = jnp.stack([
-        _set_chunk(accs[p], (p + 1) % k, deqs[p](payloads[p]), chunk)
-        for p in range(k)])
-    bufs = payloads
-    buf_deqs = deqs
-    for s in range(k - 1):
-        nbufs = [bufs[(p - 1) % k] for p in range(k)]
-        ndeqs = [buf_deqs[(p - 1) % k] for p in range(k)]
-        new = []
-        for p in range(k):
-            recv_idx = (p - s) % k
-            new.append(_set_chunk(accs[p], recv_idx,
-                                  ndeqs[p](nbufs[p]), chunk))
-        accs = jnp.stack(new)
-        bufs, buf_deqs = nbufs, ndeqs
+    # Phase 1: reduce-scatter. Hop 0 is peeled so the fused
+    # pseudo-gradient transmit (different payload source) stays out of
+    # the uniform fori_loop body.
+    accs = rs_hop(0, accs, use_fused_tx)
+    if k > 2:
+        accs = jax.lax.fori_loop(
+            1, k - 1, lambda s, a: rs_hop(s, a, False), accs)
+
+    # Phase 2: all-gather with forwarded codes, one fori_loop per bucket
+    # (payload arrays ride the loop carry; the row deq fn is static).
+    own_idx = (positions + 1) % k
+    for b in range(nb):
+        vals = _get_bucket_rows(accs, own_idx, b, chunk, bsize)
+        payload, deq = _quant_rows(vals, cfg)
+        accs = _set_bucket_rows(accs, own_idx, b, deq(payload),
+                                chunk, bsize)
+
+        def ag_hop(s, carry, b=b, deq=deq):
+            accs, payload = carry
+            payload = _roll1(payload)
+            recv_idx = (positions - s) % k
+            accs = _set_bucket_rows(accs, recv_idx, b, deq(payload),
+                                    chunk, bsize)
+            return accs, payload
+
+        accs, _ = jax.lax.fori_loop(0, k - 1, ag_hop, (accs, payload))
 
     out_pos = accs[..., :orig_size]
     if cfg.average:
         out_pos = out_pos / jnp.maximum(total_w, 1e-20)
     # out[worker w] lives at ring position inv[w]
-    inv = np.argsort(np.asarray(order))
     return out_pos[jnp.asarray(inv)]

@@ -1,0 +1,84 @@
+"""SyncEngine: bucketed, fused DiLoCo outer-sync pipeline state.
+
+The seed's outer step re-derived everything from pytrees on every call:
+``_pseudograd`` flattened BOTH the worker params and the anchor (the
+anchor twice — once for the pseudo-gradient, once more in
+``_apply_outer`` just to rebuild the unflatten closure), and the outer
+Nesterov update ran leaf-by-leaf on freshly unflattened trees.  Per
+outer step per worker that is several full-model HBM round-trips that
+have nothing to do with the actual math.
+
+``SyncEngine`` hoists all of it to construction time:
+
+  * the flatten **metadata** (treedef, shapes, sizes, offsets) is
+    computed once per (treedef, shapes) key and cached — ``unflatten``
+    never needs a reference flatten again;
+  * the **anchor lives as a persistent flat fp32 buffer**
+    (``OuterState.anchor_flat``, built once at ``init_outer_state``):
+    the pseudo-gradient is one subtract off the persistent buffer, and
+    the outer Nesterov step updates the buffer in place in flat space
+    (elementwise, so bit-identical to the per-leaf formulation) before
+    a single unflatten materializes the new anchor/param trees;
+  * the flat (anchor, theta) pair doubles as the source for the ring's
+    fused first-hop transmit (``ops.quantize_pseudograd``) so the
+    quantizer reads model memory, not a materialized pseudo-gradient.
+
+Engines are cheap static metadata — they hold no arrays — so the
+module-level cache never pins device memory.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ENGINES: dict[Any, "SyncEngine"] = {}
+
+
+class SyncEngine:
+    """Static flatten/unflatten metadata for one pytree structure."""
+
+    def __init__(self, treedef, shapes, dtypes):
+        self.treedef = treedef
+        self.shapes = tuple(tuple(s) for s in shapes)
+        self.dtypes = tuple(dtypes)
+        self.sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1
+                           for s in self.shapes)
+        self.offsets = tuple(np.cumsum((0,) + self.sizes).tolist())
+        self.numel = int(self.offsets[-1])
+
+    @classmethod
+    def for_tree(cls, tree) -> "SyncEngine":
+        """Engine for ``tree``'s structure (cached on treedef+shapes)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        dtypes = tuple(jnp.result_type(l) for l in leaves)
+        key = (treedef, shapes, dtypes)
+        eng = _ENGINES.get(key)
+        if eng is None:
+            eng = _ENGINES[key] = cls(treedef, shapes, dtypes)
+        return eng
+
+    # -- flat <-> tree -------------------------------------------------------
+
+    def flatten(self, tree) -> jnp.ndarray:
+        """Concat all leaves into one flat fp32 vector (vmap-safe)."""
+        leaves = jax.tree.leaves(tree)
+        if not leaves:
+            return jnp.zeros((0,), jnp.float32)
+        return jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+    def unflatten(self, vec: jnp.ndarray, like=None):
+        """Rebuild the pytree from a flat vector using only static
+        metadata. ``like`` supplies target dtypes (default: the
+        template's dtypes)."""
+        dtypes = ([jnp.result_type(l) for l in jax.tree.leaves(like)]
+                  if like is not None else self.dtypes)
+        out = []
+        for i, (shape, size) in enumerate(zip(self.shapes, self.sizes)):
+            out.append(vec[self.offsets[i]:self.offsets[i] + size]
+                       .reshape(shape).astype(dtypes[i]))
+        return jax.tree.unflatten(self.treedef, out)

@@ -57,10 +57,11 @@ def _encode_hist_body(scal_ref, x_ref, codes_ref, sums_ref, counts_ref, *,
     lo = scal_ref[0]
     inv_width = scal_ref[1]
     nvalid = scal_ref[2]
+    scale = scal_ref[3]
 
     x = x_ref[...].astype(jnp.float32)
     if fused_sub:
-        x = anchor_ref[...].astype(jnp.float32) - x
+        x = (anchor_ref[...].astype(jnp.float32) - x) * scale
 
     # global element index of every lane, for masking the tail padding
     row0 = pid * block_rows
@@ -114,10 +115,10 @@ def _pad_rows(flat: jnp.ndarray, block_rows: int) -> tuple[jnp.ndarray, int]:
 
 @functools.partial(
     jax.jit, static_argnames=("block_rows", "fused_sub", "interpret"))
-def _encode_hist_call(x_flat, anchor_flat, lo, width, nvalid, *,
+def _encode_hist_call(x_flat, anchor_flat, lo, width, nvalid, scale, *,
                       block_rows: int, fused_sub: bool, interpret: bool):
     x2d, nblocks = _pad_rows(x_flat, block_rows)
-    scal = jnp.stack([lo, 1.0 / width, jnp.float32(nvalid)])
+    scal = jnp.stack([lo, 1.0 / width, jnp.float32(nvalid), scale])
 
     in_specs = [
         pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -164,21 +165,24 @@ def encode_hist(x: jnp.ndarray, lo, width, *, block_rows: int = BLOCK_ROWS,
     flat = x.astype(jnp.float32).reshape(-1)
     codes2d, sums, counts = _encode_hist_call(
         flat, flat, jnp.float32(lo), jnp.float32(width), flat.size,
-        block_rows=block_rows, fused_sub=False, interpret=interpret)
+        jnp.float32(1.0), block_rows=block_rows, fused_sub=False,
+        interpret=interpret)
     codes = codes2d.reshape(-1)[: flat.size].reshape(x.shape)
     return codes.astype(jnp.uint8), sums, counts
 
 
 def pseudograd_encode_hist(anchor: jnp.ndarray, theta: jnp.ndarray, lo, width,
-                           *, block_rows: int = BLOCK_ROWS,
+                           *, scale=None, block_rows: int = BLOCK_ROWS,
                            interpret: bool | None = None):
-    """Fused (anchor - theta) encode: codes + histogram, one HBM pass."""
+    """Fused ``scale * (anchor - theta)`` encode: codes + histogram in one
+    HBM pass over (anchor, theta) — the pseudo-gradient never hits HBM."""
     if interpret is None:
         interpret = _interpret_default()
     tf = theta.astype(jnp.float32).reshape(-1)
     af = anchor.astype(jnp.float32).reshape(-1)
     codes2d, sums, counts = _encode_hist_call(
         tf, af, jnp.float32(lo), jnp.float32(width), tf.size,
+        jnp.float32(1.0 if scale is None else scale),
         block_rows=block_rows, fused_sub=True, interpret=interpret)
     codes = codes2d.reshape(-1)[: tf.size].reshape(theta.shape)
     return codes.astype(jnp.uint8), sums, counts

@@ -8,6 +8,8 @@
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -25,20 +27,33 @@ def quantize(x: jnp.ndarray, *, impl: str = "pallas") -> Quantized:
     return Quantized(codes, ref.make_codebook(sums, counts, lo, width))
 
 
-def quantize_pseudograd(anchor: jnp.ndarray, theta: jnp.ndarray, *,
-                        impl: str = "pallas") -> Quantized:
-    """Fused (anchor - theta) + quantize."""
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _quantize_pseudograd(anchor, theta, scale, *, impl: str):
+    af = anchor.astype(jnp.float32)
+    tf = theta.astype(jnp.float32)
     if impl == "jnp":
-        return ref.quantize_pseudograd(anchor, theta)
-    diff_mu = jnp.mean(anchor.astype(jnp.float32)) - jnp.mean(
-        theta.astype(jnp.float32))
-    # lo/width need stats of (anchor - theta); one cheap fused pass:
-    pg = anchor.astype(jnp.float32) - theta.astype(jnp.float32)
+        return ref.quantize_pseudograd(af, tf, scale=scale)
+    # lo/width need stats of scale*(anchor - theta). Computed inside this
+    # jit, XLA fuses the subtract/scale straight into the mean/std
+    # reductions, so the pseudo-gradient is never materialized in HBM:
+    # one stats trip over (anchor, theta), then the fused Pallas encode
+    # reads (anchor, theta) once more and emits codes + histogram.
+    pg = af - tf
+    if scale is not None:
+        pg = pg * scale
     lo, width = ref.quant_params(pg)
-    del diff_mu
     codes, sums, counts = int8_quant.pseudograd_encode_hist(
-        anchor, theta, lo, width)
+        anchor, theta, lo, width, scale=scale)
     return Quantized(codes, ref.make_codebook(sums, counts, lo, width))
+
+
+def quantize_pseudograd(anchor: jnp.ndarray, theta: jnp.ndarray, *,
+                        scale=None, impl: str = "pallas") -> Quantized:
+    """Fused ``scale * (anchor - theta)`` + quantize, single HBM trip per
+    input — bit-identical to ``quantize(scale * (anchor - theta))``
+    (``scale=None`` means unscaled; it is the elastic worker weight when
+    the ring's transmit path calls this)."""
+    return _quantize_pseudograd(anchor, theta, scale, impl=impl)
 
 
 def dequantize(q: Quantized, *, dtype=jnp.float32,

@@ -87,7 +87,12 @@ def dequantize(q: Quantized, dtype=jnp.float32) -> jnp.ndarray:
     return q.codebook[q.codes.astype(jnp.int32)].astype(dtype)
 
 
-def quantize_pseudograd(anchor: jnp.ndarray, theta: jnp.ndarray) -> Quantized:
-    """Fused pseudo-gradient (anchor - theta) + quantize — oracle for the
-    fused Pallas kernel."""
-    return quantize(anchor.astype(jnp.float32) - theta.astype(jnp.float32))
+def quantize_pseudograd(anchor: jnp.ndarray, theta: jnp.ndarray,
+                        scale=None) -> Quantized:
+    """Fused pseudo-gradient ``scale * (anchor - theta)`` + quantize —
+    oracle for the fused Pallas kernel. ``scale`` is the elastic worker
+    weight folded into the transmit path (None = unweighted)."""
+    pg = anchor.astype(jnp.float32) - theta.astype(jnp.float32)
+    if scale is not None:
+        pg = pg * jnp.float32(scale)
+    return quantize(pg)

@@ -11,17 +11,15 @@ axis is the DiLoCo axis (slow inter-pod fabric).
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int = 1, axis: str = "data"):
     """Small local mesh for tests/examples on CPU devices."""
-    return jax.make_mesh((n,), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((n,), (axis,))

@@ -41,3 +41,13 @@ class NesterovSGD:
         new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
         new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
         return new_params, NesterovState(new_m)
+
+    def update_flat(self, delta_flat: jnp.ndarray, m_flat: jnp.ndarray,
+                    p_flat: jnp.ndarray):
+        """Flat-buffer mirror of ``update`` used by the SyncEngine's
+        persistent fp32 anchor: same elementwise math (bit-identical to
+        the per-leaf form), returns (new_p_flat, new_m_flat)."""
+        d = delta_flat.astype(jnp.float32)
+        m_new = self.momentum * m_flat + d
+        step = self.momentum * m_new + d  # Nesterov look-ahead
+        return p_flat - self.lr * step, m_new

@@ -72,7 +72,7 @@ class ElasticTrainer:
         self.outer = dl.init_outer_state_sim(init_params, cfg.diloco, k)
         self.bw = topology.BandwidthMonitor(k)
         self.ring_order = tuple(range(k))
-        self.inner_step_jit = jax.jit(self._inner_step)
+        self.inner_phase_jit = jax.jit(self._inner_phase)
         self.history: list[dict] = []
         self._pipelines = {}
 
@@ -92,6 +92,20 @@ class ElasticTrainer:
                 active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
             new, old)
         return keep(new_p, params), keep(new_o, opt_state), metrics
+
+    def _inner_phase(self, params, opt_state, batches, active):
+        """All H inner steps as ONE ``lax.scan`` over pre-stacked
+        (H, k, ...) batches: a single jit dispatch per outer step, and
+        only the (H, k) loss trace is retained on device instead of H
+        full metric pytrees."""
+        def body(carry, batch):
+            p, o = carry
+            p, o, metrics = self._inner_step(p, o, batch, active)
+            return (p, o), metrics["loss"]
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), batches)
+        return params, opt_state, losses
 
     def _pipeline(self, slot: int) -> TokenPipeline:
         if slot not in self._pipelines:
@@ -115,12 +129,11 @@ class ElasticTrainer:
             active = jnp.asarray(
                 self.slots.live_mask(plan["live"]), jnp.float32)
 
-            losses = []
-            for i in range(h):
-                batch = self._batches(global_step + i)
-                self.params, self.opt_state, m = self.inner_step_jit(
-                    self.params, self.opt_state, batch, active)
-                losses.append(m["loss"])
+            batches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[self._batches(global_step + i) for i in range(h)])
+            self.params, self.opt_state, losses = self.inner_phase_jit(
+                self.params, self.opt_state, batches, active)
             global_step += h
 
             # bandwidth-aware ring re-ordering (paper §2.5)
@@ -145,7 +158,7 @@ class ElasticTrainer:
             (self.params, self.outer), _, attempts = \
                 self.retry.run_collective(attempt, plan["live"])
 
-            mean_loss = float(jnp.stack(losses)[-1][
+            mean_loss = float(losses[-1][
                 jnp.asarray(weights) > 0].mean()) if np.any(
                 np.asarray(weights) > 0) else float("nan")
             rec = {"outer_step": t, "live": plan["live"],

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import diloco as dl
 from repro.models import common
 from repro.optim.adamw import AdamW, AdamWState
@@ -178,9 +179,9 @@ def build_train_step(model, plan, mesh, optimizer: AdamW):
         params, opt, metrics = inner(params, opt, unlift(batch))
         return TrainState(lift(params), lift(opt)), lift(metrics)
 
-    step = jax.shard_map(per_worker, mesh=mesh, in_specs=P(dax),
-                         out_specs=P(dax), check_vma=False,
-                         axis_names=frozenset({dax}))
+    step = compat.shard_map(per_worker, mesh=mesh, in_specs=P(dax),
+                            out_specs=P(dax), check_vma=False,
+                            axis_names=frozenset({dax}))
     return step, state_specs
 
 
@@ -247,7 +248,7 @@ def build_outer_sync(model, plan, mesh, diloco_cfg: dl.DiLoCoConfig,
     lead = lambda t: partition.with_leading(t, dax)
 
     def sync(params_stacked, outer_state: dl.OuterState, weights):
-        new_p, anchor, momentum, residual, ostep = jax.shard_map(
+        new_p, anchor, momentum, residual, ostep = compat.shard_map(
             per_worker, mesh=mesh,
             in_specs=(lead(pspecs), pspecs, pspecs, P(dax), P(),
                       P(dax)),

@@ -1,0 +1,42 @@
+"""Optional-`hypothesis` shim for the property tests.
+
+The container this repo is developed in does not ship `hypothesis`
+(and the no-new-deps rule forbids installing it). Property tests
+import `given`/`settings`/`st` from here: with hypothesis installed
+(e.g. in CI) they run as real property tests; without it they are
+skipped instead of breaking collection for the whole module.
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis  # noqa: F401
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategies:
+        """Stand-in for hypothesis.strategies: every strategy factory
+        returns None (the tests are skipped before it matters)."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

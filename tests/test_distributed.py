@@ -20,6 +20,7 @@ def _run(body: str) -> str:
         sys.path.insert(0, {src!r})
         import jax, numpy as np, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro import compat
     """).format(src=_SRC) + textwrap.dedent(body)
     out = subprocess.run([sys.executable, "-c", prog],
                          capture_output=True, text=True, timeout=600)
@@ -30,23 +31,30 @@ def _run(body: str) -> str:
 def test_distributed_ring_bit_matches_simulation():
     print(_run("""
         from repro.core import ring_reduce
-        mesh = jax.make_mesh((8,), ("dp",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
         rng = np.random.default_rng(2)
-        xs = jnp.asarray(rng.normal(size=(8, 515)), jnp.float32)
-        order = (3, 1, 4, 0, 7, 5, 2, 6)
-        for quant in ["fp32", "int8", "int4"]:
-            cfg = ring_reduce.RingConfig(quant=quant)
-            def f(x):
-                return ring_reduce.ring_all_reduce(
-                    x[0], "dp", ring_order=order, cfg=cfg)[None]
-            dist = jax.jit(jax.shard_map(
-                f, mesh=mesh, in_specs=P("dp"), out_specs=P("dp"),
-                check_vma=False))(xs)
-            sim = ring_reduce.simulate_ring_all_reduce(
-                xs, ring_order=order, cfg=cfg)
-            np.testing.assert_array_equal(np.asarray(dist),
-                                          np.asarray(sim))
+        full = jnp.asarray(rng.normal(size=(8, 515)), jnp.float32)
+        orders = {1: (0,), 2: (1, 0), 4: (2, 0, 3, 1),
+                  8: (3, 1, 4, 0, 7, 5, 2, 6)}
+        for k in [1, 2, 4, 8]:
+            mesh = jax.sharding.Mesh(
+                np.asarray(jax.devices()[:k]), ("dp",))
+            xs = full[:k]
+            order = orders[k]
+            for quant in ["fp32", "int8", "int4"]:
+                for buckets in ([1, 3] if quant == "int8" else [1]):
+                    cfg = ring_reduce.RingConfig(quant=quant,
+                                                 buckets=buckets)
+                    def f(x):
+                        return ring_reduce.ring_all_reduce(
+                            x[0], "dp", ring_order=order, cfg=cfg)[None]
+                    dist = jax.jit(compat.shard_map(
+                        f, mesh=mesh, in_specs=P("dp"),
+                        out_specs=P("dp"), check_vma=False))(xs)
+                    sim = ring_reduce.simulate_ring_all_reduce(
+                        xs, ring_order=order, cfg=cfg)
+                    np.testing.assert_array_equal(
+                        np.asarray(dist), np.asarray(sim),
+                        err_msg=f"k={k} quant={quant} B={buckets}")
         print("RING-EQUIV-OK")
     """))
 
@@ -54,8 +62,7 @@ def test_distributed_ring_bit_matches_simulation():
 def test_distributed_outer_sync_matches_simulation():
     out = _run("""
         from repro.core import diloco
-        mesh = jax.make_mesh((8,), ("dp",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("dp",))
         rng = np.random.default_rng(3)
         params = {"a": jnp.asarray(rng.normal(size=(8, 6, 7)),
                                    jnp.float32),
@@ -72,7 +79,7 @@ def test_distributed_outer_sync_matches_simulation():
                 jnp.zeros((), jnp.int32))
             np_, _ = diloco.outer_sync(pi, sti, dcfg, "dp")
             return jax.tree.map(lambda x: x[None], np_)
-        dist_p = jax.jit(jax.shard_map(
+        dist_p = jax.jit(compat.shard_map(
             sync, mesh=mesh, in_specs=(P("dp"), P(), P()),
             out_specs=P("dp"), check_vma=False))(
                 params, st.anchor, st.opt.momentum)
@@ -98,8 +105,7 @@ def test_shard_map_train_step_runs_and_reduces_loss():
         from repro.configs.base import ShapeConfig
         import dataclasses
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         cfg = CONFIGS["internlm2-1.8b"].reduced()
         shape = ShapeConfig("t", "train", 32, 8)
         plan = make_plan(cfg, shape, {"data": 4, "model": 2})
@@ -145,8 +151,7 @@ def test_full_manual_sync_with_sharded_params():
         from repro.configs.base import ShapeConfig
         from repro.sharding import make_plan
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         cfg = CONFIGS["internlm2-1.8b"].reduced()
         shape = ShapeConfig("t", "train", 32, 8)
         plan = make_plan(cfg, shape, {"data": 4, "model": 2})

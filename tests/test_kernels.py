@@ -1,12 +1,10 @@
 """Pallas int8 quantization kernels vs the pure-jnp oracle:
 shape/dtype sweeps + hypothesis property tests of the paper's scheme."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from hypo_compat import given, settings, st
 
 from repro.kernels import int8_quant, ops, ref
 

@@ -1,11 +1,10 @@
 """Int8/int4/fp32 ring all-reduce: exactness (fp32), error bounds
 (quantized), elastic weighting, ring-order invariance, worker
 consistency, wire-byte accounting."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from hypo_compat import given, settings, st
 
 from repro.core import ring_reduce as rr
 

@@ -1,0 +1,198 @@
+"""Fused-vs-unfused bit-identity of the sync engine's kernels, the
+persistent flat anchor bookkeeping, and the bucketed ring pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import diloco as dl
+from repro.core import ring_reduce as rr
+from repro.core.sync_engine import SyncEngine
+from repro.kernels import ops, ref
+
+# tail-padding sizes on purpose: LANE/BLOCK_ROWS non-multiples, odd
+# (int4 packing), sub-chunk sizes
+SIZES = [16, 515, 1000, 4097, 65537]
+IMPLS = ["jnp", "pallas"]
+
+
+def _pair(rng, n):
+    a = jnp.asarray(rng.normal(0.5, 2.0, size=(n,)), jnp.float32)
+    t = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    return a, t
+
+
+# -- fused quantize_pseudograd == quantize(anchor - theta) -------------------
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fused_pseudograd_bit_identity(n, impl, rng):
+    if impl == "pallas" and n > 5000:
+        pytest.skip("interpret-mode kernel too slow for large sizes")
+    a, t = _pair(rng, n)
+    qf = ops.quantize_pseudograd(a, t, impl=impl)
+    qu = ops.quantize(a - t, impl=impl)
+    np.testing.assert_array_equal(np.asarray(qf.codes),
+                                  np.asarray(qu.codes))
+    # dequantized values (the bits that reach the wire math) must match
+    # exactly; raw codebooks may differ in never-referenced empty
+    # buckets (fma contraction of the bucket-midpoint fallback)
+    np.testing.assert_array_equal(
+        np.asarray(ops.dequantize(qf, impl=impl)),
+        np.asarray(ops.dequantize(qu, impl=impl)))
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("scale", [1.0, 0.25, 3.0])
+def test_fused_pseudograd_scaled_bit_identity(impl, scale, rng):
+    a, t = _pair(rng, 2048)
+    w = jnp.float32(scale)
+    qf = ops.quantize_pseudograd(a, t, scale=w, impl=impl)
+    qu = ops.quantize((a - t) * w, impl=impl)
+    np.testing.assert_array_equal(np.asarray(qf.codes),
+                                  np.asarray(qu.codes))
+    np.testing.assert_array_equal(
+        np.asarray(ops.dequantize(qf, impl=impl)),
+        np.asarray(ops.dequantize(qu, impl=impl)))
+
+
+@pytest.mark.parametrize("n", [16, 515, 1000])
+@pytest.mark.parametrize("impl", IMPLS)
+def test_dequantize_add_bit_identity(n, impl, rng):
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    acc = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    q = ops.quantize(x, impl=impl)
+    fused = ops.dequantize_add(q, acc, impl=impl)
+    unfused = acc + ops.dequantize(q, impl=impl)
+    np.testing.assert_array_equal(np.asarray(fused),
+                                  np.asarray(unfused))
+
+
+# -- SyncEngine flatten/unflatten -------------------------------------------
+
+
+def test_engine_roundtrip_and_static_metadata(rng):
+    tree = {"a": jnp.asarray(rng.normal(size=(6, 7)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(11,)), jnp.bfloat16),
+            "c": jnp.asarray(rng.normal(size=(2, 3, 4)), jnp.float32)}
+    eng = SyncEngine.for_tree(tree)
+    assert eng.numel == 6 * 7 + 11 + 2 * 3 * 4
+    assert eng is SyncEngine.for_tree(tree)  # cached
+    flat = eng.flatten(tree)
+    assert flat.shape == (eng.numel,) and flat.dtype == jnp.float32
+    back = eng.unflatten(flat)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_allclose(
+            np.asarray(back[k], np.float32),
+            np.asarray(tree[k], np.float32), rtol=1e-2)
+    # target-dtype override via `like`
+    like = jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+    back32 = eng.unflatten(flat, like=like)
+    assert all(back32[k].dtype == jnp.float32 for k in tree)
+
+
+def test_persistent_anchor_flat_tracks_anchor(rng):
+    cfg = dl.DiLoCoConfig(quant="int8")
+    p0 = {"w": jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
+    k = 4
+    stacked = jax.tree.map(
+        lambda a: jnp.stack([a * (1 + 0.02 * i) for i in range(k)]), p0)
+    st = dl.init_outer_state_sim(p0, cfg, k)
+    eng = SyncEngine.for_tree(p0)
+    np.testing.assert_array_equal(np.asarray(st.anchor_flat),
+                                  np.asarray(eng.flatten(st.anchor)))
+    for _ in range(3):
+        stacked, st = dl.outer_sync_sim(stacked, st, cfg)
+        np.testing.assert_array_equal(
+            np.asarray(st.anchor_flat),
+            np.asarray(eng.flatten(st.anchor)))
+
+
+def test_sync_without_anchor_flat_matches_with(rng):
+    """A state carrying anchor_flat=None (e.g. rebuilt inside shard_map)
+    must produce the same outer step as the persistent-buffer path."""
+    cfg = dl.DiLoCoConfig(quant="int8")
+    p0 = {"w": jnp.asarray(rng.normal(size=(777,)), jnp.float32)}
+    k = 3
+    stacked = jax.tree.map(
+        lambda a: jnp.stack([a * (1 + 0.05 * i) for i in range(k)]), p0)
+    st = dl.init_outer_state_sim(p0, cfg, k)
+    st_none = st._replace(anchor_flat=None)
+    with_p, with_st = dl.outer_sync_sim(stacked, st, cfg)
+    none_p, none_st = dl.outer_sync_sim(stacked, st_none, cfg)
+    np.testing.assert_array_equal(np.asarray(with_p["w"]),
+                                  np.asarray(none_p["w"]))
+    np.testing.assert_array_equal(np.asarray(with_st.anchor_flat),
+                                  np.asarray(none_st.anchor_flat))
+
+
+# -- bucketed + fused ring configs -------------------------------------------
+
+
+@pytest.mark.parametrize("quant", ["fp32", "int8", "int4"])
+@pytest.mark.parametrize("buckets", [1, 2, 4])
+def test_bucketed_ring_quality_and_consistency(quant, buckets, rng):
+    xs = jnp.asarray(rng.normal(size=(5, 2050)), jnp.float32)
+    cfg = rr.RingConfig(quant=quant, buckets=buckets)
+    out = rr.simulate_ring_all_reduce(xs, cfg=cfg)
+    tol = {"fp32": 1e-5, "int8": 0.08, "int4": 1.2}[quant]
+    assert float(jnp.max(jnp.abs(out[0] - xs.mean(0)))) < tol
+    for i in range(1, 5):
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.asarray(out[i]))
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_fused_ring_path_matches_unfused(fused, rng):
+    """fused tx/rx kernels must not change the wire math at all."""
+    xs = jnp.asarray(rng.normal(size=(4, 1027)), jnp.float32)
+    base = rr.simulate_ring_all_reduce(
+        xs, cfg=rr.RingConfig(quant="int8", fused=False))
+    out = rr.simulate_ring_all_reduce(
+        xs, cfg=rr.RingConfig(quant="int8", fused=fused))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(out))
+
+
+def test_fused_first_hop_source_matches_materialized(rng):
+    """Routing the first hop through quantize_pseudograd(anchor, theta)
+    must equal quantizing the materialized pseudo-gradient."""
+    k, n = 4, 1500
+    anchor = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    thetas = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    pgs = anchor[None] - thetas
+    w = jnp.asarray([1.0, 0.0, 1.0, 1.0], jnp.float32)
+    cfg = rr.RingConfig(quant="int8")
+    base = rr.simulate_ring_all_reduce(pgs, cfg=cfg, weights=w)
+    fused = rr.simulate_ring_all_reduce(pgs, cfg=cfg, weights=w,
+                                        fused_src=(anchor, thetas))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(fused))
+
+
+@pytest.mark.parametrize("buckets", [1, 3])
+def test_outer_sync_sim_bucketed_all_quants(buckets, rng):
+    """End-to-end outer step across quant modes and bucket counts."""
+    p0 = {"w": jnp.asarray(rng.normal(size=(515,)), jnp.float32),
+          "b": jnp.asarray(rng.normal(size=(9,)), jnp.float32)}
+    k = 4
+    stacked = jax.tree.map(
+        lambda a: jnp.stack([a * (1 + 0.01 * i) for i in range(k)]), p0)
+    for quant in ["fp32", "int8", "int4"]:
+        cfg = dl.DiLoCoConfig(quant=quant, sync_buckets=buckets)
+        st = dl.init_outer_state_sim(p0, cfg, k)
+        new_stacked, st2 = dl.outer_sync_sim(stacked, st, cfg)
+        assert int(st2.outer_step) == 1
+        # all workers reset to the shared new anchor
+        for i in range(1, k):
+            np.testing.assert_array_equal(
+                np.asarray(new_stacked["w"][0]),
+                np.asarray(new_stacked["w"][i]))
+
+
+def test_wire_bytes_buckets_sideband():
+    n, k = 1_000_000, 8
+    b1 = rr.ring_wire_bytes(n, k, "int8", buckets=1)
+    b4 = rr.ring_wire_bytes(n, k, "int8", buckets=4)
+    # payload identical, sideband scales with per-bucket codebooks
+    assert b4 - b1 == 2 * (k - 1) * 4 * 256 * 3

@@ -2,9 +2,8 @@
 quality, monitor re-ordering policy."""
 import itertools
 
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+from hypo_compat import given, settings, st
 
 from repro.core import topology
 
