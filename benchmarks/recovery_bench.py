@@ -1,0 +1,162 @@
+"""Checkpoint recovery benchmark (paper §2.4.2 live recovery).
+
+Measures the two things the recovery subsystem exists for:
+
+  * **wire bytes** — flat fp32 snapshot vs chunk-store full snapshot
+    (dedup: post-sync ``params`` == ``anchor``) vs int8 and int4 delta
+    checkpoints, over a chain of outer steps with heavy-tailed updates;
+  * **fetch time** — a joiner recovering the chain over real localhost
+    TCP from 1 peer, striped over 4 peers, and striped over 4 peers
+    with one peer crashing mid-transfer (reassignment on the live
+    path).
+
+``python -m benchmarks.run recovery --json`` writes
+``BENCH_recovery.json`` (the recovery perf-trajectory file future PRs
+diff against); ``--smoke`` shrinks the model for CI.
+"""
+from __future__ import annotations
+
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.checkpointing import (ChunkPeer, ChunkStore,
+                                 DeltaCheckpointer, DeltaConfig,
+                                 swarm_fetch)
+from repro.checkpointing import delta as delta_mod
+
+N_ELEMS = 1 << 21          # 2M params per component (~8 MiB fp32)
+N_ELEMS_SMOKE = 1 << 16
+CHAIN = 5                  # base + 4 deltas
+CHUNK = 1 << 18
+
+
+def _chain(rng, n):
+    """Post-sync checkpoint trees: params == anchor, heavy-tailed
+    outer updates (95% small + 5% spike components)."""
+    params = rng.standard_normal(n).astype(np.float32) * 0.02
+    mom = np.zeros(n, np.float32)
+    for t in range(CHAIN):
+        yield {"params": {"w": params.copy()},
+               "anchor": {"w": params.copy()},
+               "outer_momentum": {"w": mom.copy()},
+               "step": np.int32(t)}
+        upd = rng.standard_normal(n).astype(np.float32) * 1e-3
+        upd += ((rng.random(n) < 0.05)
+                * rng.standard_normal(n)).astype(np.float32) * 0.03
+        params = params + upd
+        mom = 0.9 * mom + upd
+
+
+def _flat_bytes(tree) -> int:
+    from repro.checkpointing.checkpoint import _flatten, leaf_to_bytes
+    return sum(len(leaf_to_bytes(a)[0])
+               for a in _flatten(tree).values())
+
+
+def _save_chain(root, trees, codec: str | None):
+    """Persist the chain; returns (per-step new_bytes, store)."""
+    store = ChunkStore(root, chunk_bytes=CHUNK)
+    if codec is None:
+        sizes = [store.save_tree(t, tree)["stats"]["new_bytes"]
+                 for t, tree in enumerate(trees)]
+    else:
+        ck = DeltaCheckpointer(store, DeltaConfig(base_every=CHAIN + 1,
+                                                  codec=codec))
+        sizes = [ck.save(t, tree)["stats"]["new_bytes"]
+                 for t, tree in enumerate(trees)]
+    return sizes, store
+
+
+def _timed_fetch(src_root, n_peers: int, crash: bool) -> dict:
+    peers = [ChunkPeer(ChunkStore(src_root)) for _ in range(n_peers)]
+    if crash:
+        peers[0].crash_after = 2
+    with tempfile.TemporaryDirectory() as dst:
+        t0 = time.perf_counter()
+        stats = swarm_fetch([p.addr for p in peers], dst,
+                            range_chunks=4)
+        dt = time.perf_counter() - t0
+    for p in peers:
+        p.close()
+    return {"seconds": dt, "chunks": stats["chunks_fetched"],
+            "bytes": stats["bytes_fetched"],
+            "dead_peers": len(stats["dead_peers"]),
+            "reassigned_ranges": stats["reassigned_ranges"]}
+
+
+def _measure(seed: int = 0, smoke: bool = False) -> dict:
+    rng = np.random.default_rng(seed)
+    n = N_ELEMS_SMOKE if smoke else N_ELEMS
+    trees = list(_chain(rng, n))
+    flat_per_step = _flat_bytes(trees[0])
+
+    with tempfile.TemporaryDirectory() as td:
+        td = pathlib.Path(td)
+        full_sizes, _ = _save_chain(td / "full", trees, None)
+        int8_sizes, store8 = _save_chain(td / "d8", trees, "int8")
+        int4_sizes, _ = _save_chain(td / "d4", trees, "int4")
+
+        # verify the chain restores before timing fetches of it
+        like = trees[-1]
+        restored, _ = delta_mod.restore(store8, like)
+        fetch = {
+            "peers1": _timed_fetch(td / "d8", 1, crash=False),
+            "peers4": _timed_fetch(td / "d8", 4, crash=False),
+            "peers4_crash1": _timed_fetch(td / "d8", 4, crash=True),
+        }
+
+    steady8 = int8_sizes[-1]
+    steady4 = int4_sizes[-1]
+    return {
+        "elements": int(3 * n),
+        "chain_len": CHAIN,
+        "flat_fp32_bytes_per_step": flat_per_step,
+        "store_full_bytes_per_step": full_sizes[-1],
+        "delta_int8_bytes_per_step": steady8,
+        "delta_int4_bytes_per_step": steady4,
+        "reduction_store_full": flat_per_step / max(1, full_sizes[-1]),
+        "reduction_delta_int8": flat_per_step / max(1, steady8),
+        "reduction_delta_int4": flat_per_step / max(1, steady4),
+        "fetch": fetch,
+    }
+
+
+def _rows(m: dict) -> list[str]:
+    f = m["fetch"]
+    return [
+        common.csv_row(
+            "recovery/wire_delta_int8", 0.0,
+            f"bytes={m['delta_int8_bytes_per_step']};"
+            f"vs_flat_fp32={m['reduction_delta_int8']:.1f}x"),
+        common.csv_row(
+            "recovery/wire_delta_int4", 0.0,
+            f"bytes={m['delta_int4_bytes_per_step']};"
+            f"vs_flat_fp32={m['reduction_delta_int4']:.1f}x"),
+        common.csv_row(
+            "recovery/fetch_1peer", f["peers1"]["seconds"] * 1e6,
+            f"chunks={f['peers1']['chunks']}"),
+        common.csv_row(
+            "recovery/fetch_4peers", f["peers4"]["seconds"] * 1e6,
+            f"speedup={f['peers1']['seconds'] / f['peers4']['seconds']:.2f}x"),
+        common.csv_row(
+            "recovery/fetch_4peers_crash1",
+            f["peers4_crash1"]["seconds"] * 1e6,
+            f"reassigned={f['peers4_crash1']['reassigned_ranges']};"
+            f"dead={f['peers4_crash1']['dead_peers']}"),
+    ]
+
+
+def run(seed: int = 0, smoke: bool = False) -> list[str]:
+    return _rows(_measure(seed, smoke=smoke))
+
+
+def run_json(seed: int = 0, smoke: bool = False):
+    m = _measure(seed, smoke=smoke)
+    return _rows(m), {"recovery": m}
+
+
+JSON_PATH = "BENCH_recovery.json"

@@ -4,13 +4,17 @@ Prints ``name,us_per_call,derived`` CSV (plus a header comment).
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table2 fig5
     PYTHONPATH=src python -m benchmarks.run sync --json
+    PYTHONPATH=src python -m benchmarks.run recovery --json --smoke
 
 ``--json``: modules exposing ``run_json()`` additionally contribute a
-machine-readable payload, merged into ``BENCH_sync.json`` (the perf
-trajectory file future PRs diff against).
+machine-readable payload, written to the module's ``JSON_PATH``
+(default ``BENCH_sync.json``) — the perf trajectory files future PRs
+diff against. ``--smoke``: modules whose ``run``/``run_json`` accept a
+``smoke`` kwarg run at CI-sized scale.
 """
 from __future__ import annotations
 
+import inspect
 import json
 import sys
 import traceback
@@ -24,37 +28,46 @@ MODULES = [
     ("quant", "benchmarks.quant_quality"),
     ("kernels", "benchmarks.kernel_bench"),
     ("sync", "benchmarks.sync_bench"),
+    ("recovery", "benchmarks.recovery_bench"),
 ]
 
 JSON_PATH = "BENCH_sync.json"
 
 
+def _call(fn, smoke: bool):
+    if smoke and "smoke" in inspect.signature(fn).parameters:
+        return fn(smoke=True)
+    return fn()
+
+
 def main() -> None:
     args = sys.argv[1:]
     json_mode = "--json" in args
+    smoke = "--smoke" in args
     want = {a for a in args if not a.startswith("-")}
     print("# name,us_per_call,derived")
     failed = []
-    payload: dict = {}
+    payloads: dict[str, dict] = {}
     for key, modname in MODULES:
         if want and key not in want:
             continue
         try:
             mod = __import__(modname, fromlist=["run"])
             if json_mode and hasattr(mod, "run_json"):
-                rows, part = mod.run_json()
-                payload.update(part)
+                rows, part = _call(mod.run_json, smoke)
+                path = getattr(mod, "JSON_PATH", JSON_PATH)
+                payloads.setdefault(path, {}).update(part)
             else:
-                rows = mod.run()
+                rows = _call(mod.run, smoke)
             for row in rows:
                 print(row, flush=True)
         except Exception:
             failed.append(key)
             traceback.print_exc()
-    if json_mode and payload:
-        with open(JSON_PATH, "w") as f:
+    for path, payload in payloads.items():
+        with open(path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
-        print(f"# wrote {JSON_PATH}", file=sys.stderr)
+        print(f"# wrote {path}", file=sys.stderr)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

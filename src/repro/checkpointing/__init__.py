@@ -1,6 +1,27 @@
 from repro.checkpointing.checkpoint import (latest_step, restore, save,
                                             save_async)
-from repro.checkpointing.p2p import CheckpointServer, fetch_checkpoint
+from repro.checkpointing.delta import (DeltaCheckpointer, DeltaConfig,
+                                       DeltaChainError)
+from repro.checkpointing.p2p import (CheckpointServer, ChecksumError,
+                                     EmptyPeerError, FetchError,
+                                     PeerClosedError,
+                                     RetryableFetchError,
+                                     fetch_checkpoint)
+from repro.checkpointing.snapshot import AsyncSnapshotter
+from repro.checkpointing.store import (ChunkCorruptError,
+                                       ChunkMissingError, ChunkStore)
+from repro.checkpointing.swarm import (ChunkPeer, NoPeersError,
+                                       SwarmFetchError, recover,
+                                       swarm_fetch)
 
-__all__ = ["save", "save_async", "restore", "latest_step",
-           "CheckpointServer", "fetch_checkpoint"]
+__all__ = [
+    "save", "save_async", "restore", "latest_step",
+    "CheckpointServer", "fetch_checkpoint",
+    "FetchError", "PeerClosedError", "ChecksumError", "EmptyPeerError",
+    "RetryableFetchError",
+    "ChunkStore", "ChunkCorruptError", "ChunkMissingError",
+    "DeltaCheckpointer", "DeltaConfig", "DeltaChainError",
+    "ChunkPeer", "swarm_fetch", "recover", "SwarmFetchError",
+    "NoPeersError",
+    "AsyncSnapshotter",
+]

@@ -17,6 +17,7 @@ non-blocking flow).
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import shutil
 import threading
@@ -27,15 +28,56 @@ import numpy as np
 
 _SEP = "::"
 
+# raw-bits container per itemsize for dtypes numpy can't save natively
+# (ml_dtypes: bf16 is 2 bytes, the fp8 family is 1 byte)
+_RAW_UINT = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def resolve_dtype(name: str) -> np.dtype:
+    """np.dtype for ``name``, falling back to ml_dtypes (bf16, fp8...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _needs_raw_bits(dtype: np.dtype) -> bool:
+    return dtype.kind == "V" or str(dtype) == "bfloat16"
+
+
+def leaf_to_bytes(arr: np.ndarray) -> tuple[bytes, str]:
+    """C-order raw bytes + dtype name (round-trips any ml_dtype)."""
+    arr = np.ascontiguousarray(arr)
+    return arr.tobytes(), str(arr.dtype)
+
+
+def leaf_from_bytes(buf: bytes, dtype: str, shape) -> np.ndarray:
+    return np.frombuffer(buf, dtype=resolve_dtype(dtype)).reshape(
+        tuple(shape))
+
+
+def _path_key(path) -> str:
+    return _SEP.join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name",
+            p)))) for p in path)
+
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(
-            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name",
-                p)))) for p in path)
-        flat[key] = np.asarray(leaf)
+        flat[_path_key(path)] = np.asarray(leaf)
     return flat
+
+
+def unflatten_like(like: Any, out_flat: dict[str, Any]) -> Any:
+    """Rebuild ``like``'s structure from a flat key->leaf dict (the
+    inverse of ``_flatten``; shared by every restore path)."""
+    leaves_like, _ = jax.tree_util.tree_flatten_with_path(like)
+    keys_in_order = [_path_key(path) for path, _ in leaves_like]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like),
+        [out_flat[k] for k in keys_in_order])
 
 
 def save(ckpt_dir: str | pathlib.Path, step: int, tree: Any,
@@ -47,23 +89,41 @@ def save(ckpt_dir: str | pathlib.Path, step: int, tree: Any,
         shutil.rmtree(tmp)
     (tmp / "arrays").mkdir(parents=True)
     flat = _flatten(tree)
-    manifest = {"step": step, "keys": {}, "meta": extra_meta or {}}
+    manifest = {"step": step, "keys": {}, "meta": extra_meta or {},
+                # per-save nonce: two saves of the same step are never
+                # byte-identical, so the server's consistency re-read
+                # can detect a same-step replacement mid-serve
+                "save_nonce": os.urandom(8).hex()}
     treedef = jax.tree_util.tree_structure(tree)
     manifest["treedef"] = str(treedef)
     for key, arr in flat.items():
         fname = key.replace("/", "_") + ".npy"
         dtype = str(arr.dtype)
-        if arr.dtype.kind == "V" or dtype == "bfloat16":
-            # numpy can't round-trip ml_dtypes (bf16): store raw bits
-            np.save(tmp / "arrays" / fname, arr.view(np.uint16))
+        raw = _needs_raw_bits(arr.dtype)
+        if raw:
+            # numpy can't round-trip ml_dtypes (bf16/fp8...): store raw
+            # bits in the unsigned container of the SAME itemsize (the
+            # seed viewed everything as uint16, which corrupts 1-byte
+            # fp8 leaves)
+            np.save(tmp / "arrays" / fname,
+                    arr.view(_RAW_UINT[arr.dtype.itemsize]))
         else:
             np.save(tmp / "arrays" / fname, arr)
         manifest["keys"][key] = {"file": fname, "shape": list(arr.shape),
-                                 "dtype": dtype}
+                                 "dtype": dtype, "raw_bits": raw}
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
     if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)
+        # swap via rename (tiny race window) instead of rmtree+rename
+        # (window the length of the whole delete): a concurrent
+        # CheckpointServer read sees either the old or the new dir
+        doomed = ckpt_dir / f".old_step_{step:08d}"
+        if doomed.exists():
+            shutil.rmtree(doomed)
+        final.rename(doomed)
+        tmp.rename(final)
+        shutil.rmtree(doomed)
+    else:
+        tmp.rename(final)
     return final
 
 
@@ -93,19 +153,14 @@ def restore(ckpt_dir: str | pathlib.Path, like: Any,
     for key in flat_like:
         info = manifest["keys"][key]
         arr = np.load(d / "arrays" / info["file"])
-        if info["dtype"] == "bfloat16":
-            import ml_dtypes
-            arr = arr.view(ml_dtypes.bfloat16)
+        dtype = resolve_dtype(info["dtype"])
+        # "raw_bits" marks leaves stored as unsigned bit containers;
+        # older manifests lack the flag, so also re-view whenever the
+        # recorded dtype doesn't match what np.load produced
+        if info.get("raw_bits", False) or arr.dtype != dtype:
+            arr = arr.view(dtype)
         out_flat[key] = arr
-    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
-    keys_in_order = [
-        _SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(
-            p, "name", p)))) for p in path)
-        for path, _ in leaves_like]
-    new_leaves = [out_flat[k] for k in keys_in_order]
-    tree = jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(like), new_leaves)
-    return tree, manifest["meta"]
+    return unflatten_like(like, out_flat), manifest["meta"]
 
 
 def latest_step(ckpt_dir: str | pathlib.Path) -> int | None:

@@ -6,12 +6,24 @@ localhost): an active peer runs ``CheckpointServer`` next to training;
 ``fetch_checkpoint`` streams the manifest + arrays with length-prefixed
 frames and sha256 integrity checks.
 
+Failure semantics: every failure mode surfaces as a typed
+``FetchError`` subclass (peer closed mid-frame, frame checksum
+mismatch, peer has no checkpoint, checkpoint swapped out mid-serve) so
+a caller can catch-and-retry without string matching. The server reads
+the whole checkpoint into memory BEFORE the first byte goes on the
+wire, so a concurrent ``save`` swapping the ``step_*`` directory can
+never truncate a stream mid-transfer — at worst the snapshot read
+fails and is retried against the new latest step.
+
 Both of the paper's onboarding modes are realized by the trainer:
   * blocking     — the trainer pauses at the outer boundary until the
                    fetch completes (the mode INTELLECT-1 actually used);
   * non-blocking — fetch on a thread while training continues; the
                    joiner enters at the NEXT outer step with zero
                    pseudo-gradient (weight 0 in the elastic ring).
+
+For the chunked content-addressed store and the multi-peer striped
+fetch, see ``repro.checkpointing.swarm``.
 """
 from __future__ import annotations
 
@@ -24,6 +36,28 @@ import struct
 import threading
 
 
+class FetchError(Exception):
+    """Base of all typed P2P checkpoint-transfer failures."""
+
+
+class PeerClosedError(FetchError, ConnectionError):
+    """Peer hung up mid-frame (crash or abrupt shutdown)."""
+
+
+class ChecksumError(FetchError, IOError):
+    """A frame's sha256 didn't match its payload (corruption in
+    transit)."""
+
+
+class EmptyPeerError(FetchError, FileNotFoundError):
+    """The peer is healthy but has no checkpoint yet."""
+
+
+class RetryableFetchError(FetchError, IOError):
+    """The peer's checkpoint vanished mid-serve (concurrent save swap);
+    the fetch is safe to retry immediately."""
+
+
 def _send_frame(sock: socket.socket, payload: bytes) -> None:
     digest = hashlib.sha256(payload).digest()
     sock.sendall(struct.pack("!Q", len(payload)) + digest + payload)
@@ -34,7 +68,7 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     while buf.tell() < n:
         chunk = sock.recv(min(1 << 20, n - buf.tell()))
         if not chunk:
-            raise ConnectionError("peer closed mid-frame")
+            raise PeerClosedError("peer closed mid-frame")
         buf.write(chunk)
     return buf.getvalue()
 
@@ -45,12 +79,15 @@ def _recv_frame(sock: socket.socket) -> bytes:
     digest = header[8:40]
     payload = _recv_exact(sock, length)
     if hashlib.sha256(payload).digest() != digest:
-        raise IOError("checksum mismatch in checkpoint frame")
+        raise ChecksumError("checksum mismatch in checkpoint frame")
     return payload
 
 
 class CheckpointServer:
     """Serves the latest checkpoint directory to joining peers."""
+
+    # bounded retries when a concurrent save swaps step_* mid-read
+    SNAPSHOT_ATTEMPTS = 3
 
     def __init__(self, ckpt_dir: str | pathlib.Path,
                  host: str = "127.0.0.1", port: int = 0):
@@ -71,6 +108,8 @@ class CheckpointServer:
                 conn, _ = self._sock.accept()
             except socket.timeout:
                 continue
+            except OSError:
+                break
             try:
                 self._handle(conn)
             except OSError:
@@ -78,20 +117,59 @@ class CheckpointServer:
             finally:
                 conn.close()
 
-    def _handle(self, conn: socket.socket) -> None:
-        from repro.checkpointing import checkpoint as ckpt
-        step = ckpt.latest_step(self.ckpt_dir)
-        if step is None:
-            _send_frame(conn, json.dumps({"error": "empty"}).encode())
-            return
-        d = self.ckpt_dir / f"step_{step:08d}"
+    def _read_step_dir(self, d: pathlib.Path) -> list[bytes]:
+        """One consistent snapshot of ``d``: manifest first, then the
+        arrays in manifest-key order. Raises FileNotFoundError if a
+        concurrent save swapped the directory away mid-read, and
+        re-reads the manifest afterwards so a same-step REPLACEMENT
+        mid-read (old manifest + new arrays, all checksums valid)
+        can't be served as a checkpoint state that never existed —
+        ``save`` stamps every manifest with a fresh nonce, so two
+        saves of the same step are never byte-identical."""
         manifest = (d / "manifest.json").read_bytes()
-        _send_frame(conn, manifest)
         info = json.loads(manifest)
+        frames = [manifest]
         for key in sorted(info["keys"]):
-            _send_frame(conn,
-                        (d / "arrays" / info["keys"][key]["file"])
-                        .read_bytes())
+            frames.append(
+                (d / "arrays" / info["keys"][key]["file"]).read_bytes())
+        if (d / "manifest.json").read_bytes() != manifest:
+            raise FileNotFoundError("step dir replaced mid-read")
+        return frames
+
+    def _snapshot_latest(self) -> list[bytes] | dict:
+        """Read the whole latest checkpoint into memory before serving
+        a single byte. The step dir path is resolved ONCE per attempt;
+        a vanished/replaced file (save swap race) retries against the
+        new latest instead of streaming a torn checkpoint."""
+        import time
+
+        from repro.checkpointing import checkpoint as ckpt
+        saw_step = False
+        for attempt in range(self.SNAPSHOT_ATTEMPTS):
+            step = ckpt.latest_step(self.ckpt_dir)
+            if step is None:
+                # either truly empty, or we landed inside save()'s
+                # rename swap of the only step — re-look before
+                # declaring the peer empty
+                time.sleep(0.01 * (attempt + 1))
+                continue
+            saw_step = True
+            d = self.ckpt_dir / f"step_{step:08d}"
+            try:
+                return self._read_step_dir(d)
+            except (FileNotFoundError, NotADirectoryError,
+                    json.JSONDecodeError):
+                continue
+        # a peer that had a step at ANY point is retryable, not empty
+        return {"error": "retry" if saw_step else "empty"}
+
+    def _handle(self, conn: socket.socket) -> None:
+        snap = self._snapshot_latest()
+        if isinstance(snap, dict):
+            _send_frame(conn, json.dumps(snap).encode())
+            return
+        for frame in snap:
+            _send_frame(conn, frame)
 
     def close(self) -> None:
         self._stop.set()
@@ -103,13 +181,20 @@ def fetch_checkpoint(peer: tuple[str, int],
                      dest_dir: str | pathlib.Path,
                      timeout: float = 60.0) -> pathlib.Path:
     """Download the peer's latest checkpoint into ``dest_dir``; returns
-    the local checkpoint path (same on-disk format as checkpoint.save)."""
+    the local checkpoint path (same on-disk format as checkpoint.save).
+
+    Raises ``EmptyPeerError`` / ``RetryableFetchError`` /
+    ``PeerClosedError`` / ``ChecksumError`` (all ``FetchError``) so the
+    caller can retry or fail over to another peer."""
     dest_dir = pathlib.Path(dest_dir)
     with socket.create_connection(peer, timeout=timeout) as sock:
         manifest_raw = _recv_frame(sock)
         manifest = json.loads(manifest_raw)
-        if "error" in manifest:
-            raise FileNotFoundError("peer has no checkpoint yet")
+        if manifest.get("error") == "empty":
+            raise EmptyPeerError("peer has no checkpoint yet")
+        if manifest.get("error") == "retry":
+            raise RetryableFetchError(
+                "peer checkpoint swapped mid-serve; retry")
         step = manifest["step"]
         tmp = dest_dir / f".tmp_step_{step:08d}"
         if tmp.exists():

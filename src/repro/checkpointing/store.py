@@ -1,0 +1,259 @@
+"""Content-addressed chunk store for live checkpoint recovery
+(paper §2.4.2: joiners P2P-fetch state from active peers).
+
+Every pytree leaf is serialized to raw bytes and split into fixed-size
+chunks addressed by the sha256 of their (uncompressed) contents:
+
+    root/
+      chunks/<aa>/<sha256-hex>        # zlib-deflated blob
+      manifests/step_00000123.json    # tree structure -> chunk ids
+
+Content addressing buys three things the flat npy-per-leaf layout
+can't:
+
+  * **dedup** — a chunk whose bytes didn't change between steps (or
+    that appears twice inside one step: post-sync ``params`` and
+    ``anchor`` are bit-identical trees) is stored and shipped once;
+  * **verifiable transfer** — a chunk's id IS its checksum, so a swarm
+    fetch validates every piece independently of which peer served it;
+  * **resumable / striped fetch** — a joiner downloads disjoint chunk
+    sets from several peers in parallel and re-requests only what's
+    missing (see ``swarm.py``).
+
+Chunk ids are computed on the uncompressed bytes; the on-disk blob is
+zlib-deflated (quantized delta codes are low-entropy, so deflate
+recovers most of the gap between the 8-bit code width and the code
+entropy — see ``delta.py``).
+
+All writes are atomic (tmp file + rename), so a crash mid-save never
+corrupts the store and concurrent writers of the same chunk are
+idempotent.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import threading
+import zlib
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.checkpointing import checkpoint as _ckpt
+
+DEFAULT_CHUNK_BYTES = 1 << 20
+
+
+class ChunkCorruptError(IOError):
+    """A blob's contents don't hash to its id (disk or peer
+    corruption)."""
+
+
+class ChunkMissingError(KeyError):
+    """A chunk referenced by a manifest is not in the store."""
+
+
+def chunk_ids(manifest: dict) -> list[str]:
+    """Unique chunk ids referenced by ``manifest`` (first-appearance
+    order, so consecutive ids usually belong to the same leaf)."""
+    seen: dict[str, None] = {}
+    for entry in manifest["keys"].values():
+        for c in entry.get("chunks", ()):
+            seen.setdefault(c["id"], None)
+        delta = entry.get("delta")
+        if delta:
+            for c in delta["codes_chunks"]:
+                seen.setdefault(c["id"], None)
+            seen.setdefault(delta["codebook_id"], None)
+    return list(seen)
+
+
+class ChunkStore:
+    """Chunked, deduplicating, content-addressed checkpoint store."""
+
+    def __init__(self, root: str | pathlib.Path,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 compress_level: int = 6):
+        self.root = pathlib.Path(root)
+        self.chunk_bytes = int(chunk_bytes)
+        self.compress_level = compress_level
+        (self.root / "chunks").mkdir(parents=True, exist_ok=True)
+        (self.root / "manifests").mkdir(parents=True, exist_ok=True)
+
+    # -- blobs ---------------------------------------------------------------
+
+    def _chunk_path(self, digest: str) -> pathlib.Path:
+        return self.root / "chunks" / digest[:2] / digest
+
+    def has(self, digest: str) -> bool:
+        return self._chunk_path(digest).exists()
+
+    def _write_blob(self, digest: str, blob: bytes) -> int:
+        p = self._chunk_path(digest)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.parent / f".{digest}.{os.getpid()}.{threading.get_ident()}"
+        tmp.write_bytes(blob)
+        tmp.rename(p)  # atomic; concurrent same-digest writers agree
+        return len(blob)
+
+    def put(self, data: bytes) -> tuple[str, int]:
+        """Store ``data``; returns (digest, bytes newly written — 0 on
+        a dedup hit)."""
+        digest = hashlib.sha256(data).hexdigest()
+        if self.has(digest):
+            return digest, 0
+        blob = zlib.compress(data, self.compress_level)
+        return digest, self._write_blob(digest, blob)
+
+    def put_blob(self, digest: str, blob: bytes) -> int:
+        """Store an already-deflated blob as fetched from a peer,
+        verifying it decompresses to bytes hashing to ``digest``."""
+        if self.has(digest):
+            return 0
+        try:
+            data = zlib.decompress(blob)
+        except zlib.error as e:
+            raise ChunkCorruptError(f"undecompressable blob for "
+                                    f"{digest[:12]}: {e}") from e
+        if hashlib.sha256(data).hexdigest() != digest:
+            raise ChunkCorruptError(
+                f"blob contents do not hash to {digest[:12]}")
+        return self._write_blob(digest, blob)
+
+    def get(self, digest: str) -> bytes:
+        """Uncompressed chunk contents, integrity-checked."""
+        try:
+            data = zlib.decompress(self.get_blob(digest))
+        except zlib.error as e:
+            raise ChunkCorruptError(
+                f"stored chunk {digest[:12]} is corrupt: {e}") from e
+        if hashlib.sha256(data).hexdigest() != digest:
+            raise ChunkCorruptError(
+                f"stored chunk {digest[:12]} is corrupt")
+        return data
+
+    def get_blob(self, digest: str) -> bytes:
+        """Raw deflated blob (what goes on the wire peer-to-peer)."""
+        p = self._chunk_path(digest)
+        if not p.exists():
+            raise ChunkMissingError(digest)
+        return p.read_bytes()
+
+    def missing(self, manifest: dict) -> list[str]:
+        return [d for d in chunk_ids(manifest) if not self.has(d)]
+
+    # -- manifests -----------------------------------------------------------
+
+    def _manifest_path(self, step: int) -> pathlib.Path:
+        return self.root / "manifests" / f"step_{step:08d}.json"
+
+    def write_manifest(self, manifest: dict) -> pathlib.Path:
+        p = self._manifest_path(manifest["step"])
+        tmp = p.with_name("." + p.name)
+        tmp.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+        tmp.rename(p)
+        return p
+
+    def load_manifest(self, step: int) -> dict:
+        return json.loads(self._manifest_path(step).read_text())
+
+    def steps(self) -> list[int]:
+        return sorted(int(p.stem.split("_")[1])
+                      for p in (self.root / "manifests").iterdir()
+                      if p.name.startswith("step_"))
+
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    # -- pytrees -------------------------------------------------------------
+
+    def _put_leaf(self, buf: bytes) -> tuple[list[dict], int, int]:
+        """Chunk + store one leaf's bytes; returns (chunk list,
+        new_bytes, dedup_hits)."""
+        chunks, new_bytes, dedup = [], 0, 0
+        for off in range(0, len(buf), self.chunk_bytes):
+            piece = buf[off:off + self.chunk_bytes]
+            digest, nb = self.put(piece)
+            chunks.append({"id": digest, "n": len(piece)})
+            new_bytes += nb
+            dedup += nb == 0
+        return chunks, new_bytes, dedup
+
+    def save_tree(self, step: int, tree: Any,
+                  extra_meta: dict | None = None,
+                  kind: str = "full") -> dict:
+        """Full snapshot of ``tree`` at ``step``; returns the manifest
+        (also persisted). ``manifest['stats']`` reports logical vs
+        newly-stored bytes so dedup is observable."""
+        flat = _ckpt._flatten(tree)
+        keys: dict[str, dict] = {}
+        logical = new_bytes = dedup = 0
+        for key, arr in flat.items():
+            buf, dtype = _ckpt.leaf_to_bytes(arr)
+            chunks, nb, dd = self._put_leaf(buf)
+            keys[key] = {"shape": list(arr.shape), "dtype": dtype,
+                         "chunks": chunks}
+            logical += len(buf)
+            new_bytes += nb
+            dedup += dd
+        manifest = {"format": "chunked-v1", "step": int(step),
+                    "kind": kind, "meta": extra_meta or {},
+                    "keys": keys,
+                    "stats": {"logical_bytes": logical,
+                              "new_bytes": new_bytes,
+                              "dedup_chunks": dedup}}
+        self.write_manifest(manifest)
+        return manifest
+
+    def read_leaf(self, entry: dict) -> np.ndarray:
+        buf = b"".join(self.get(c["id"]) for c in entry["chunks"])
+        return _ckpt.leaf_from_bytes(buf, entry["dtype"], entry["shape"])
+
+    def restore_tree(self, like: Any, step: int | None = None
+                     ) -> tuple[Any, dict]:
+        """Restore a full/base snapshot into the structure of ``like``.
+        Delta manifests are chains — use
+        ``delta.DeltaCheckpointer.restore`` for those."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no manifests under {self.root}")
+        manifest = self.load_manifest(step)
+        if manifest["kind"] == "delta":
+            from repro.checkpointing import delta
+            return delta.restore(self, like, step=step)
+        out_flat = {k: self.read_leaf(manifest["keys"][k])
+                    for k in _ckpt._flatten(like)}
+        return _ckpt.unflatten_like(like, out_flat), manifest["meta"]
+
+    # -- maintenance ---------------------------------------------------------
+
+    def gc(self, keep_steps: Iterable[int] | None = None) -> dict:
+        """Drop manifests not in ``keep_steps`` (None keeps all) and
+        every chunk no kept manifest references. Keeping a delta step
+        implicitly keeps its whole chain back to the base — a kept
+        checkpoint must stay restorable."""
+        keep = set(self.steps() if keep_steps is None else keep_steps)
+        for s in list(keep):
+            m = self.load_manifest(s)
+            while m["kind"] == "delta":
+                m = self.load_manifest(m["prev_step"])
+                keep.add(m["step"])
+        removed_manifests = 0
+        for s in self.steps():
+            if s not in keep:
+                self._manifest_path(s).unlink()
+                removed_manifests += 1
+        live: set[str] = set()
+        for s in self.steps():
+            live.update(chunk_ids(self.load_manifest(s)))
+        removed_chunks = 0
+        for sub in (self.root / "chunks").iterdir():
+            for p in sub.iterdir():
+                if not p.name.startswith(".") and p.name not in live:
+                    p.unlink()
+                    removed_chunks += 1
+        return {"manifests": removed_manifests, "chunks": removed_chunks}

@@ -1,0 +1,330 @@
+"""Swarm P2P checkpoint fetch over the chunk store (paper §2.4.2 +
+SWARM Parallelism: stripe transfers across unreliable peers and
+rebalance when one dies).
+
+A joining node needs the latest checkpoint but no central storage
+exists — only other training peers, each running a ``ChunkPeer`` next
+to its ``ChunkStore``. ``swarm_fetch``:
+
+  1. asks every peer for its latest step and targets the newest;
+  2. pulls the manifest chain (base + deltas) from any holder;
+  3. dedups against the local store (a rejoining node only fetches
+     what changed since it left);
+  4. splits the missing chunk ids into contiguous ranges on a shared
+     work queue and downloads them from ALL live peers in parallel —
+     each range is served by exactly one peer (disjoint striping);
+  5. verifies every chunk by its content address on arrival;
+  6. when a peer dies mid-transfer (connection drop, bad bytes,
+     missing chunk), re-queues that peer's unfinished range so the
+     survivors pick it up; the fetch fails only when NO peer is left.
+
+Protocol: length-prefixed sha256-checked frames (same framing as
+``p2p``). Requests are JSON; chunk payloads are the store's deflated
+blobs, verified end-to-end by chunk id after inflation.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import pathlib
+import socket
+import threading
+from typing import Sequence
+
+from repro.checkpointing import delta as _delta
+from repro.checkpointing.p2p import (FetchError, _recv_frame,
+                                     _send_frame)
+from repro.checkpointing.store import ChunkCorruptError, ChunkStore
+
+Addr = tuple  # (host, port)
+
+
+class SwarmFetchError(FetchError):
+    """The swarm fetch could not complete; ``failures`` maps peer
+    address -> reason."""
+
+    def __init__(self, msg: str, failures: dict | None = None):
+        super().__init__(msg)
+        self.failures = failures or {}
+
+
+class NoPeersError(SwarmFetchError):
+    """No reachable peer holds a checkpoint."""
+
+
+class ChunkPeer:
+    """Serves a ``ChunkStore`` to joining peers.
+
+    Request frames (JSON): ``{"op": "latest"}`` ->
+    ``{"step": int|null}``; ``{"op": "manifest", "step": n}`` -> the
+    manifest (or ``{"error": "no-such-step"}``); ``{"op": "chunks",
+    "ids": [...]}`` -> one blob frame per id, in order (an empty frame
+    means the peer doesn't hold that chunk).
+
+    ``crash_after`` is the fault-injection hook used by the cluster
+    simulator: the peer serves that many chunks, then drops every
+    connection and stops accepting — a silent mid-transfer crash.
+    """
+
+    def __init__(self, store: ChunkStore, host: str = "127.0.0.1",
+                 port: int = 0, crash_after: int | None = None):
+        self.store = store
+        self.crash_after = crash_after
+        self.served_chunks = 0
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(8)
+        self.port = self._sock.getsockname()[1]
+        self.addr = (host, self.port)
+        self._stop = threading.Event()
+        self._accept = threading.Thread(target=self._serve, daemon=True)
+        self._accept.start()
+
+    def _serve(self) -> None:
+        self._sock.settimeout(0.2)
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            threading.Thread(target=self._session, args=(conn,),
+                             daemon=True).start()
+
+    def _session(self, conn: socket.socket) -> None:
+        try:
+            conn.settimeout(10.0)
+            while not self._stop.is_set():
+                req = json.loads(_recv_frame(conn))
+                op = req.get("op")
+                if op == "latest":
+                    _send_frame(conn, json.dumps(
+                        {"step": self.store.latest_step()}).encode())
+                elif op == "manifest":
+                    try:
+                        m = self.store.load_manifest(req["step"])
+                        _send_frame(conn, json.dumps(m).encode())
+                    except FileNotFoundError:
+                        _send_frame(conn, json.dumps(
+                            {"error": "no-such-step"}).encode())
+                elif op == "chunks":
+                    for digest in req["ids"]:
+                        if self.crash_after is not None and \
+                                self.served_chunks >= self.crash_after:
+                            self.crash()
+                            return
+                        try:
+                            blob = self.store.get_blob(digest)
+                        except KeyError:
+                            blob = b""
+                        _send_frame(conn, blob)
+                        self.served_chunks += 1
+                else:
+                    return
+        except (FetchError, OSError, json.JSONDecodeError):
+            pass
+        finally:
+            conn.close()
+
+    def crash(self) -> None:
+        """Die silently mid-transfer (fault injection)."""
+        self._stop.set()
+        self._sock.close()
+
+    def close(self) -> None:
+        self._stop.set()
+        self._accept.join(timeout=2)
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+class _PeerConn:
+    def __init__(self, addr: Addr, timeout: float):
+        self.addr = tuple(addr)
+        self.sock = socket.create_connection(addr, timeout=timeout)
+        self.sock.settimeout(timeout)
+
+    def request(self, payload: dict) -> bytes:
+        _send_frame(self.sock, json.dumps(payload).encode())
+        return _recv_frame(self.sock)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def _manifest_chain(conn: _PeerConn, step: int) -> list[dict]:
+    """The full manifest chain for ``step`` (base first), fetched from
+    one peer."""
+    chain = []
+    s = step
+    while True:
+        m = json.loads(conn.request({"op": "manifest", "step": s}))
+        if "error" in m:
+            raise SwarmFetchError(
+                f"peer {conn.addr} lost step {s} mid-chain")
+        chain.append(m)
+        if m["kind"] != "delta":
+            return chain[::-1]
+        s = m["prev_step"]
+
+
+def _manifest_chain_any(holders: list[_PeerConn], step: int,
+                        failures: dict) -> list[dict]:
+    """Chain fetch with failover: a bad first holder must not abort a
+    recovery two healthy holders could serve."""
+    last: Exception | None = None
+    for c in list(holders):
+        try:
+            return _manifest_chain(c, step)
+        except (FetchError, OSError) as e:
+            failures[c.addr] = f"manifest chain: {e}"
+            holders.remove(c)
+            c.close()
+            last = e
+    raise SwarmFetchError(f"no peer could serve the manifest chain "
+                          f"for step {step}: {last}", failures)
+
+
+def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
+                *, step: int | None = None, range_chunks: int = 8,
+                timeout: float = 20.0) -> dict:
+    """Fetch the newest checkpoint (manifest chain + all missing
+    chunks) from ``peers`` into ``store``, striping disjoint chunk
+    ranges across every live peer and reassigning on peer death.
+
+    Returns stats: ``{"step", "chunks_fetched", "bytes_fetched",
+    "per_peer", "reassigned_ranges", "dead_peers"}``.
+    """
+    if isinstance(store, (str, pathlib.Path)):
+        store = ChunkStore(store)
+    failures: dict[Addr, str] = {}
+    conns: list[_PeerConn] = []
+    for addr in peers:
+        try:
+            conns.append(_PeerConn(addr, timeout))
+        except OSError as e:
+            failures[tuple(addr)] = f"connect: {e}"
+    try:
+        # -- pick the newest step any peer holds -------------------------
+        latest: dict[Addr, int] = {}
+        for c in list(conns):
+            try:
+                got = json.loads(c.request({"op": "latest"}))["step"]
+                if got is not None:
+                    latest[c.addr] = got
+            except (FetchError, OSError) as e:
+                failures[c.addr] = f"latest: {e}"
+                conns.remove(c)
+                c.close()
+        if step is None:
+            if not latest:
+                raise NoPeersError("no reachable peer holds a "
+                                   "checkpoint", failures)
+            step = max(latest.values())
+        holders = [c for c in conns if latest.get(c.addr, -1) >= step]
+        if not holders:
+            raise NoPeersError(f"no peer holds step {step}", failures)
+        chain = _manifest_chain_any(holders, step, failures)
+
+        # -- dedup against local state, stripe the remainder -------------
+        need: dict[str, None] = {}
+        for m in chain:
+            for d in store.missing(m):
+                need.setdefault(d, None)
+        ids = list(need)
+        ranges = collections.deque(
+            ids[i:i + range_chunks]
+            for i in range(0, len(ids), range_chunks))
+        cv = threading.Condition()
+        inflight = [0]   # ranges popped but not yet finished/requeued
+        stats = {"step": step, "chunks_fetched": 0, "bytes_fetched": 0,
+                 "per_peer": {f"{a[0]}:{a[1]}": 0 for a in
+                              (c.addr for c in holders)},
+                 "reassigned_ranges": 0, "dead_peers": []}
+
+        def worker(conn: _PeerConn) -> None:
+            name = f"{conn.addr[0]}:{conn.addr[1]}"
+            while True:
+                with cv:
+                    # another peer's in-flight batch may yet fail and
+                    # be requeued — stay alive until nothing is left
+                    # pending anywhere, not merely until the queue is
+                    # momentarily empty
+                    cv.wait_for(lambda: ranges or inflight[0] == 0)
+                    if not ranges:
+                        return
+                    batch = ranges.popleft()
+                    inflight[0] += 1
+                done = 0
+                try:
+                    payload = conn.request({"op": "chunks",
+                                            "ids": batch})
+                    for i, digest in enumerate(batch):
+                        blob = payload if i == 0 else _recv_frame(
+                            conn.sock)
+                        if not blob:
+                            raise ChunkCorruptError(
+                                f"peer missing chunk {digest[:12]}")
+                        store.put_blob(digest, blob)
+                        done += 1
+                        with cv:
+                            stats["chunks_fetched"] += 1
+                            stats["bytes_fetched"] += len(blob)
+                            stats["per_peer"][name] += 1
+                    with cv:
+                        inflight[0] -= 1
+                        cv.notify_all()
+                except (FetchError, ChunkCorruptError, OSError) as e:
+                    with cv:
+                        inflight[0] -= 1
+                        rest = batch[done:]
+                        if rest:
+                            ranges.append(rest)
+                            stats["reassigned_ranges"] += 1
+                        failures[conn.addr] = str(e)
+                        stats["dead_peers"].append(name)
+                        cv.notify_all()
+                    return
+
+        threads = [threading.Thread(target=worker, args=(c,),
+                                    daemon=True) for c in holders]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        still_missing = [d for d in ids if not store.has(d)]
+        if still_missing:
+            raise SwarmFetchError(
+                f"{len(still_missing)} chunks unfetched after all "
+                f"peers failed", failures)
+        # chunks are all present and verified: publish the manifests
+        # (base first) so a local restore sees a complete chain
+        for m in chain:
+            store.write_manifest(m)
+        return stats
+    finally:
+        for c in conns:
+            c.close()
+
+
+def recover(peers: Sequence[Addr], store_root: str | pathlib.Path,
+            like, *, step: int | None = None, timeout: float = 20.0):
+    """One-call joiner recovery: swarm-fetch into a local store, then
+    restore into the structure of ``like``. Returns
+    (tree, meta, fetch_stats)."""
+    store = ChunkStore(store_root)
+    stats = swarm_fetch(peers, store, step=step, timeout=timeout)
+    manifest = store.load_manifest(stats["step"])
+    if manifest["kind"] == "delta":
+        tree, meta = _delta.restore(store, like, step=stats["step"])
+    else:
+        tree, meta = store.restore_tree(like, step=stats["step"])
+    return tree, meta, stats

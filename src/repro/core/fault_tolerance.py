@@ -147,9 +147,18 @@ class ClusterSimulator:
         self.dt = seconds_per_outer_step
         self.crashed: set[int] = set()
         self.history: list[tuple[int, tuple[int, ...]]] = []
+        # side-effect hooks fired as each event is applied — the
+        # recovery tests use these to kill a node's ChunkPeer the
+        # moment its CRASH event lands (so a swarm fetch in flight
+        # loses that peer mid-transfer)
+        self._subscribers: list[Callable[[NodeEvent], None]] = []
         for nid in initial_nodes:
             self.hb.register(nid, self.now)
             self.hb.mark_live(nid)
+
+    def subscribe(self, fn: Callable[[NodeEvent], None]) -> None:
+        """Call ``fn(event)`` whenever an event is applied."""
+        self._subscribers.append(fn)
 
     def begin_outer_step(self, outer_step: int) -> dict:
         """Apply events for this step; return the sync plan:
@@ -159,6 +168,8 @@ class ClusterSimulator:
         for ev in self.events:
             if ev.outer_step != outer_step:
                 continue
+            for fn in self._subscribers:
+                fn(ev)
             if ev.kind == EventKind.JOIN:
                 self.hb.register(ev.node_id, self.now)
                 # joiner downloads a checkpoint P2P, becomes live at THIS

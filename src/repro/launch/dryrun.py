@@ -164,6 +164,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                         (k, 0) if plan.diloco_axis else (0,),
                         jnp.float32),
                     jax.ShapeDtypeStruct((), jnp.int32))
+                if outer_specs.anchor_flat is not None:
+                    # replicated-param plans thread the persistent
+                    # flat fp32 anchor through the sync step
+                    nflat = 0
+                    for s in jax.tree.leaves(pshapes):
+                        n = 1
+                        for d in s.shape:
+                            n *= d
+                        nflat += n
+                    outer_s = outer_s._replace(
+                        anchor_flat=jax.ShapeDtypeStruct(
+                            (nflat,), jnp.float32))
                 w_s = jax.ShapeDtypeStruct((k,), jnp.float32)
                 wspec = NamedSharding(
                     mesh, P(plan.diloco_axis) if plan.diloco_axis

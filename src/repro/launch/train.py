@@ -35,6 +35,21 @@ def main():
     ap.add_argument("--inner-lr", type=float, default=3e-4)
     ap.add_argument("--outer-lr", type=float, default=0.7)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-engine", default="flat",
+                    choices=["flat", "store", "delta"],
+                    help="flat npy dirs | content-addressed chunk "
+                         "store | chunk store + int8/int4 delta chain")
+    ap.add_argument("--ckpt-base-every", type=int, default=8,
+                    help="delta engine: full re-anchor every N saves")
+    ap.add_argument("--ckpt-codec", default="int8",
+                    choices=["int8", "int4"])
+    ap.add_argument("--serve-ckpt-port", type=int, default=None,
+                    help="serve the chunk store to joiners on this "
+                         "port after training (0 = ephemeral)")
+    ap.add_argument("--join-from", default=None,
+                    help="comma-separated host:port peers; swarm-fetch "
+                         "the latest checkpoint into --ckpt-dir and "
+                         "start from it")
     ap.add_argument("--events", default=None,
                     help='JSON list like [[2,"join",5],[3,"crash",1]]')
     ap.add_argument("--seed", type=int, default=0)
@@ -72,10 +87,51 @@ def main():
             outer_lr=args.outer_lr,
             error_feedback=args.error_feedback),
         inner_lr=args.inner_lr, ckpt_dir=args.ckpt_dir,
+        ckpt_engine=args.ckpt_engine,
+        ckpt_delta_base_every=args.ckpt_base_every,
+        ckpt_codec=args.ckpt_codec,
         max_workers=max(args.workers * 2, args.workers + 2))
     trainer = ElasticTrainer(model, tcfg, dcfg, params, sim)
+
+    if args.join_from:
+        from repro.checkpointing import recover
+        peers = []
+        for hp in args.join_from.split(","):
+            host, _, port = hp.rpartition(":")
+            peers.append((host or "127.0.0.1", int(port)))
+        assert args.ckpt_dir, "--join-from needs --ckpt-dir"
+        assert args.ckpt_engine != "flat", \
+            "--join-from fetches into a chunk store; use " \
+            "--ckpt-engine store|delta"
+        tree, meta, stats = recover(peers, args.ckpt_dir,
+                                    trainer.checkpoint_like())
+        trainer.adopt_checkpoint(tree, meta)
+        print(f"joined via swarm: step {stats['step']}, "
+              f"{stats['chunks_fetched']} chunks "
+              f"({stats['bytes_fetched']} B) from "
+              f"{len(stats['per_peer'])} peers "
+              f"(reassigned={stats['reassigned_ranges']})")
+
     hist = trainer.run(args.outer_steps,
                        inner_steps=args.inner_steps)
+    if args.serve_ckpt_port is not None:
+        assert args.ckpt_dir, "--serve-ckpt-port needs --ckpt-dir"
+        if args.ckpt_engine == "flat":
+            from repro.checkpointing import CheckpointServer
+            peer = CheckpointServer(args.ckpt_dir,
+                                    port=args.serve_ckpt_port)
+            print(f"serving flat checkpoints on 127.0.0.1:{peer.port} "
+                  f"(ctrl-C to stop)")
+        else:
+            peer = trainer.serve_checkpoints(port=args.serve_ckpt_port)
+            print(f"serving chunk store on 127.0.0.1:{peer.port} "
+                  f"(ctrl-C to stop)")
+        try:
+            import time
+            while True:
+                time.sleep(1)
+        except KeyboardInterrupt:
+            peer.close()
     for h in hist:
         print(json.dumps({k: v for k, v in h.items()
                           if k != "ring_order"}, default=str))

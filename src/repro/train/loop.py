@@ -44,6 +44,13 @@ class TrainerConfig:
     inner_lr: float | Callable = 7.5e-5
     ckpt_dir: str | None = None
     ckpt_every_outer: int = 1
+    # 'flat'  — npy-per-leaf dirs (seed layout, CheckpointServer-served)
+    # 'store' — content-addressed chunk store (dedup + swarm-fetchable)
+    # 'delta' — chunk store + int8/int4 delta chain between base anchors
+    ckpt_engine: str = "flat"
+    ckpt_delta_base_every: int = 8
+    ckpt_codec: str = "int8"       # delta codec: 'int8' | 'int4'
+    ckpt_chunk_bytes: int = 1 << 20
     max_workers: int = 16
     blocking_join: bool = True     # paper used blocking in production
     seconds_per_outer_step: float = 60.0
@@ -75,6 +82,30 @@ class ElasticTrainer:
         self.inner_phase_jit = jax.jit(self._inner_phase)
         self.history: list[dict] = []
         self._pipelines = {}
+        self.ckpt_store = None
+        self.snapshotter = None
+        if cfg.ckpt_dir and cfg.ckpt_engine != "flat":
+            from repro.checkpointing import (AsyncSnapshotter, ChunkStore,
+                                             DeltaCheckpointer,
+                                             DeltaConfig)
+            self.ckpt_store = ChunkStore(
+                cfg.ckpt_dir, chunk_bytes=cfg.ckpt_chunk_bytes)
+            if cfg.ckpt_engine == "delta":
+                writer = DeltaCheckpointer(
+                    self.ckpt_store,
+                    DeltaConfig(base_every=cfg.ckpt_delta_base_every,
+                                codec=cfg.ckpt_codec,
+                                quant_impl=cfg.diloco.quant_impl))
+                write_fn = writer.save
+            elif cfg.ckpt_engine == "store":
+                write_fn = self.ckpt_store.save_tree
+            else:
+                raise ValueError(
+                    f"unknown ckpt_engine {cfg.ckpt_engine!r}")
+            # double-buffered: persists overlap the next inner phase,
+            # bounded memory, FIFO so the delta reference chain is
+            # written in step order
+            self.snapshotter = AsyncSnapshotter(write_fn)
 
     # -- inner phase ----------------------------------------------------------
 
@@ -173,14 +204,60 @@ class ElasticTrainer:
 
             if self.cfg.ckpt_dir and \
                     (t + 1) % self.cfg.ckpt_every_outer == 0:
-                from repro.checkpointing import save_async
-                save_async(self.cfg.ckpt_dir, global_step,
-                           {"params": jax.tree.map(
-                               lambda p: p[0], self.params),
-                            "outer_momentum": self.outer.opt.momentum,
-                            "anchor": self.outer.anchor},
-                           extra_meta={"outer_step": t + 1})
+                tree = {"params": jax.tree.map(
+                            lambda p: p[0], self.params),
+                        "outer_momentum": self.outer.opt.momentum,
+                        "anchor": self.outer.anchor}
+                meta = {"outer_step": t + 1}
+                if self.snapshotter is not None:
+                    self.snapshotter.submit(global_step, tree, meta)
+                else:
+                    from repro.checkpointing import save_async
+                    save_async(self.cfg.ckpt_dir, global_step, tree,
+                               meta)
+        if self.snapshotter is not None:
+            self.snapshotter.flush()
         return self.history
+
+    def checkpoint_like(self):
+        """Template pytree matching what run() checkpoints (for
+        ``ChunkStore.restore_tree`` / ``delta.restore`` /
+        ``swarm.recover``)."""
+        return {"params": jax.tree.map(lambda p: p[0], self.params),
+                "outer_momentum": self.outer.opt.momentum,
+                "anchor": self.outer.anchor}
+
+    def serve_checkpoints(self, port: int = 0):
+        """Expose this node's chunk store to joining peers (the
+        paper's live-recovery serving side)."""
+        from repro.checkpointing import ChunkPeer
+        assert self.ckpt_store is not None, \
+            "serve_checkpoints requires ckpt_engine 'store' or 'delta'"
+        return ChunkPeer(self.ckpt_store, port=port)
+
+    def adopt_checkpoint(self, tree, meta: dict) -> None:
+        """Enter at the next outer boundary from a recovered
+        checkpoint: every slot resets to the recovered anchor and the
+        outer state resumes its momentum (paper §2.4.2 onboarding)."""
+        anchor = jax.tree.map(
+            lambda a: jnp.asarray(a, jnp.float32), tree["anchor"])
+        from repro.core.sync_engine import SyncEngine
+        eng = SyncEngine.for_tree(anchor)
+        self.outer = self.outer._replace(
+            anchor=anchor,
+            opt=self.outer.opt._replace(
+                momentum=jax.tree.map(
+                    lambda m: jnp.asarray(m, jnp.float32),
+                    tree["outer_momentum"])),
+            outer_step=jnp.asarray(meta.get("outer_step", 0),
+                                   jnp.int32),
+            anchor_flat=eng.flatten(anchor))
+        self.params = jax.tree.map(
+            lambda stacked, p: jnp.broadcast_to(
+                jnp.asarray(p, stacked.dtype)[None],
+                stacked.shape),
+            self.params, tree["params"])
+        self.opt_state = jax.vmap(self.optimizer.init)(self.params)
 
     def _outer_sync(self, weights):
         return dl.outer_sync_sim(self.params, self.outer,

@@ -20,6 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import diloco as dl
+from repro.core.sync_engine import SyncEngine
 from repro.models import common
 from repro.optim.adamw import AdamW, AdamWState
 from repro.optim.nesterov import NesterovState
@@ -233,6 +234,53 @@ def build_outer_sync(model, plan, mesh, diloco_cfg: dl.DiLoCoConfig,
             "error feedback requires per-shard residual bookkeeping; "
             "supported with replicated-inner-params plans only")
 
+    lead = lambda t: partition.with_leading(t, dax)
+
+    if not sharded_params:
+        # replicated-inner-params plans: thread the persistent flat
+        # fp32 anchor THROUGH the shard_map region, so the
+        # pseudo-gradient is one subtract off the buffer instead of a
+        # per-sync anchor re-flatten, and the updated buffer flows back
+        # out for the next outer step (sharded plans would need a
+        # per-shard flat view first — the anchor leaves inside the
+        # region are shards there).
+        def per_worker(params, anchor, momentum, residual, outer_step,
+                       a_flat, weights):
+            p_i = jax.tree.map(lambda x: x[0], params)
+            st = dl.OuterState(anchor, NesterovState(momentum),
+                               residual[0], outer_step,
+                               anchor_flat=a_flat)
+            new_p, new_st = dl.outer_sync(
+                p_i, st, diloco_cfg, dax, ring_order=ring_order,
+                weight=weights[0])
+            return (jax.tree.map(lambda x: x[None], new_p),
+                    new_st.anchor, new_st.opt.momentum,
+                    new_st.residual[None], new_st.outer_step,
+                    new_st.anchor_flat)
+
+        def sync(params_stacked, outer_state: dl.OuterState, weights):
+            a_flat = outer_state.anchor_flat
+            if a_flat is None:
+                eng = SyncEngine.for_tree(outer_state.anchor)
+                a_flat = eng.flatten(outer_state.anchor)
+            new_p, anchor, momentum, residual, ostep, new_a_flat = \
+                compat.shard_map(
+                    per_worker, mesh=mesh,
+                    in_specs=(lead(pspecs), pspecs, pspecs, P(dax),
+                              P(), P(), P(dax)),
+                    out_specs=(lead(pspecs), pspecs, pspecs, P(dax),
+                               P(), P()),
+                    check_vma=False)(
+                        params_stacked, outer_state.anchor,
+                        outer_state.opt.momentum, outer_state.residual,
+                        outer_state.outer_step, a_flat, weights)
+            return new_p, dl.OuterState(anchor, NesterovState(momentum),
+                                        residual, ostep, new_a_flat)
+
+        outer_specs = dl.OuterState(pspecs, NesterovState(pspecs),
+                                    P(dax), P(), P())
+        return sync, outer_specs
+
     def per_worker(params, anchor, momentum, residual, outer_step,
                    weights):
         p_i = jax.tree.map(lambda x: x[0], params)
@@ -244,8 +292,6 @@ def build_outer_sync(model, plan, mesh, diloco_cfg: dl.DiLoCoConfig,
         return (jax.tree.map(lambda x: x[None], new_p), new_st.anchor,
                 new_st.opt.momentum, new_st.residual[None],
                 new_st.outer_step)
-
-    lead = lambda t: partition.with_leading(t, dax)
 
     def sync(params_stacked, outer_state: dl.OuterState, weights):
         new_p, anchor, momentum, residual, ostep = compat.shard_map(

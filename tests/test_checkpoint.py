@@ -6,6 +6,7 @@ import pathlib
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpointing import (CheckpointServer, fetch_checkpoint,
                                  latest_step, restore, save, save_async)
@@ -76,6 +77,166 @@ def test_p2p_integrity_manifest(tmp_path, rng):
     assert set(m["keys"])
     for info in m["keys"].values():
         assert (src / "step_00000001" / "arrays" / info["file"]).exists()
+
+
+def test_ml_dtypes_roundtrip_exact_bits(tmp_path, rng):
+    """Any ml_dtype (bf16, fp8...) must restore with its ORIGINAL
+    dtype and bit pattern — the seed viewed every V-kind leaf as
+    uint16, corrupting 1-byte fp8 leaves on restore."""
+    import ml_dtypes
+    vals = rng.normal(size=(16,)).astype(np.float32)
+    tree = {"bf16": jnp.asarray(vals, jnp.bfloat16),
+            "fp8": np.asarray(vals).astype(ml_dtypes.float8_e4m3),
+            "f32": np.asarray(vals),
+            "i32": np.arange(5, dtype=np.int32)}
+    save(tmp_path, 1, tree)
+    restored, _ = restore(tmp_path, tree)
+    for k in tree:
+        got, want = np.asarray(restored[k]), np.asarray(tree[k])
+        assert got.dtype == want.dtype, k
+        np.testing.assert_array_equal(
+            got.view(np.uint8), want.view(np.uint8), err_msg=k)
+
+
+def test_server_retries_when_step_dir_swapped(tmp_path, rng,
+                                              monkeypatch):
+    """A concurrent save may rmtree/rename the step dir the server
+    just resolved: the server must retry against the new latest
+    instead of streaming a truncated checkpoint."""
+    from repro.checkpointing import checkpoint as ckpt_mod
+    tree = _tree(rng)
+    save(tmp_path, 2, tree, extra_meta={"outer_step": 1})
+    real = ckpt_mod.latest_step
+    calls = {"n": 0}
+
+    def flaky_latest(d):
+        calls["n"] += 1
+        # first resolution points at a dir that a concurrent save
+        # already swapped away; the retry sees the real one
+        return 999 if calls["n"] == 1 else real(d)
+
+    monkeypatch.setattr(ckpt_mod, "latest_step", flaky_latest)
+    server = CheckpointServer(tmp_path)
+    try:
+        got = fetch_checkpoint(("127.0.0.1", server.port),
+                               tmp_path / "dst")
+        assert got.name == "step_00000002"
+        assert calls["n"] >= 2
+    finally:
+        server.close()
+
+
+def test_server_returns_typed_retry_when_swaps_persist(tmp_path, rng,
+                                                       monkeypatch):
+    from repro.checkpointing import RetryableFetchError
+    from repro.checkpointing import checkpoint as ckpt_mod
+    save(tmp_path, 2, _tree(rng))
+    monkeypatch.setattr(ckpt_mod, "latest_step", lambda d: 999)
+    server = CheckpointServer(tmp_path)
+    try:
+        with pytest.raises(RetryableFetchError):
+            fetch_checkpoint(("127.0.0.1", server.port),
+                             tmp_path / "dst")
+    finally:
+        server.close()
+
+
+def test_concurrent_saves_never_corrupt_a_fetch(tmp_path, rng):
+    """Stress the save-swap race: a writer hammers save() of the same
+    step while a client fetches in a loop; every fetch either succeeds
+    with a complete checkpoint or raises a typed retryable error."""
+    import threading
+
+    from repro.checkpointing import FetchError
+    tree = _tree(rng)
+    save(tmp_path, 7, tree, extra_meta={"outer_step": 0})
+    stop = threading.Event()
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            save(tmp_path, 7, tree, extra_meta={"outer_step": i})
+            i += 1
+
+    w = threading.Thread(target=writer, daemon=True)
+    w.start()
+    server = CheckpointServer(tmp_path)
+    try:
+        ok = retryable = 0
+        for _ in range(15):
+            try:
+                got = fetch_checkpoint(("127.0.0.1", server.port),
+                                       tmp_path / "dst")
+                restored, _ = restore(tmp_path / "dst", tree,
+                                      step=7)
+                np.testing.assert_array_equal(
+                    np.asarray(tree["params"]["w"]),
+                    np.asarray(restored["params"]["w"]))
+                ok += 1
+            except FetchError:
+                retryable += 1   # clean, typed, caller can retry
+        assert ok >= 1
+    finally:
+        stop.set()
+        w.join(timeout=5)
+        server.close()
+
+
+# -- typed fetch failure paths (caller-retryable) -----------------------------
+
+
+def _one_shot_server(payload: bytes):
+    """Raw TCP server that sends ``payload`` once and hangs up."""
+    import socket
+    import threading
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+
+    def run():
+        conn, _ = srv.accept()
+        conn.sendall(payload)
+        conn.close()
+        srv.close()
+
+    threading.Thread(target=run, daemon=True).start()
+    return port
+
+
+def test_fetch_peer_closed_mid_frame_is_typed(tmp_path):
+    import struct
+
+    from repro.checkpointing import PeerClosedError
+    # frame header promises 100 bytes; only 10 arrive before the close
+    payload = struct.pack("!Q", 100) + b"\0" * 32 + b"0123456789"
+    port = _one_shot_server(payload)
+    with pytest.raises(PeerClosedError):
+        fetch_checkpoint(("127.0.0.1", port), tmp_path, timeout=5)
+
+
+def test_fetch_checksum_mismatch_is_typed(tmp_path):
+    import struct
+
+    from repro.checkpointing import ChecksumError
+    body = b'{"step": 1, "keys": {}}'
+    payload = struct.pack("!Q", len(body)) + b"\0" * 32 + body
+    port = _one_shot_server(payload)
+    with pytest.raises(ChecksumError):
+        fetch_checkpoint(("127.0.0.1", port), tmp_path, timeout=5)
+
+
+def test_fetch_empty_peer_is_typed(tmp_path):
+    from repro.checkpointing import EmptyPeerError, FetchError
+    server = CheckpointServer(tmp_path / "nothing_saved_here")
+    try:
+        with pytest.raises(EmptyPeerError) as ei:
+            fetch_checkpoint(("127.0.0.1", server.port),
+                             tmp_path / "dst")
+        assert isinstance(ei.value, FetchError)       # retry contract
+        assert isinstance(ei.value, FileNotFoundError)  # backwards-compat
+    finally:
+        server.close()
 
 
 def test_trainer_checkpoint_resume(tmp_path, rng):

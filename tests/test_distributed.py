@@ -138,6 +138,64 @@ def test_shard_map_train_step_runs_and_reduces_loss():
     assert "TRAIN-STEP-OK" in out
 
 
+def test_replicated_plan_sync_threads_anchor_flat():
+    """Replicated-inner-params plans thread the PERSISTENT flat fp32
+    anchor through the shard_map sync (ROADMAP follow-up from PR 1):
+    the returned state carries the updated buffer, it matches a fresh
+    flatten of the anchor, and chaining two syncs off it matches the
+    simulation."""
+    out = _run("""
+        from repro.core import diloco
+        from repro.core.sync_engine import SyncEngine
+        from repro.models.registry import get_model
+        from repro.configs import CONFIGS
+        from repro.configs.base import ShapeConfig
+        from repro.sharding import make_plan
+        from repro.train import step as step_lib
+
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
+        cfg = CONFIGS["mamba2-130m"].reduced()
+        shape = ShapeConfig("t", "train", 32, 8)
+        plan = make_plan(cfg, shape, {"data": 4, "model": 2})
+        assert plan.diloco_axis == "data"
+        model = get_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        k = plan.n_workers
+        stacked = jax.tree.map(
+            lambda x: jnp.stack([x + 0.01 * i for i in range(k)]),
+            params)
+        dcfg = diloco.DiLoCoConfig(quant="fp32")
+        st = diloco.init_outer_state(params, dcfg)
+        st = st._replace(residual=jnp.zeros((k, 0), jnp.float32))
+        with mesh:
+            sync, outer_specs = step_lib.build_outer_sync(
+                model, plan, mesh, dcfg)
+            # replicated plan => the flat anchor IS threaded
+            assert outer_specs.anchor_flat is not None
+            w = jnp.ones((k,), jnp.float32)
+            jsync = jax.jit(sync)
+            new_p, new_st = jsync(stacked, st, w)
+            assert new_st.anchor_flat is not None
+            # the threaded buffer equals a fresh flatten of the anchor
+            eng = SyncEngine.for_tree(new_st.anchor)
+            np.testing.assert_array_equal(
+                np.asarray(new_st.anchor_flat),
+                np.asarray(eng.flatten(new_st.anchor)))
+            # chain a second sync off the returned buffer
+            new_p2, new_st2 = jsync(new_p, new_st, w)
+        sim_st = diloco.init_outer_state_sim(params, dcfg, k)
+        sim_p, sim_st = diloco.outer_sync_sim(stacked, sim_st, dcfg)
+        sim_p2, _ = diloco.outer_sync_sim(sim_p, sim_st, dcfg)
+        for got, want in (((new_p), (sim_p)), ((new_p2), (sim_p2))):
+            np.testing.assert_allclose(
+                np.asarray(got["embed"], np.float32),
+                np.asarray(want["embed"], np.float32),
+                rtol=1e-5, atol=1e-6)
+        print("ANCHOR-FLAT-OK")
+    """)
+    assert "ANCHOR-FLAT-OK" in out
+
+
 def test_full_manual_sync_with_sharded_params():
     """Hybrid FSDP+DiLoCo: per-shard rings on a 2x2 mesh equal the
     unsharded simulation."""
