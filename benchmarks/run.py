@@ -29,6 +29,7 @@ MODULES = [
     ("kernels", "benchmarks.kernel_bench"),
     ("sync", "benchmarks.sync_bench"),
     ("recovery", "benchmarks.recovery_bench"),
+    ("serve", "benchmarks.serve_bench"),
 ]
 
 JSON_PATH = "BENCH_sync.json"

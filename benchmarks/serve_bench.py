@@ -1,0 +1,111 @@
+"""Continuous vs wave serving benchmark on a mixed-length trace.
+
+The trace mixes short-prompt/short-generation requests with
+long-generation stragglers — the workload where wave scheduling
+strands slots (a drained request idles until the whole wave finishes)
+and per-token host syncs dominate. Both engines run the SAME requests
+greedily; outputs must be bit-identical (asserted into the payload), so
+the speedup is pure scheduling + sync amortization.
+
+``python -m benchmarks.run serve --json`` writes ``BENCH_serve.json``
+(tokens/sec, p50/p95 request latency, slot occupancy, speedups) — the
+serving perf-trajectory file future PRs diff against. ``--smoke``
+shrinks the trace for CI. Each engine does one warmup pass (compiles)
+and is re-timed on a fresh copy of the trace.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+JSON_PATH = "BENCH_serve.json"
+
+ARCH = "internlm2-1.8b"      # dense GQA reduced: exercises bucketing
+SLOTS = 4
+MAX_LEN = 256
+DECODE_CHUNK = 8
+
+
+def _trace(n_requests: int, vocab: int, long_new: int):
+    """70% short prompt+gen, 30% long-gen stragglers (mixed lengths)."""
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(n_requests):
+        straggler = i % 3 == 2
+        plen = int(rng.integers(24, 90)) if straggler else \
+            int(rng.integers(4, 24))
+        reqs.append((i, rng.integers(2, vocab, size=plen).astype(
+            np.int32), long_new if straggler else 5))
+    return reqs
+
+
+def _run_engine(kind, model, params, trace):
+    from repro.serving.engine import Request, make_engine
+    engine = make_engine(kind, model, params, batch_slots=SLOTS,
+                         max_len=MAX_LEN, decode_chunk=DECODE_CHUNK)
+
+    def submit_all():
+        reqs = [Request(rid, prompt, max_new_tokens=mnew)
+                for rid, prompt, mnew in trace]
+        for r in reqs:
+            engine.submit(r)
+        return reqs
+
+    warm = submit_all()                  # warmup: pays all compiles
+    engine.run_until_drained()
+    engine.reset_metrics()
+    timed = submit_all()
+    engine.run_until_drained()
+    assert all(r.done for r in timed)
+    return engine.perf_summary(), [r.out_tokens for r in warm]
+
+
+def run_json(smoke: bool = False):
+    from repro.configs import CONFIGS
+    from repro.models.registry import get_model
+
+    cfg = CONFIGS[ARCH].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    trace = _trace(10 if smoke else 30, cfg.vocab,
+                   long_new=24 if smoke else 56)
+
+    wave, wave_out = _run_engine("wave", model, params, trace)
+    cont, cont_out = _run_engine("continuous", model, params, trace)
+    identical = wave_out == cont_out
+    # acceptance guardrail, not just a recorded field: a broken
+    # equivalence must fail the CI smoke step, not ship green
+    assert identical, "wave vs continuous greedy outputs diverged"
+
+    speedup = cont["tokens_per_s"] / wave["tokens_per_s"]
+    p95_speedup = wave["latency_p95_s"] / cont["latency_p95_s"]
+    payload = {"serve": {
+        "arch": ARCH, "slots": SLOTS, "max_len": MAX_LEN,
+        "decode_chunk": DECODE_CHUNK, "requests": len(trace),
+        "smoke": smoke,
+        "wave": wave, "continuous": cont,
+        "tokens_per_s_speedup": speedup,
+        "p95_latency_speedup": p95_speedup,
+        "greedy_bit_identical": identical,
+    }}
+    rows = []
+    for s in (wave, cont):
+        us_per_tok = s["wall_s"] / max(1, s["tokens_out"]) * 1e6
+        rows.append(
+            f"serve_{s['engine']},{us_per_tok:.1f},"
+            f"tok/s={s['tokens_per_s']:.1f} "
+            f"p95={s['latency_p95_s'] * 1e3:.0f}ms "
+            f"occ={s['slot_occupancy']:.2f}")
+    rows.append(f"serve_speedup,0,{speedup:.2f}x_tok/s "
+                f"{p95_speedup:.2f}x_p95 bit_identical={identical}")
+    return rows, payload
+
+
+def run(smoke: bool = False):
+    rows, _ = run_json(smoke=smoke)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,36 +1,38 @@
-"""Batched serving with the wave engine: prefill + lockstep decode over
-the model zoo (here: the attention-free Mamba2, whose decode state is
-O(1) per token).
+"""Continuous-batching serving over the model zoo (here: the
+attention-free Mamba2, whose decode state is O(1) per token): per-slot
+admission/retirement, bucketed exact prefill, and an on-device decode
+loop sampling with per-request temperatures.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
-import time
-
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models.registry import get_model
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import ContinuousEngine, Request
 
 cfg = get_config("mamba2-130m").reduced()
 model = get_model(cfg)
 params, _ = model.init(jax.random.PRNGKey(0))
 
-engine = ServeEngine(model, params, batch_slots=4, max_len=128)
+engine = ContinuousEngine(model, params, batch_slots=4, max_len=128,
+                          decode_chunk=8, top_k=8)
 rng = np.random.default_rng(0)
 reqs = [Request(i, rng.integers(2, cfg.vocab, size=rng.integers(4, 12))
-                .astype(np.int32), max_new_tokens=12)
+                .astype(np.int32), max_new_tokens=12,
+                temperature=0.0 if i % 2 == 0 else 0.8)
         for i in range(10)]
 for r in reqs:
     engine.submit(r)
 
-t0 = time.time()
 engine.run_until_drained()
-dt = time.time() - t0
 for r in reqs[:3]:
-    print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
-s = engine.stats
-print(f"\n{len(reqs)} requests in {s['waves']} waves, "
-      f"{s['decode_steps']} decode steps, "
-      f"{s['tokens_out'] / dt:.1f} tok/s on CPU")
+    mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
+    print(f"req {r.rid} ({mode}): prompt[{len(r.prompt)}] -> "
+          f"{r.out_tokens}")
+s = engine.perf_summary()
+print(f"\n{s['requests']} requests, {s['decode_steps']} decode steps "
+      f"in {s['host_syncs']} host syncs, {s['tokens_per_s']:.1f} tok/s "
+      f"on CPU, p95 latency {s['latency_p95_s'] * 1e3:.0f} ms, "
+      f"occupancy {s['slot_occupancy']:.2f}")

@@ -47,7 +47,9 @@ class AsyncSnapshotter:
         self._cv = threading.Condition()
         self._closed = False
         self._error: BaseException | None = None
-        self.stats = {"submits": 0, "blocked_waits": 0, "writes": 0}
+        self._tasks_inflight = 0
+        self.stats = {"submits": 0, "blocked_waits": 0, "writes": 0,
+                      "tasks": 0}
         self._writer = threading.Thread(target=self._drain, daemon=True)
         self._writer.start()
 
@@ -60,7 +62,23 @@ class AsyncSnapshotter:
                     self._cv.wait()
                 if not self._queue and self._closed:
                     return
-                slot, step, meta = self._queue.pop(0)
+                item = self._queue.pop(0)
+                if item[0] == "task":
+                    self._tasks_inflight += 1
+            if item[0] == "task":
+                _, fn = item
+                try:
+                    fn()
+                except BaseException as e:
+                    with self._cv:
+                        self._error = e
+                finally:
+                    with self._cv:
+                        self._tasks_inflight -= 1
+                        self.stats["tasks"] += 1
+                        self._cv.notify_all()
+                continue
+            _, slot, step, meta = item
             try:
                 self.write_fn(step, slot.tree, meta)
             except BaseException as e:  # surfaced on next submit/flush
@@ -116,7 +134,18 @@ class AsyncSnapshotter:
             raise
         with self._cv:
             self.stats["submits"] += 1
-            self._queue.append((slot, int(step), extra_meta or {}))
+            self._queue.append(("write", slot, int(step),
+                                extra_meta or {}))
+            self._cv.notify_all()
+
+    def submit_task(self, fn: Callable[[], Any]) -> None:
+        """Queue an arbitrary maintenance callable (e.g. ChunkStore.gc)
+        BEHIND all pending persists — FIFO with writes, so retention
+        never deletes chunks of a checkpoint still being written."""
+        with self._cv:
+            self._raise_pending()
+            assert not self._closed, "snapshotter closed"
+            self._queue.append(("task", fn))
             self._cv.notify_all()
 
     def flush(self, timeout: float | None = None) -> None:
@@ -125,7 +154,8 @@ class AsyncSnapshotter:
         with self._cv:
             done = self._cv.wait_for(
                 lambda: not self._queue
-                and not any(s.busy for s in self._slots),
+                and not any(s.busy for s in self._slots)
+                and self._tasks_inflight == 0,
                 timeout=timeout)
             self._raise_pending()
             if not done:

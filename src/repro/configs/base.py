@@ -78,6 +78,9 @@ class ArchConfig:
     # per-arch parallelism hints (see sharding.plans)
     diloco_pref: str = "auto"         # 'auto' | 'pod_only' | 'none'
     fsdp_data: bool = False           # additionally shard params on 'data'
+    # serving decode-attention backend: 'jnp' | 'pallas' (flash-decode
+    # TPU kernel; interpret mode off-TPU — see kernels/flash_decode.py)
+    decode_attn_impl: str = "jnp"
 
     @property
     def np_dtype(self):

@@ -1,54 +1,82 @@
-"""Serving launcher: batched generation with the wave engine.
+"""Serving launcher: batched generation with the wave or continuous
+engine, with tokens/sec and request-latency percentiles at exit.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
-      --reduced --requests 8 --max-new 16
+      --reduced --requests 8 --max-new 16 --engine continuous
+
+``--engine wave`` keeps the legacy static batcher for A/B runs;
+``--attn-impl pallas`` routes decode attention through the Pallas
+flash-decode kernel (interpret mode off-TPU).
 """
 from __future__ import annotations
 
 import argparse
-import time
+import dataclasses
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-130m")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--engine", default="continuous",
+                    choices=["wave", "continuous"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--attn-impl", default="jnp",
+                    choices=["jnp", "pallas"])
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="disable power-of-two prompt pad bucketing")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.engine == "wave" and args.temperature > 0:
+        ap.error("--engine wave is greedy-only; use --engine "
+                 "continuous for --temperature > 0")
 
     import jax
     import numpy as np
 
     from repro.configs import get_config
     from repro.models.registry import get_model
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.engine import Request, make_engine
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.attn_impl != cfg.decode_attn_impl:
+        cfg = dataclasses.replace(cfg, decode_attn_impl=args.attn_impl)
     model = get_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(model, params, batch_slots=args.slots,
-                         max_len=args.max_len)
+    engine = make_engine(args.engine, model, params,
+                         batch_slots=args.slots, max_len=args.max_len,
+                         bucket_prompts=not args.no_bucket,
+                         decode_chunk=args.decode_chunk,
+                         top_k=args.top_k, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
+        plen = max(1, int(rng.integers(args.prompt_len // 2,
+                                       args.prompt_len + 1)))
         engine.submit(Request(
             rid=i,
-            prompt=rng.integers(
-                2, cfg.vocab, size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new))
-    t0 = time.time()
+            prompt=rng.integers(2, cfg.vocab, size=plen).astype(
+                np.int32),
+            max_new_tokens=args.max_new,
+            temperature=args.temperature))
     engine.run_until_drained()
-    dt = time.time() - t0
-    print(f"requests={args.requests} waves={engine.stats['waves']} "
-          f"decode_steps={engine.stats['decode_steps']} "
-          f"tokens={engine.stats['tokens_out']} "
-          f"tok/s={engine.stats['tokens_out']/dt:.1f}")
+    s = engine.perf_summary()
+    print(f"engine={s['engine']} requests={s['requests']} "
+          f"tokens={s['tokens_out']} decode_steps={s['decode_steps']}")
+    print(f"tok/s={s['tokens_per_s']:.1f} "
+          f"p50_latency={s['latency_p50_s'] * 1e3:.1f}ms "
+          f"p95_latency={s['latency_p95_s'] * 1e3:.1f}ms "
+          f"occupancy={s['slot_occupancy']:.2f} "
+          f"host_syncs={s['host_syncs']} "
+          f"prefill_widths={s['prefill_widths']}")
 
 
 if __name__ == "__main__":

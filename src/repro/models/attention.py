@@ -31,13 +31,13 @@ NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: jnp.ndarray        # (B, S_max, Hk, dh)
     v: jnp.ndarray        # (B, S_max, Hk, dh)
-    length: jnp.ndarray   # () int32 — tokens written so far (absolute)
+    length: jnp.ndarray   # (B,) int32 — tokens written PER SLOT (absolute)
 
     @classmethod
     def init(cls, batch: int, max_len: int, n_kv: int, head_dim: int,
              dtype=jnp.bfloat16) -> "KVCache":
         z = jnp.zeros((batch, max_len, n_kv, head_dim), dtype)
-        return cls(z, jnp.copy(z), jnp.zeros((), jnp.int32))
+        return cls(z, jnp.copy(z), jnp.zeros((batch,), jnp.int32))
 
 
 def _grouped(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
@@ -138,13 +138,43 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(b, sq, hq, dh).astype(q.dtype)
 
 
-def decode_attention(q: jnp.ndarray, cache: KVCache, *,
-                     window: int | None = None) -> jnp.ndarray:
-    """Single-token grouped attention against the cache.
+def decode_valid_mask(length: jnp.ndarray, s_max: int,
+                      window: int | None) -> jnp.ndarray:
+    """(B,) per-slot lengths -> (B, S_max) bool mask of live cache cells.
 
-    q: (B, 1, Hq, dh). With a seq-sharded cache the contractions reduce
-    locally per shard and XLA merges partials (flash-decoding). For SWA
-    the cache is a rolling buffer of size >= window."""
+    Full-causal: cell s is live while s < length. SWA: the cache is a
+    rolling ring of size s_max; recover each cell's absolute position
+    from the write cursor and keep the last ``window`` positions."""
+    length = length[:, None].astype(jnp.int32)        # (B, 1)
+    slot = jnp.arange(s_max)[None, :]                 # (1, S)
+    if window is None:
+        return slot < length
+    wrap = length > s_max
+    rem = length % s_max
+    abs_pos = jnp.where(
+        wrap,
+        jnp.where(slot < rem, length - rem + slot,
+                  length - rem - s_max + slot),
+        slot)
+    return (abs_pos < length) & (abs_pos >= length - window)
+
+
+def decode_attention(q: jnp.ndarray, cache: KVCache, *,
+                     window: int | None = None,
+                     impl: str = "jnp") -> jnp.ndarray:
+    """Single-token grouped attention against the per-slot cache.
+
+    q: (B, 1, Hq, dh); ``cache.length`` is (B,) so every slot masks its
+    own live prefix — slots at different sequence lengths decode
+    together (continuous batching). With a seq-sharded cache the
+    contractions reduce locally per shard and XLA merges partials
+    (flash-decoding). For SWA the cache is a rolling buffer of size >=
+    window. ``impl="pallas"`` selects the fused flash-decode TPU kernel
+    (interpret mode off-TPU)."""
+    if impl == "pallas":
+        from repro.kernels import flash_decode
+        return flash_decode.flash_decode(q, cache.k, cache.v,
+                                         cache.length, window=window)
     b, t, hq, dh = q.shape
     s_max = cache.k.shape[1]
     hk = cache.k.shape[2]
@@ -153,20 +183,7 @@ def decode_attention(q: jnp.ndarray, cache: KVCache, *,
     s = jnp.einsum("btkgd,bskd->bkgts", qg, cache.k).astype(
         jnp.float32) * scale
 
-    if window is None:
-        valid = jnp.arange(s_max)[None, :] < cache.length
-    else:
-        length = cache.length
-        slot = jnp.arange(s_max)
-        wrap = length > s_max
-        abs_pos = jnp.where(
-            wrap,
-            jnp.where(slot < length % s_max,
-                      length - (length % s_max) + slot,
-                      length - (length % s_max) - s_max + slot),
-            slot)
-        valid = ((abs_pos < length) & (abs_pos >= length - window))[
-            None, :]
+    valid = decode_valid_mask(cache.length, s_max, window)   # (B, S)
     s = jnp.where(valid[:, None, None, None], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
@@ -182,14 +199,20 @@ def cache_update(cache: KVCache, k_new: jnp.ndarray,
                  v_new: jnp.ndarray, *, rolling: bool = False) -> KVCache:
     """Append S_new tokens (prefill write or single decode step).
 
+    Per-slot write offsets: each slot writes at its own ``length`` (a
+    vmapped dynamic_update_slice, lowered to a batched scatter), so a
+    freshly prefilled slot can sit next to slots deep into decode.
     Rolling mode wraps into a window-sized ring buffer; for prefill
     writes larger than the buffer, slice to the last s_max tokens and
     bump ``length`` before calling (see transformer.prefill)."""
     s_max = cache.k.shape[1]
     s_new = k_new.shape[1]
-    start = cache.length % s_max if rolling else cache.length
-    k = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k_new.astype(cache.k.dtype), start, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v_new.astype(cache.v.dtype), start, axis=1)
+    start = cache.length % s_max if rolling else cache.length   # (B,)
+
+    def write(buf, new, st):
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), st, axis=0)
+
+    k = jax.vmap(write)(cache.k, k_new, start)
+    v = jax.vmap(write)(cache.v, v_new, start)
     return KVCache(k, v, cache.length + s_new)

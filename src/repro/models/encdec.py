@@ -178,7 +178,7 @@ def init_cache(cfg, batch_size: int, max_len: int, src_len: int):
                               cfg.n_kv_heads, hd), cfg.np_dtype),
         "cross_v": jnp.zeros((n_dec, batch_size, src_len,
                               cfg.n_kv_heads, hd), cfg.np_dtype),
-        "src_len": jnp.zeros((), jnp.int32),
+        "src_len": jnp.zeros((batch_size,), jnp.int32),   # per slot
     }
 
 
@@ -198,7 +198,7 @@ def prefill(cfg, params, src_embeds, bos_token, cache):
     ck, cv = jax.vmap(cross_kv)(params["dec"])  # vmap over layer stack
     cache = dict(cache, cross_k=ck.astype(cfg.np_dtype),
                  cross_v=cv.astype(cfg.np_dtype),
-                 src_len=jnp.asarray(sl, jnp.int32))
+                 src_len=jnp.full((b,), sl, jnp.int32))
     return decode_step(cfg, params, bos_token, cache)
 
 
@@ -207,8 +207,8 @@ def decode_step(cfg, params, token, cache):
     x = common.embedding_lookup(params["embed"], token)
     b = x.shape[0]
     hd = _hd(cfg)
-    length = cache["self"].length[0]
-    pos = jnp.broadcast_to(length[None, None], (b, 1)).astype(jnp.int32)
+    length = cache["self"].length[0]                   # (B,)
+    pos = length[:, None].astype(jnp.int32)
 
     def body(x, pc):
         p, sc, ck, cv = pc
@@ -223,7 +223,7 @@ def decode_step(cfg, params, token, cache):
         q = common.apply_rope(q, pos, cfg.rope_theta)
         k = common.apply_rope(k, pos, cfg.rope_theta)
         sc = attn.cache_update(sc, k, v)
-        o = attn.decode_attention(q, sc)
+        o = attn.decode_attention(q, sc, impl=cfg.decode_attn_impl)
         x = x + jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, -1),
                            p["self"]["wo"])
         # cross-attention against the precomputed memory K/V
@@ -231,7 +231,7 @@ def decode_step(cfg, params, token, cache):
         q = jnp.einsum("bsd,dh->bsh", h, p["cross"]["wq"]).reshape(
             b, 1, cfg.n_heads, hd)
         cross = attn.KVCache(ck, cv, cache["src_len"])
-        o = attn.decode_attention(q, cross)
+        o = attn.decode_attention(q, cross, impl=cfg.decode_attn_impl)
         x = x + jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, -1),
                            p["cross"]["wo"])
         h = common.rms_norm(x, p["ln_mlp"], cfg.norm_eps)

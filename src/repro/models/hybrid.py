@@ -99,7 +99,8 @@ def _shared_attn_apply(cfg, p, x, app_idx, *, positions,
     new_cache = None
     if layer_cache is not None and s == 1:
         new_cache = attn.cache_update(layer_cache, k, v)
-        o = attn.decode_attention(q, new_cache)
+        o = attn.decode_attention(q, new_cache,
+                                  impl=cfg.decode_attn_impl)
     else:
         o = attn.attention(q, k, v, causal=True, block_q=cfg.block_q)
         if return_kv:
@@ -112,9 +113,12 @@ def _shared_attn_apply(cfg, p, x, app_idx, *, positions,
 
 
 def forward(cfg, params, tokens, *, remat: bool = False,
-            collect_state: bool = False, states=None, kv_caches=None):
+            collect_state: bool = False, states=None, kv_caches=None,
+            prompt_len=None):
     """Training forward (and prefill when collect_state=True).
 
+    ``prompt_len``: (B,) true lengths for right-padded serving prefill
+    (threaded into the SSD mask — see ssm.apply_mamba2).
     Returns (logits, (ssm_states, kv_caches) or None)."""
     scfg = _ssm_cfg(cfg)
     x = common.embedding_lookup(params["embed"], tokens)
@@ -124,7 +128,8 @@ def forward(cfg, params, tokens, *, remat: bool = False,
     def mamba_block(p, x, st):
         h = common.rms_norm(x, p["ln"], cfg.norm_eps)
         out, new_st = ssm.apply_mamba2(p["mamba"], h, scfg, state=st,
-                                       return_state=collect_state)
+                                       return_state=collect_state,
+                                       prompt_len=prompt_len)
         return x + out, new_st
 
     if remat:
@@ -237,22 +242,34 @@ def init_cache(cfg, batch_size: int, max_len: int):
     return cache
 
 
-def prefill(cfg, params, tokens, cache):
+def prefill(cfg, params, tokens, cache, *, prompt_len=None):
     logits, (states, kvs) = forward(cfg, params, tokens,
-                                    collect_state=True)
+                                    collect_state=True,
+                                    prompt_len=prompt_len)
     new_kv = cache["kv"]
     if kvs is not None:
         k_new, v_new = kvs  # stacked (n_apps, B, S, Hk, hd)
 
         def write(c, k, v):
-            return attn.cache_update(c, k, v)
+            new = attn.cache_update(c, k, v)
+            if prompt_len is not None:
+                new = new._replace(length=jnp.broadcast_to(
+                    prompt_len.astype(jnp.int32), new.length.shape))
+            return new
 
-        new_kv = jax.vmap(write)(cache["kv"], k_new, v_new)
-    return logits[:, -1], {"ssm": states, "kv": new_kv}
+        new_kv = jax.vmap(write, in_axes=(0, 0, 0))(cache["kv"], k_new,
+                                                    v_new)
+    if prompt_len is None:
+        last = logits[:, -1]
+    else:
+        idx = (prompt_len.astype(jnp.int32) - 1)[:, None, None]
+        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    return last, {"ssm": states, "kv": new_kv}
 
 
 def decode_step(cfg, params, token, cache):
-    """One-token step: recurrent SSM updates + cached shared attention."""
+    """One-token step: recurrent SSM updates + cached shared attention.
+    Positions come from the per-slot cache lengths."""
     scfg = _ssm_cfg(cfg)
     x = common.embedding_lookup(params["embed"], token)
     b = x.shape[0]
@@ -271,9 +288,8 @@ def decode_step(cfg, params, token, cache):
 
     ae = cfg.attn_every
     n_apps = cfg.n_layers // ae
-    length = cache["kv"].length[0]
-    positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(
-        jnp.int32)
+    length = cache["kv"].length[0]                   # (B,)
+    positions = length[:, None].astype(jnp.int32)
     grouped = jax.tree.map(
         lambda a: a.reshape((n_apps, ae) + a.shape[1:]), params["mamba"])
     grouped_sts = jax.tree.map(

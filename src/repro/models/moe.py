@@ -56,7 +56,8 @@ TOKEN_BLOCK = 65536
 
 
 def apply_moe(p, x: jnp.ndarray, *, top_k: int,
-              capacity_factor: float = 1.25):
+              capacity_factor: float = 1.25,
+              full_capacity: bool = False):
     """x: (B, S, d) -> (B, S, d), aux metrics dict.
 
     Tokens are processed in blocks of <= TOKEN_BLOCK (GShard 'group'
@@ -64,7 +65,12 @@ def apply_moe(p, x: jnp.ndarray, *, top_k: int,
     of the dispatch structurally: XLA's SPMD strategy for the
     token-gather is an operand all-gather, which on a 0.5M-token pod
     batch would materialize the full (T, d) stream on every device —
-    per-block it is a few hundred MB."""
+    per-block it is a few hundred MB.
+
+    ``full_capacity``: capacity = all tokens (no drops). The serving
+    paths set this so capacity contention never couples slots: with
+    fractional capacity a garbage token from a retired slot could evict
+    a live slot's token, making outputs depend on batch composition."""
     bsz, seq, d = x.shape
     t = bsz * seq
     xf = x.reshape(t, d)
@@ -76,7 +82,8 @@ def apply_moe(p, x: jnp.ndarray, *, top_k: int,
 
         def body(lb_acc, xb):
             yb, aux_b = _moe_block(p, xb, top_k=top_k,
-                                   capacity_factor=capacity_factor)
+                                   capacity_factor=capacity_factor,
+                                   full_capacity=full_capacity)
             return lb_acc + aux_b["lb_loss"], (yb, aux_b["dropped_frac"])
 
         lb, (ys, dropped) = jax.lax.scan(
@@ -86,12 +93,13 @@ def apply_moe(p, x: jnp.ndarray, *, top_k: int,
                      "dropped_frac": jnp.mean(dropped)}
 
     out, aux = _moe_block(p, xf, top_k=top_k,
-                          capacity_factor=capacity_factor)
+                          capacity_factor=capacity_factor,
+                          full_capacity=full_capacity)
     return out.reshape(bsz, seq, d), aux
 
 
 def _moe_block(p, xf: jnp.ndarray, *, top_k: int,
-               capacity_factor: float):
+               capacity_factor: float, full_capacity: bool = False):
     """One token block: (T, d) -> (T, d), aux."""
     t, d = xf.shape
     n_experts = p["router"].shape[1]
@@ -105,9 +113,10 @@ def _moe_block(p, xf: jnp.ndarray, *, top_k: int,
     sel = jnp.zeros((t, n_experts), jnp.float32).at[
         jnp.arange(t)[:, None], gate_idx].set(gate_vals)
 
-    if t <= 64:
-        # decode / tiny batches: full capacity (no drops) — a fractional
-        # capacity at T~batch_size would drop tokens nondeterministically
+    if full_capacity or t <= 64:
+        # serving / decode / tiny batches: full capacity (no drops) — a
+        # fractional capacity would drop tokens based on what the OTHER
+        # slots in the batch routed, breaking per-slot isolation
         capacity = t
     else:
         capacity = max(1, int(capacity_factor * top_k * t / n_experts))

@@ -115,7 +115,8 @@ def _lm_def(cfg: ArchConfig) -> ModelDef:
 
     def prefill(params, batch, cache):
         return transformer.prefill(cfg, params, batch["tokens"], cache,
-                                   frontend=batch.get("frontend"))
+                                   frontend=batch.get("frontend"),
+                                   prompt_len=batch.get("prompt_len"))
 
     def decode(params, token, cache):
         return transformer.decode_step(cfg, params, token, cache)
@@ -177,7 +178,8 @@ def _hybrid_def(cfg: ArchConfig) -> ModelDef:
         return hybrid.init_cache(cfg, batch_size, shape.seq_len)
 
     def prefill(params, batch, cache):
-        return hybrid.prefill(cfg, params, batch["tokens"], cache)
+        return hybrid.prefill(cfg, params, batch["tokens"], cache,
+                              prompt_len=batch.get("prompt_len"))
 
     def decode(params, token, cache):
         return hybrid.decode_step(cfg, params, token, cache)

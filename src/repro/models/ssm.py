@@ -157,8 +157,16 @@ def ssd_chunked(x, dt, a, bmat, cmat, cfg: SSMConfig,
 
 def apply_mamba2(p, x: jnp.ndarray, cfg: SSMConfig,
                  state: SSMState | None = None,
-                 return_state: bool = False):
-    """Full Mamba2 block. x: (B, L, d_model)."""
+                 return_state: bool = False,
+                 prompt_len: jnp.ndarray | None = None):
+    """Full Mamba2 block. x: (B, L, d_model).
+
+    ``prompt_len``: optional (B,) true lengths for RIGHT-padded serving
+    prefill. dt is zeroed at pad positions, which freezes the SSD
+    recurrence exactly (decay exp(0)=1, input contribution x*dt=0), so
+    the final state equals the unpadded run's; the conv tail is gathered
+    per slot at the true last K-1 inputs. Outputs at pad positions are
+    garbage — callers gather logits at ``prompt_len - 1``."""
     bsz, l, _ = x.shape
     h, pd, g, n = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
     z = jnp.einsum("bld,df->blf", x, p["in_z"])
@@ -176,6 +184,10 @@ def apply_mamba2(p, x: jnp.ndarray, cfg: SSMConfig,
 
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))
+    if prompt_len is not None:
+        seq_mask = (jnp.arange(l)[None, :]
+                    < prompt_len[:, None]).astype(jnp.float32)
+        dt = dt * seq_mask[..., None]
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
     xh = xs.reshape(bsz, l, h, pd)
     y, final = ssd_chunked(
@@ -192,6 +204,17 @@ def apply_mamba2(p, x: jnp.ndarray, cfg: SSMConfig,
     k = cfg.conv_kernel
 
     def tail(seq, old):
+        if prompt_len is not None:
+            # last K-1 TRUE inputs per slot: the combined
+            # (history, tokens) stream ends at position (k-1)+len, so
+            # the tail is rows [len, len+k-1) of it
+            hist = (old.astype(seq.dtype) if old is not None
+                    else jnp.zeros((bsz, k - 1, seq.shape[-1]),
+                                   seq.dtype))
+            full = jnp.concatenate([hist, seq], axis=1)
+            idx = (prompt_len.astype(jnp.int32)[:, None]
+                   + jnp.arange(k - 1)[None, :])
+            return jnp.take_along_axis(full, idx[:, :, None], axis=1)
         if l >= k - 1:
             return seq[:, l - (k - 1):]
         keep = old[:, l:] if old is not None else jnp.zeros(

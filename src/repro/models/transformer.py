@@ -97,7 +97,8 @@ def _attn_block(cfg, p, x, *, positions, layer_cache=None,
     if layer_cache is not None and s == 1:      # decode
         cache = attn.cache_update(layer_cache, k, v,
                                   rolling=cache_update_rolling)
-        o = attn.decode_attention(q, cache, window=window)
+        o = attn.decode_attention(q, cache, window=window,
+                                  impl=cfg.decode_attn_impl)
         new = cache
     else:                                        # train / prefill
         o = attn.attention(q, k, v, causal=True, window=window,
@@ -107,25 +108,26 @@ def _attn_block(cfg, p, x, *, positions, layer_cache=None,
     return jnp.einsum("bsh,hd->bsd", o, p["wo"]), new
 
 
-def _ffn_block(cfg, p, x, is_moe: bool):
+def _ffn_block(cfg, p, x, is_moe: bool, serving: bool = False):
     h = common.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
     if is_moe:
         out, aux = moe.apply_moe(p["moe"], h, top_k=cfg.moe.top_k,
-                                 capacity_factor=cfg.moe.capacity_factor)
+                                 capacity_factor=cfg.moe.capacity_factor,
+                                 full_capacity=serving)
         return out, aux
     return common.swiglu(h, p["mlp"]["gate"], p["mlp"]["up"],
                          p["mlp"]["down"]), {}
 
 
 def _layer(cfg, p, x, *, positions, is_moe, layer_cache=None,
-           rolling=False, return_kv=False):
+           rolling=False, return_kv=False, serving=False):
     x = hint_residual(x)
     a, new_cache = _attn_block(
         cfg, p, x, positions=positions, layer_cache=layer_cache,
         cache_update_rolling=rolling, window=cfg.sliding_window,
         return_kv=return_kv)
     x = hint_residual(x + a)
-    f, aux = _ffn_block(cfg, p, x, is_moe)
+    f, aux = _ffn_block(cfg, p, x, is_moe, serving=serving)
     return hint_residual(x + f), new_cache, aux
 
 
@@ -213,8 +215,18 @@ def init_cache(cfg, batch_size: int, max_len: int):
     return {"scan": scan_cache, "prefix": prefix}
 
 
-def prefill(cfg, params, tokens, cache, *, frontend=None):
-    """Run the full prompt, fill the cache -> (last-token logits, cache)."""
+def prefill(cfg, params, tokens, cache, *, frontend=None,
+            prompt_len=None):
+    """Run the full prompt, fill the cache -> (last-token logits, cache).
+
+    ``prompt_len``: optional (B,) true per-slot prompt lengths. Prompts
+    are then expected RIGHT-padded to the (bucketed) common width —
+    causal attention never lets a real position see the pad tail, and
+    the SSD/conv paths mask it (see ssm.apply_mamba2) — so the returned
+    logits are gathered at each slot's true last token and the cache
+    lengths are set per slot. This is what lets admission pad to
+    power-of-two buckets (capping recompiles) without changing outputs.
+    """
     x = common.embedding_lookup(params["embed"], tokens)
     if frontend is not None:
         x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
@@ -226,29 +238,62 @@ def prefill(cfg, params, tokens, cache, *, frontend=None):
 
     def write(cache_layer, kv):
         k, v = kv
-        if rolling and s > s_max:
-            k, v = k[:, -s_max:], v[:, -s_max:]
-            cache_layer = cache_layer._replace(
-                length=cache_layer.length + (s - s_max))
-        return attn.cache_update(cache_layer, k, v)
+        if rolling and (prompt_len is not None or s > s_max):
+            # treat an un-annotated over-length prefill as full-width
+            # prompts (the seed's slice-and-bump write clamped the
+            # wrapped dynamic_update_slice to offset 0, scrambling
+            # cell->position mapping — caught by teacher-forcing tests)
+            eff_len = (prompt_len if prompt_len is not None
+                       else jnp.full((b,), s, jnp.int32))
+            # per-slot ring placement: cell c must hold the newest
+            # prompt position p == c (mod s_max), i.e.
+            # p = len-1 - ((len-1-c) mod s_max); cells a short slot
+            # never wrote clamp to garbage rows that stay masked.
+            # This is exact for ANY right-padded width — a batched
+            # wave prefill can mix slots shorter and longer than the
+            # ring.
+            cell = jnp.arange(s_max)[None, :]
+            plen = eff_len.astype(jnp.int32)[:, None]
+            src = jnp.clip(plen - 1 - ((plen - 1 - cell) % s_max),
+                           0, s - 1)[:, :, None, None]
+            return cache_layer._replace(
+                k=jnp.take_along_axis(k, src, axis=1).astype(
+                    cache_layer.k.dtype),
+                v=jnp.take_along_axis(v, src, axis=1).astype(
+                    cache_layer.v.dtype),
+                length=jnp.broadcast_to(eff_len.astype(jnp.int32),
+                                        cache_layer.length.shape))
+        new = attn.cache_update(cache_layer, k, v)
+        if prompt_len is not None:
+            # pad-tail cells stay garbage; masked by length and
+            # overwritten as decode advances
+            new = new._replace(
+                length=jnp.broadcast_to(prompt_len.astype(jnp.int32),
+                                        new.length.shape))
+        return new
 
     n_dense_prefix = cfg.moe.first_dense if is_moe else 0
     new_prefix = []
     for i in range(n_dense_prefix):
         x, kv, _ = _layer(cfg, params[f"dense{i}"], x,
                           positions=positions, is_moe=False,
-                          return_kv=True)
+                          return_kv=True, serving=True)
         new_prefix.append(write(cache["prefix"][i], kv))
 
     def body(x, pc):
         p, c = pc
         y, kv, _ = _layer(cfg, p, x, positions=positions, is_moe=is_moe,
-                          return_kv=True)
+                          return_kv=True, serving=True)
         return y, write(c, kv)
 
     x, new_scan = jax.lax.scan(body, x, (params["layers"],
                                          cache["scan"]))
-    x = common.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    if prompt_len is None:
+        x_last = x[:, -1:]
+    else:
+        idx = (prompt_len.astype(jnp.int32) - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)
+    x = common.rms_norm(x_last, params["ln_f"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings
             else params["lm_head"])
     logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
@@ -256,22 +301,26 @@ def prefill(cfg, params, tokens, cache, *, frontend=None):
 
 
 def decode_step(cfg, params, token, cache):
-    """One decode step. token: (B, 1) -> (logits (B, V), cache)."""
+    """One decode step. token: (B, 1) -> (logits (B, V), cache).
+
+    Positions come from the PER-SLOT cache lengths, so slots at
+    different depths (continuous batching) each get the right RoPE
+    phase."""
     x = common.embedding_lookup(params["embed"], token)
     b = x.shape[0]
     is_moe = cfg.moe is not None
     rolling = cfg.sliding_window is not None
     length = (cache["scan"].length[0] if cache["scan"] is not None
-              else cache["prefix"][0].length)
-    positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(
-        jnp.int32)
+              else cache["prefix"][0].length)          # (B,)
+    positions = length[:, None].astype(jnp.int32)
 
     n_dense_prefix = cfg.moe.first_dense if is_moe else 0
     new_prefix = []
     for i in range(n_dense_prefix):
         x2, c, _ = _layer(cfg, params[f"dense{i}"], x,
                           positions=positions, is_moe=False,
-                          layer_cache=cache["prefix"][i], rolling=rolling)
+                          layer_cache=cache["prefix"][i], rolling=rolling,
+                          serving=True)
         x = x2
         new_prefix.append(c)
 
@@ -279,7 +328,7 @@ def decode_step(cfg, params, token, cache):
         p, c = pc
         y, new_c, _ = _layer(cfg, p, x, positions=positions,
                              is_moe=is_moe, layer_cache=c,
-                             rolling=rolling)
+                             rolling=rolling, serving=True)
         return y, new_c
 
     x, new_scan = jax.lax.scan(body, x, (params["layers"],

@@ -1,3 +1,5 @@
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
+                                  WaveEngine, make_engine)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "WaveEngine", "ContinuousEngine",
+           "make_engine"]

@@ -1,21 +1,37 @@
-"""Batched serving engine over the model zoo's prefill/decode steps.
+"""Serving engines over the model zoo's prefill/decode steps.
 
-Wave-scheduled static batching: when all slots are free, up to
-``batch_slots`` queued requests are admitted together — prompts are
-padded to a common length and prefilled in one batched call — then the
-wave decodes in lockstep, one token per engine step, retiring requests
-on EOS/max-tokens and finishing when the whole wave is done. (The KV/SSM
-cache tracks a single sequence length per layer, so admission happens at
-wave boundaries; per-slot continuous batching would need per-slot length
-bookkeeping — noted as future work.)
+Two schedulers share one protocol (submit / step / run_until_drained):
 
-Serving is not a PRIME contribution — the paper trains — but the
-assigned decode/long shapes require a real serve_step; this engine is
-the production wrapper around it.
+* ``WaveEngine`` — the legacy static batcher, kept as the A/B foil:
+  admission only at wave boundaries (a finished request's slot idles
+  until the WHOLE wave drains) and one host round-trip per slot per
+  decoded token (``int(next_tok[slot])``).
+
+* ``ContinuousEngine`` — slot-level continuous batching with the decode
+  loop kept on device:
+    - the (B-slot) cache is allocated ONCE; per-slot cache lengths
+      (``KVCache.length`` is (B,)) let a new request prefill into a
+      free slot while the other slots keep decoding — no wave barrier;
+    - admission prefills ONE request (batch 1, prompt right-padded to a
+      power-of-two bucket so prefill recompiles are capped at
+      O(log max_len); exact per-slot semantics via ``prompt_len``) and
+      inserts the filled sub-cache into its slot with a jitted
+      tree-wide dynamic_update_slice;
+    - decoding runs N steps as one jitted ``lax.scan`` with ON-DEVICE
+      sampling (greedy + temperature/top-k), per-slot EOS/budget done
+      flags, and a single device->host transfer of the (N, B) token
+      block — the per-token sync cost is amortized N-fold.
+
+Both engines produce BIT-IDENTICAL greedy outputs (right-padded exact
+prefill everywhere; tests assert it), so the A/B benchmark in
+``benchmarks/serve_bench.py`` measures pure scheduling + sync overhead.
+MoE capacity is forced to no-drop on the serving paths so expert
+contention never couples slots (see moe.apply_moe).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -24,37 +40,196 @@ import numpy as np
 
 from repro.configs.base import ShapeConfig
 
+MIN_BUCKET = 8        # smallest prompt pad bucket
+
 
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 = greedy (wave engine is greedy-only)
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float | None = None
+    t_first: float | None = None  # first token available
+    t_done: float | None = None
 
 
-class ServeEngine:
+def bucket_len(n: int) -> int:
+    """Next power of two >= n (floor MIN_BUCKET)."""
+    b = MIN_BUCKET
+    while b < n:
+        b *= 2
+    return b
+
+
+def sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray,
+                  top_k: int = 0) -> jnp.ndarray:
+    """On-device per-slot sampling. logits (B, V), temps (B,).
+
+    temp == 0 -> greedy (bitwise argmax, matching the wave engine);
+    temp > 0 -> categorical over logits/temp, optionally top-k-masked.
+    One key serves the whole batch (categorical draws independent
+    gumbels per row)."""
+    lg = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    safe = jnp.where(temps > 0, temps, 1.0)[:, None]
+    if top_k and top_k > 0:
+        vals, idx = jax.lax.top_k(lg, top_k)
+        choice = jax.random.categorical(key, vals / safe)
+        sampled = jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]
+    else:
+        sampled = jax.random.categorical(key, lg / safe)
+    return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+
+
+def tree_insert_slot(big, sub, slot, batch: int):
+    """Insert a batch-1 cache pytree into slot ``slot`` of a B-slot
+    cache: per leaf, a dynamic_update_slice along the (statically
+    inferred) batch axis. Works across families — stacked KV (L, B, S,
+    Hk, dh), per-slot lengths (L, B)/(B,), SSM states (L, B, H, P, N),
+    conv rings, cross caches — because the batch axis is the unique
+    axis where the big leaf has B and the sub leaf has 1."""
+    def leaf(bl, sl):
+        if batch == 1 and bl.shape == sl.shape:
+            return sl.astype(bl.dtype)
+        for a in range(bl.ndim):
+            if (bl.shape[a] == batch and sl.shape[a] == 1
+                    and bl.shape[:a] == sl.shape[:a]
+                    and bl.shape[a + 1:] == sl.shape[a + 1:]):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    bl, sl.astype(bl.dtype), slot, axis=a)
+        raise ValueError(
+            f"no batch axis: big {bl.shape} vs sub {sl.shape}")
+    return jax.tree.map(leaf, big, sub)
+
+
+class _EngineBase:
+    kind = ""
+
     def __init__(self, model, params, *, batch_slots: int = 4,
-                 max_len: int = 512, eos_id: int = 1,
-                 pad_id: int = 0):
+                 max_len: int = 512, eos_id: int = 1, pad_id: int = 0,
+                 bucket_prompts: bool = True):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.pad_id = pad_id
+        self.bucket_prompts = bucket_prompts
+        self.cfg = getattr(model, "cfg", None)
+        self.shape = ShapeConfig("serve", "decode", max_len, batch_slots)
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * batch_slots
-        self.cache = None
-        self.tokens = None
-        self.remaining = np.zeros((batch_slots,), np.int64)
-        self._decode = jax.jit(lambda p, t, c: model.decode(p, t, c))
-        self._prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
-        self.stats = {"waves": 0, "decode_steps": 0, "tokens_out": 0}
+        self.latencies: list[float] = []
+        self.wall: float = 0.0
+        self.stats = {"decode_steps": 0, "tokens_out": 0,
+                      "host_syncs": 0, "admitted": 0,
+                      "busy_slot_steps": 0, "total_slot_steps": 0,
+                      "prefill_widths": set()}
 
     def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
+
+    def reset_metrics(self) -> None:
+        """Zero counters/latencies (keeps compiled functions and device
+        state) — lets benchmarks time a post-warmup run."""
+        for k, v in self.stats.items():
+            self.stats[k] = set() if isinstance(v, set) else 0
+        self.latencies = []
+        self.wall = 0.0
+
+    # -- admission helpers ----------------------------------------------------
+
+    def _padded_len(self, n: int) -> int:
+        """Pad width for an n-token prompt: power-of-two bucket so the
+        prefill jit cache stays O(log max_len) entries. Safe for SWA
+        rings at any width — the rolling prefill write gathers each
+        slot's newest in-window positions (see transformer.prefill)."""
+        if not self.bucket_prompts:
+            return n
+        return max(min(bucket_len(n), self.max_len), n)
+
+    def _budget(self, req: Request) -> int:
+        """Total tokens this request may emit (cache-capacity-clamped
+        for non-rolling attention caches; SSM state and SWA rings are
+        O(1)/wrapping, so no cap there)."""
+        cfg = self.cfg
+        capless = (getattr(cfg, "sliding_window", None) is not None
+                   or (getattr(cfg, "family", "") in ("ssm", "hybrid")
+                       and not getattr(cfg, "attn_every", None)))
+        if capless:
+            return max(1, req.max_new_tokens)
+        return max(1, min(req.max_new_tokens,
+                          self.max_len - len(req.prompt)))
+
+    def _retire(self, req: Request) -> None:
+        req.done = True
+        req.t_done = time.perf_counter()
+        self.latencies.append(req.t_done - req.t_submit)
+
+    # -- protocol -------------------------------------------------------------
+
+    def step(self) -> int:
+        raise NotImplementedError
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        t0 = time.perf_counter()
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        self.wall += time.perf_counter() - t0
+
+    def perf_summary(self) -> dict:
+        lat = sorted(self.latencies)
+        pct = (lambda p: lat[min(len(lat) - 1,
+                                 int(p / 100 * len(lat)))]) if lat \
+            else (lambda p: float("nan"))
+        occ = (self.stats["busy_slot_steps"]
+               / max(1, self.stats["total_slot_steps"]))
+        return {
+            "engine": self.kind,
+            "requests": len(lat),
+            "tokens_out": self.stats["tokens_out"],
+            "decode_steps": self.stats["decode_steps"],
+            "wall_s": self.wall,
+            "tokens_per_s": self.stats["tokens_out"] / self.wall
+            if self.wall else float("nan"),
+            "latency_p50_s": pct(50),
+            "latency_p95_s": pct(95),
+            "slot_occupancy": occ,
+            "host_syncs": self.stats["host_syncs"],
+            "prefill_widths": sorted(self.stats["prefill_widths"]),
+        }
+
+
+# -- wave (static) batching ---------------------------------------------------
+
+
+class WaveEngine(_EngineBase):
+    """Wave-scheduled static batching (the seed engine, modernized to
+    the per-slot cache): all-free admission, lockstep decode, one host
+    sync per slot per token. Greedy-only."""
+    kind = "wave"
+
+    def __init__(self, model, params, **kw):
+        super().__init__(model, params, **kw)
+        self.cache = None
+        self.tokens = None
+        self.remaining = np.zeros((self.slots,), np.int64)
+        self._decode = jax.jit(lambda p, t, c: model.decode(p, t, c))
+        self._prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
+        self._cache0 = model.init_cache(self.slots, self.shape)
+        self.stats["waves"] = 0
+
+    def submit(self, req: Request) -> None:
+        if req.temperature > 0:
+            raise ValueError(
+                "WaveEngine is greedy-only (it exists as the A/B "
+                "foil); use ContinuousEngine for sampled requests")
+        super().submit(req)
 
     def _admit_wave(self) -> bool:
         if not self.queue:
@@ -62,27 +237,41 @@ class ServeEngine:
         wave: list[Request] = []
         while self.queue and len(wave) < self.slots:
             wave.append(self.queue.popleft())
-        # left-pad prompts to a common length (causal => pads attend
-        # nothing useful but are masked out of the loss-free decode)
-        plen = max(len(w.prompt) for w in wave)
-        tokens = np.full((self.slots, plen), self.pad_id, np.int32)
+        for w in wave:
+            assert 1 <= len(w.prompt) <= self.max_len, \
+                f"prompt length {len(w.prompt)} vs max_len {self.max_len}"
+        padded = self._padded_len(max(len(w.prompt) for w in wave))
+        tokens = np.full((self.slots, padded), self.pad_id, np.int32)
+        plen = np.ones((self.slots,), np.int32)
         for i, w in enumerate(wave):
-            tokens[i, plen - len(w.prompt):] = w.prompt
-        shape = ShapeConfig("serve", "decode", self.max_len, self.slots)
-        self.cache = self.model.init_cache(self.slots, shape)
+            tokens[i, :len(w.prompt)] = w.prompt        # RIGHT-pad
+            plen[i] = len(w.prompt)
+        self.stats["prefill_widths"].add(padded)
         logits, self.cache = self._prefill(
-            self.params, {"tokens": jnp.asarray(tokens)}, self.cache)
+            self.params,
+            {"tokens": jnp.asarray(tokens),
+             "prompt_len": jnp.asarray(plen)},
+            self._cache0)
         first = jnp.argmax(logits, axis=-1)
         self.tokens = first[:, None].astype(jnp.int32)
+        now = time.perf_counter()
         for i in range(self.slots):
-            if i < len(wave):
-                self.active[i] = wave[i]
-                wave[i].out_tokens.append(int(first[i]))
-                self.remaining[i] = wave[i].max_new_tokens - 1
-            else:
+            req = wave[i] if i < len(wave) else None
+            self.active[i] = req
+            self.remaining[i] = 0
+            if req is None:
+                continue
+            tok = int(first[i])
+            req.out_tokens.append(tok)
+            req.t_first = now
+            self.stats["tokens_out"] += 1
+            budget = self._budget(req)
+            self.remaining[i] = budget - 1
+            if tok == self.eos_id or budget <= 1:
+                self._retire(req)
                 self.active[i] = None
-                self.remaining[i] = 0
         self.stats["waves"] += 1
+        self.stats["admitted"] += len(wave)
         return True
 
     def step(self) -> int:
@@ -94,20 +283,186 @@ class ServeEngine:
                                           self.cache)
         next_tok = jnp.argmax(logits, axis=-1)
         self.stats["decode_steps"] += 1
+        self.stats["total_slot_steps"] += self.slots
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            tok = int(next_tok[slot])
+            tok = int(next_tok[slot])           # host sync PER TOKEN
+            self.stats["host_syncs"] += 1
+            self.stats["busy_slot_steps"] += 1
             req.out_tokens.append(tok)
             self.stats["tokens_out"] += 1
             self.remaining[slot] -= 1
             if tok == self.eos_id or self.remaining[slot] <= 0:
-                req.done = True
-                self.active[slot] = None
+                self._retire(req)
+                self.active[slot] = None        # idles until wave drains
         self.tokens = next_tok[:, None].astype(jnp.int32)
         return sum(r is not None for r in self.active)
 
-    def run_until_drained(self, max_steps: int = 10_000) -> None:
-        for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
-                return
+
+# -- continuous (per-slot) batching -------------------------------------------
+
+
+class ContinuousEngine(_EngineBase):
+    """Slot-level continuous batching with a device-resident decode
+    loop. ``decode_chunk`` is the scheduling quantum: admissions and
+    retirements happen between chunks; within a chunk the device runs
+    ``lax.scan`` over decode+sample steps and ships one (N, B) token
+    block to the host."""
+    kind = "continuous"
+
+    def __init__(self, model, params, *, decode_chunk: int = 8,
+                 top_k: int = 0, seed: int = 0, **kw):
+        super().__init__(model, params, **kw)
+        self.decode_chunk = decode_chunk
+        self.top_k = top_k
+        self.cache = model.init_cache(self.slots, self.shape)
+        self._pcache0 = model.init_cache(1, self.shape)  # prefill template
+        self.tokens = jnp.full((self.slots, 1), self.pad_id, jnp.int32)
+        self.done = jnp.ones((self.slots,), bool)
+        self.remaining = jnp.zeros((self.slots,), jnp.int32)
+        self.temps = jnp.zeros((self.slots,), jnp.float32)
+        self.rng = jax.random.PRNGKey(seed)
+        self._pending_first: list = [None] * self.slots
+        self._prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
+        self._admit_jit = jax.jit(self._admit_fn)
+        self._chunk_jit = jax.jit(self._chunk_fn,
+                                  static_argnames=("n",))
+        self.stats["decode_chunks"] = 0
+        self.stats["prefills"] = 0
+
+    # -- device-side pieces ---------------------------------------------------
+
+    def _admit_fn(self, cache, tokens, done, remaining, temps, rng,
+                  sub_cache, logits, slot, budget, temp):
+        """Insert a freshly prefilled request into ``slot``: cache
+        splice + first-token sample + per-slot state reset, one jit."""
+        cache = tree_insert_slot(cache, sub_cache, slot, self.slots)
+        rng, key = jax.random.split(rng)
+        first = sample_tokens(logits, key,
+                              jnp.reshape(temp, (1,)).astype(jnp.float32),
+                              self.top_k)                 # (1,)
+        tokens = jax.lax.dynamic_update_slice(
+            tokens, first.reshape(1, 1).astype(jnp.int32), (slot, 0))
+        budget = jnp.reshape(budget, (1,)).astype(jnp.int32)
+        first_done = (first == self.eos_id) | (budget <= 0)
+        done = jax.lax.dynamic_update_slice(done, first_done, (slot,))
+        remaining = jax.lax.dynamic_update_slice(remaining, budget,
+                                                 (slot,))
+        temps = jax.lax.dynamic_update_slice(
+            temps, jnp.reshape(temp, (1,)).astype(jnp.float32), (slot,))
+        return cache, tokens, done, remaining, temps, rng, first[0]
+
+    def _chunk_fn(self, params, cache, tokens, done, remaining, temps,
+                  rng, *, n: int):
+        """N decode+sample steps as one lax.scan; emits the (N, B)
+        sampled-token block (-1 for slots already done at step start)."""
+        def body(carry, _):
+            tokens, cache, done, remaining, rng = carry
+            logits, cache = self.model.decode(params, tokens, cache)
+            rng, key = jax.random.split(rng)
+            nxt = sample_tokens(logits, key, temps, self.top_k)
+            remaining = remaining - jnp.where(done, 0, 1)
+            newly = (~done) & ((nxt == self.eos_id) | (remaining <= 0))
+            emit = jnp.where(done, -1, nxt)
+            done = done | newly
+            return (nxt[:, None].astype(jnp.int32), cache, done,
+                    remaining, rng), emit
+
+        (tokens, cache, done, remaining, rng), toks = jax.lax.scan(
+            body, (tokens, cache, done, remaining, rng), None, length=n)
+        return cache, tokens, done, remaining, rng, toks
+
+    # -- host-side scheduler --------------------------------------------------
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if not self.queue or self.active[slot] is not None:
+                continue
+            req = self.queue.popleft()
+            plen = len(req.prompt)
+            assert 1 <= plen <= self.max_len, \
+                f"prompt length {plen} vs max_len {self.max_len}"
+            padded = self._padded_len(plen)
+            tokens = np.full((1, padded), self.pad_id, np.int32)
+            tokens[0, :plen] = req.prompt                # RIGHT-pad
+            self.stats["prefill_widths"].add(padded)
+            self.stats["prefills"] += 1
+            logits, sub = self._prefill(
+                self.params,
+                {"tokens": jnp.asarray(tokens),
+                 "prompt_len": jnp.asarray([plen], jnp.int32)},
+                self._pcache0)
+            (self.cache, self.tokens, self.done, self.remaining,
+             self.temps, self.rng, first) = self._admit_jit(
+                self.cache, self.tokens, self.done, self.remaining,
+                self.temps, self.rng, sub, logits,
+                jnp.int32(slot), self._budget(req) - 1,
+                float(req.temperature))
+            self._pending_first[slot] = first   # fetched lazily at drain
+            self.active[slot] = req
+            self.stats["admitted"] += 1
+
+    def _drain(self, toks_np: np.ndarray) -> None:
+        n = toks_np.shape[0]
+        now = time.perf_counter()
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            budget = self._budget(req)
+            if self._pending_first[slot] is not None:
+                first = int(np.asarray(self._pending_first[slot]))
+                self._pending_first[slot] = None
+                req.out_tokens.append(first)
+                req.t_first = now
+                self.stats["tokens_out"] += 1
+                if first == self.eos_id or len(req.out_tokens) >= budget:
+                    self._retire(req)
+                    self.active[slot] = None
+                    continue
+            for t in range(n):
+                tok = int(toks_np[t, slot])
+                if tok < 0:      # slot was done before this step
+                    break
+                req.out_tokens.append(tok)
+                self.stats["tokens_out"] += 1
+                if tok == self.eos_id or len(req.out_tokens) >= budget:
+                    self._retire(req)
+                    self.active[slot] = None
+                    break
+
+    def step(self) -> int:
+        """One scheduling quantum: admit into free slots, run one
+        decode chunk on device, drain its token block (the single
+        device->host transfer), retire finished requests."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        n = self.decode_chunk
+        (self.cache, self.tokens, self.done, self.remaining, self.rng,
+         toks) = self._chunk_jit(self.params, self.cache, self.tokens,
+                                 self.done, self.remaining, self.temps,
+                                 self.rng, n=n)
+        toks_np = np.asarray(toks)              # ONE host sync per chunk
+        self.stats["host_syncs"] += 1
+        self.stats["decode_chunks"] += 1
+        self.stats["decode_steps"] += n
+        self.stats["total_slot_steps"] += n * self.slots
+        self.stats["busy_slot_steps"] += int((toks_np >= 0).sum())
+        self._drain(toks_np)
+        return sum(r is not None for r in self.active)
+
+
+# legacy name: the wave engine was the original ServeEngine
+ServeEngine = WaveEngine
+
+
+def make_engine(kind: str, model, params, **kw):
+    if kind == "wave":
+        kw.pop("decode_chunk", None)
+        kw.pop("top_k", None)
+        kw.pop("seed", None)
+        return WaveEngine(model, params, **kw)
+    if kind == "continuous":
+        return ContinuousEngine(model, params, **kw)
+    raise ValueError(f"unknown engine kind {kind!r}")

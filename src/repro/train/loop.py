@@ -51,6 +51,10 @@ class TrainerConfig:
     ckpt_delta_base_every: int = 8
     ckpt_codec: str = "int8"       # delta codec: 'int8' | 'int4'
     ckpt_chunk_bytes: int = 1 << 20
+    # retention: keep the newest N store/delta checkpoints, gc the rest
+    # (ChunkStore.gc keeps delta chains restorable; runs FIFO behind
+    # the async persists). None = keep everything (seed behavior).
+    ckpt_keep: int | None = None
     max_workers: int = 16
     blocking_join: bool = True     # paper used blocking in production
     seconds_per_outer_step: float = 60.0
@@ -84,6 +88,7 @@ class ElasticTrainer:
         self._pipelines = {}
         self.ckpt_store = None
         self.snapshotter = None
+        self._ckpt_steps: list[int] = []
         if cfg.ckpt_dir and cfg.ckpt_engine != "flat":
             from repro.checkpointing import (AsyncSnapshotter, ChunkStore,
                                              DeltaCheckpointer,
@@ -211,6 +216,14 @@ class ElasticTrainer:
                 meta = {"outer_step": t + 1}
                 if self.snapshotter is not None:
                     self.snapshotter.submit(global_step, tree, meta)
+                    self._ckpt_steps.append(global_step)
+                    if self.cfg.ckpt_keep and self.ckpt_store and \
+                            len(self._ckpt_steps) > self.cfg.ckpt_keep:
+                        keep = tuple(
+                            self._ckpt_steps[-self.cfg.ckpt_keep:])
+                        self.snapshotter.submit_task(
+                            lambda ks=keep: self.ckpt_store.gc(
+                                keep_steps=ks))
                 else:
                     from repro.checkpointing import save_async
                     save_async(self.cfg.ckpt_dir, global_step, tree,

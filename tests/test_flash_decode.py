@@ -1,0 +1,121 @@
+"""Pallas flash-decode kernel vs the jnp decode_attention oracle
+(interpret mode — this container is CPU-only), plus the model-level
+``decode_attn_impl="pallas"`` selection path.
+
+NOTE: deliberately does NOT use the session-scoped ``rng`` fixture —
+test_kernels.py's inputs depend on that fixture's draw order.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+
+# (B, S_max, Hk, G, dh): GQA and MHA, lane-padded dh (16, 64) and a
+# full 128-lane head, single and multi S-block
+CASES = [
+    (3, 64, 2, 4, 16),
+    (2, 40, 1, 1, 32),
+    (1, 128, 4, 3, 64),
+    (2, 300, 2, 2, 128),
+]
+
+
+def _rand_cache(rng, b, s, hk, dh, dtype, length):
+    k = jnp.asarray(rng.normal(size=(b, s, hk, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, hk, dh)), dtype)
+    return attn.KVCache(k, v, jnp.asarray(length, jnp.int32))
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_jnp_dense(case, dtype):
+    b, s, hk, g, dh = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    q = jnp.asarray(rng.normal(size=(b, 1, hk * g, dh)), dtype)
+    # per-slot lengths incl. empty and full slots
+    length = rng.integers(0, s + 1, size=b)
+    length[0] = s
+    cache = _rand_cache(rng, b, s, hk, dh, dtype, length)
+    ref = attn.decode_attention(q, cache, impl="jnp")
+    out = attn.decode_attention(q, cache, impl="pallas")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("length_off", [-1, 0, 1, 9])
+def test_matches_jnp_swa_wrap_boundary(length_off):
+    """Rolling-ring masking around the wrap: length in
+    {s_max-1, s_max, s_max+1, s_max+9} must agree with the jnp path."""
+    b, s, hk, g, dh, window = 2, 32, 2, 2, 16, 24
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(b, 1, hk * g, dh)), jnp.float32)
+    cache = _rand_cache(rng, b, s, hk, dh, jnp.float32,
+                        [s + length_off, max(0, s + length_off - 1)])
+    ref = attn.decode_attention(q, cache, window=window, impl="jnp")
+    out = attn.decode_attention(q, cache, window=window, impl="pallas")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_multi_block_online_softmax():
+    """Force several S-blocks so the running (m, l, acc) rescale path
+    is exercised."""
+    from repro.kernels import flash_decode
+    b, s, hk, g, dh = 2, 256, 2, 2, 16
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(b, 1, hk * g, dh)), jnp.float32)
+    cache = _rand_cache(rng, b, s, hk, dh, jnp.float32, [100, 256])
+    ref = attn.decode_attention(q, cache, impl="jnp")
+    out = flash_decode.flash_decode(q, cache.k, cache.v, cache.length,
+                                    s_blk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_empty_slots_zero_output():
+    """length == 0 slots must produce exactly zero (not NaN)."""
+    b, s, hk, g, dh = 2, 64, 2, 2, 16
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(b, 1, hk * g, dh)), jnp.float32)
+    cache = _rand_cache(rng, b, s, hk, dh, jnp.float32, [0, 0])
+    out = attn.decode_attention(q, cache, impl="pallas")
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.zeros_like(np.asarray(out)))
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "h2o-danube-1.8b"])
+def test_model_decode_step_pallas_matches_jnp(arch):
+    """cfg.decode_attn_impl='pallas' must reproduce the jnp decode path
+    through a real model decode step."""
+    from repro.configs import CONFIGS
+    from repro.configs.base import ShapeConfig
+    from repro.models.registry import get_model
+
+    cfg = CONFIGS[arch].reduced()
+    model_j = get_model(cfg)
+    model_p = get_model(dataclasses.replace(cfg,
+                                            decode_attn_impl="pallas"))
+    params, _ = model_j.init(jax.random.PRNGKey(0))
+    shape = ShapeConfig("p", "decode", 64, 2)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab)
+    cache_j = model_j.init_cache(2, shape)
+    lj, cache_j = model_j.prefill(params, {"tokens": tokens}, cache_j)
+    cache_p = model_p.init_cache(2, shape)
+    lp, cache_p = model_p.prefill(params, {"tokens": tokens}, cache_p)
+    np.testing.assert_allclose(np.asarray(lj), np.asarray(lp),
+                               rtol=1e-5, atol=1e-5)
+    tok = jnp.argmax(lj, -1)[:, None].astype(jnp.int32)
+    for _ in range(3):
+        lj, cache_j = model_j.decode(params, tok, cache_j)
+        lp, cache_p = model_p.decode(params, tok, cache_p)
+        np.testing.assert_allclose(np.asarray(lj), np.asarray(lp),
+                                   rtol=1e-4, atol=1e-4)
+        tok = jnp.argmax(lj, -1)[:, None].astype(jnp.int32)

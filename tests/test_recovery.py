@@ -364,3 +364,57 @@ def test_trainer_store_engine_dedups_params_anchor(tmp_path):
         np.asarray(restored["params"]["embed"], np.float32),
         np.asarray(jax.tree.map(lambda p: p[0],
                                 tr.params)["embed"], np.float32))
+
+
+def test_snapshotter_tasks_run_fifo_behind_writes():
+    """submit_task callables are serialized AFTER pending persists."""
+    order = []
+
+    def slow_write(step, tree, meta):
+        time.sleep(0.05)
+        order.append(("write", step))
+
+    snap = AsyncSnapshotter(slow_write, buffers=2)
+    snap.submit(1, {"w": np.zeros(4, np.float32)})
+    snap.submit_task(lambda: order.append(("task", 1)))
+    snap.submit(2, {"w": np.ones(4, np.float32)})
+    snap.flush()
+    snap.close()
+    assert order == [("write", 1), ("task", 1), ("write", 2)]
+    assert snap.stats["tasks"] == 1
+
+
+def test_snapshotter_task_error_surfaces():
+    snap = AsyncSnapshotter(lambda *a: None)
+
+    def boom():
+        raise RuntimeError("gc failed")
+
+    snap.submit_task(boom)
+    with pytest.raises(RuntimeError, match="gc failed"):
+        for _ in range(100):
+            snap.flush()
+            time.sleep(0.01)
+
+
+def test_trainer_ckpt_keep_retention_gc(tmp_path):
+    """ckpt_keep hooks ChunkStore.gc to the ckpt_every_outer cadence:
+    only the newest N checkpoints (plus any delta-chain bases needed to
+    restore them) survive, and the newest stays restorable."""
+    tr = _tiny_trainer(tmp_path, "store", ckpt_keep=2)
+    tr.run(5)
+    tr.snapshotter.flush()
+    steps = tr.ckpt_store.steps()
+    assert steps == [4 * 2, 5 * 2]      # newest 2 of 5 (2 inner/outer)
+    restored, meta = tr.ckpt_store.restore_tree(tr.checkpoint_like())
+    assert meta["outer_step"] == 5
+
+    # delta engine: retention must keep chain bases restorable
+    tr2 = _tiny_trainer(tmp_path / "d", "delta", ckpt_keep=2,
+                        ckpt_delta_base_every=4)
+    tr2.run(6)    # base(2) d d d base(10) d
+    tr2.snapshotter.flush()
+    steps = tr2.ckpt_store.steps()
+    assert 12 in steps and 10 in steps  # newest delta + its base
+    restored, meta = tr2.ckpt_store.restore_tree(tr2.checkpoint_like())
+    assert meta["outer_step"] == 6
