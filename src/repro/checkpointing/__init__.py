@@ -1,27 +1,33 @@
 from repro.checkpointing.checkpoint import (latest_step, restore, save,
                                             save_async)
-from repro.checkpointing.delta import (DeltaCheckpointer, DeltaConfig,
-                                       DeltaChainError)
+from repro.checkpointing.delta import (ChainReplayer, DeltaCheckpointer,
+                                       DeltaConfig, DeltaChainError)
+from repro.checkpointing.gossip import (ChunkGossip, socket_transport,
+                                        store_transport)
 from repro.checkpointing.p2p import (CheckpointServer, ChecksumError,
                                      EmptyPeerError, FetchError,
-                                     PeerClosedError,
+                                     PeerClosedError, PeerConn,
                                      RetryableFetchError,
                                      fetch_checkpoint)
 from repro.checkpointing.snapshot import AsyncSnapshotter
 from repro.checkpointing.store import (ChunkCorruptError,
                                        ChunkMissingError, ChunkStore)
+from repro.checkpointing.streaming import StreamingFetcher
 from repro.checkpointing.swarm import (ChunkPeer, NoPeersError,
                                        SwarmFetchError, recover,
                                        swarm_fetch)
 
 __all__ = [
     "save", "save_async", "restore", "latest_step",
-    "CheckpointServer", "fetch_checkpoint",
+    "CheckpointServer", "fetch_checkpoint", "PeerConn",
     "FetchError", "PeerClosedError", "ChecksumError", "EmptyPeerError",
     "RetryableFetchError",
     "ChunkStore", "ChunkCorruptError", "ChunkMissingError",
     "DeltaCheckpointer", "DeltaConfig", "DeltaChainError",
+    "ChainReplayer",
     "ChunkPeer", "swarm_fetch", "recover", "SwarmFetchError",
     "NoPeersError",
+    "ChunkGossip", "socket_transport", "store_transport",
+    "StreamingFetcher",
     "AsyncSnapshotter",
 ]

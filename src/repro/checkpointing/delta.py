@@ -35,12 +35,14 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from typing import Any
 
 import numpy as np
 
 from repro.checkpointing import checkpoint as _ckpt
-from repro.checkpointing.store import ChunkStore
+from repro.checkpointing.store import (ChunkMissingError, ChunkStore,
+                                       chunk_ids)
 
 
 class DeltaChainError(ValueError):
@@ -214,6 +216,137 @@ class DeltaCheckpointer:
         return _ckpt.unflatten_like(like, out)
 
 
+class ChainReplayer:
+    """Incremental, streaming-safe delta-chain replay.
+
+    Built from the manifest chain (base first), it tracks which chunk
+    ids each step still lacks; ``on_chunk`` (called from the fetch
+    worker threads as verified chunks land in the store) replays every
+    consecutive chain step the moment its last chunk arrives — so by
+    the time the final chunk lands, the whole reconstruction is already
+    assembled and a joiner's restore is one ``finish`` call instead of
+    a full chain replay at the outer boundary.
+
+    Replay is the SAME elementwise-numpy apply path as ``restore``
+    (``_apply_delta``), sha-verified per step against the writer's
+    recorded reconstruction, so a streamed restore is bit-exact.
+    Thread-safe: fetch workers race on ``on_chunk``; replay itself runs
+    under the lock, strictly in chain order.
+    """
+
+    def __init__(self, store: ChunkStore, chain: list[dict]):
+        assert chain, "empty manifest chain"
+        assert chain[0]["kind"] != "delta", \
+            "chain must start at a base/full manifest"
+        self.store = store
+        self.chain = chain
+        self._lock = threading.Lock()
+        self._applied = 0
+        self._ref: dict[str, np.ndarray] = {}
+        # per-step sets of chunk ids not yet locally present
+        self._pending: list[set[str]] = [
+            {d for d in chunk_ids(m) if not store.has(d)}
+            for m in chain]
+        self.stats = {"replayed_steps": 0, "replayed_on_stream": 0}
+
+    # -- progress ------------------------------------------------------------
+
+    @property
+    def applied_steps(self) -> int:
+        with self._lock:
+            return self._applied
+
+    @property
+    def complete(self) -> bool:
+        with self._lock:
+            return self._applied == len(self.chain)
+
+    def remaining_chunks(self) -> int:
+        with self._lock:
+            return len(set().union(*self._pending)) if self._pending \
+                else 0
+
+    def on_chunk(self, digest: str, n_bytes: int = 0) -> int:
+        """A verified chunk landed in the store; replay whatever chain
+        steps just became complete. Returns steps newly applied."""
+        del n_bytes
+        with self._lock:
+            for pend in self._pending:
+                pend.discard(digest)
+            applied = self._advance_locked()
+            self.stats["replayed_on_stream"] += applied
+            return applied
+
+    def advance(self) -> int:
+        """Replay every consecutive step whose chunks are all local
+        (recomputed from the store — the non-streaming entry point)."""
+        with self._lock:
+            for i, m in enumerate(self.chain[self._applied:],
+                                  self._applied):
+                self._pending[i] = {d for d in chunk_ids(m)
+                                    if not self.store.has(d)}
+            return self._advance_locked()
+
+    # -- replay --------------------------------------------------------------
+
+    def _advance_locked(self) -> int:
+        applied = 0
+        while self._applied < len(self.chain) and \
+                not self._pending[self._applied]:
+            self._apply_step(self.chain[self._applied])
+            self._applied += 1
+            applied += 1
+            self.stats["replayed_steps"] += 1
+        return applied
+
+    def _apply_step(self, m: dict) -> None:
+        if m["kind"] != "delta":       # the base: load float leaves
+            for key, entry in m["keys"].items():
+                arr = self.store.read_leaf(entry)
+                if _is_float(arr):
+                    self._ref[key] = np.asarray(
+                        arr, np.float32).reshape(-1)
+            return
+        for key, entry in m["keys"].items():
+            delta = entry.get("delta")
+            if delta is None:
+                continue
+            wire = b"".join(self.store.get(c["id"])
+                            for c in delta["codes_chunks"])
+            codes = _decode_codes(wire, delta["codec"], delta["numel"])
+            codebook = np.frombuffer(
+                self.store.get(delta["codebook_id"]), np.float32)
+            self._ref[key] = _apply_delta(self._ref[key], codes,
+                                          codebook)
+            got = hashlib.sha256(self._ref[key].tobytes()).hexdigest()
+            if got != m["ref_sha"][key]:
+                raise DeltaChainError(
+                    f"chain replay diverged at step {m['step']} "
+                    f"leaf {key!r}")
+
+    def finish(self, like: Any) -> tuple[Any, dict]:
+        """The fully-replayed tree shaped/dtyped like ``like`` plus the
+        target step's meta. Raises ``ChunkMissingError`` if the chain
+        has not fully streamed in yet."""
+        with self._lock:
+            if self._applied != len(self.chain):
+                missing = set().union(
+                    *self._pending[self._applied:])
+                raise ChunkMissingError(
+                    f"chain incomplete: {len(self.chain) - self._applied}"
+                    f" steps unapplied, {len(missing)} chunks missing")
+            target = self.chain[-1]
+            out_flat: dict[str, np.ndarray] = {}
+            for key, a in _ckpt._flatten(like).items():
+                entry = target["keys"][key]
+                if entry.get("delta") is not None:
+                    out_flat[key] = self._ref[key].reshape(
+                        a.shape).astype(a.dtype)
+                else:
+                    out_flat[key] = self.store.read_leaf(entry)
+            return _ckpt.unflatten_like(like, out_flat), target["meta"]
+
+
 def chain_steps(store: ChunkStore, step: int) -> list[int]:
     """Steps of the delta chain ending at ``step``: [base, ..., step].
     A base/full manifest is its own one-element chain."""
@@ -230,41 +363,17 @@ def restore(store: ChunkStore, like: Any, step: int | None = None
             ) -> tuple[Any, dict]:
     """Replay base + deltas up to ``step``; bit-exact against the
     writer's reconstruction (verified via each manifest's ``ref_sha``).
-    Returns (tree shaped/dtyped like ``like``, meta of ``step``)."""
+    Returns (tree shaped/dtyped like ``like``, meta of ``step``).
+
+    One replay path: this is ``ChainReplayer`` run to completion — the
+    streaming fetcher assembles through the exact same code, so a
+    streamed restore and a local restore are bit-identical by
+    construction."""
     if step is None:
         step = store.latest_step()
         if step is None:
             raise FileNotFoundError(f"no manifests under {store.root}")
-    steps = chain_steps(store, step)
-    base = store.load_manifest(steps[0])
-    target = store.load_manifest(steps[-1])
-    ref: dict[str, np.ndarray] = {}
-    for key, entry in base["keys"].items():
-        arr = store.read_leaf(entry)
-        if _is_float(arr):
-            ref[key] = np.asarray(arr, np.float32).reshape(-1)
-    out_flat: dict[str, np.ndarray] = {}
-    for s in steps[1:]:
-        m = store.load_manifest(s)
-        for key, entry in m["keys"].items():
-            delta = entry.get("delta")
-            if delta is None:
-                continue
-            wire = b"".join(store.get(c["id"])
-                            for c in delta["codes_chunks"])
-            codes = _decode_codes(wire, delta["codec"], delta["numel"])
-            codebook = np.frombuffer(store.get(delta["codebook_id"]),
-                                     np.float32)
-            ref[key] = _apply_delta(ref[key], codes, codebook)
-            got = hashlib.sha256(ref[key].tobytes()).hexdigest()
-            if got != m["ref_sha"][key]:
-                raise DeltaChainError(
-                    f"chain replay diverged at step {s} leaf {key!r}")
-    flat_like = _ckpt._flatten(like)
-    for key, a in flat_like.items():
-        entry = target["keys"][key]
-        if entry.get("delta") is not None:
-            out_flat[key] = ref[key].reshape(a.shape).astype(a.dtype)
-        else:
-            out_flat[key] = store.read_leaf(entry)
-    return _ckpt.unflatten_like(like, out_flat), target["meta"]
+    chain = [store.load_manifest(s) for s in chain_steps(store, step)]
+    replayer = ChainReplayer(store, chain)
+    replayer.advance()
+    return replayer.finish(like)

@@ -63,6 +63,35 @@ def _send_frame(sock: socket.socket, payload: bytes) -> None:
     sock.sendall(struct.pack("!Q", len(payload)) + digest + payload)
 
 
+class PeerConn:
+    """One framed TCP connection to a peer speaking the JSON-op
+    protocol (``ChunkPeer`` and the gossip layer ride on it): send a
+    JSON request frame, read response frames. Shared by ``swarm_fetch``,
+    ``ChunkGossip`` and ``StreamingFetcher`` so every transport-level
+    failure surfaces as the same typed ``FetchError`` family."""
+
+    def __init__(self, addr: tuple, timeout: float):
+        self.addr = tuple(addr)
+        self.sock = socket.create_connection(addr, timeout=timeout)
+        self.sock.settimeout(timeout)
+
+    def request(self, payload: dict) -> bytes:
+        _send_frame(self.sock, json.dumps(payload).encode())
+        return _recv_frame(self.sock)
+
+    def request_json(self, payload: dict) -> dict:
+        return json.loads(self.request(payload))
+
+    def recv_frame(self) -> bytes:
+        return _recv_frame(self.sock)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
     buf = io.BytesIO()
     while buf.tell() < n:

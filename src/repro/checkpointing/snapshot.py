@@ -39,9 +39,15 @@ class AsyncSnapshotter:
     queues ``write_fn(step, host_tree, meta)`` on the writer thread."""
 
     def __init__(self, write_fn: Callable[[int, Any, dict], Any],
-                 buffers: int = 2):
+                 buffers: int = 2,
+                 on_persist: Callable[[int, Any], None] | None = None):
         assert buffers >= 1
         self.write_fn = write_fn
+        # called on the writer thread with (step, write_fn's return)
+        # after each successful persist — the trainer uses it to track
+        # which steps are actually on disk (what a ChunkPeer may
+        # advertise / retention may count), not merely submitted
+        self.on_persist = on_persist
         self._slots = [_Slot() for _ in range(buffers)]
         self._queue: list[tuple[_Slot, int, dict]] = []
         self._cv = threading.Condition()
@@ -80,7 +86,9 @@ class AsyncSnapshotter:
                 continue
             _, slot, step, meta = item
             try:
-                self.write_fn(step, slot.tree, meta)
+                result = self.write_fn(step, slot.tree, meta)
+                if self.on_persist is not None:
+                    self.on_persist(step, result)
             except BaseException as e:  # surfaced on next submit/flush
                 with self._cv:
                     self._error = e

@@ -31,6 +31,7 @@ idempotent.
 """
 from __future__ import annotations
 
+import collections
 import hashlib
 import json
 import os
@@ -81,6 +82,16 @@ class ChunkStore:
         self.compress_level = compress_level
         (self.root / "chunks").mkdir(parents=True, exist_ok=True)
         (self.root / "manifests").mkdir(parents=True, exist_ok=True)
+        # bumped on every mutation through THIS instance; the gossip
+        # digest caches its inventory sha against it (advisory only —
+        # the sha itself is always recomputed when the version moved)
+        self.version = 0
+        self._lock = threading.Lock()
+        self._digest_cache: tuple[int, tuple[int, str]] | None = None
+        # refcounted pins: chunk ids / steps a ChunkPeer is actively
+        # serving; gc() must not delete them out from under the wire
+        self._pinned_chunks: collections.Counter = collections.Counter()
+        self._pinned_steps: collections.Counter = collections.Counter()
 
     # -- blobs ---------------------------------------------------------------
 
@@ -96,6 +107,8 @@ class ChunkStore:
         tmp = p.parent / f".{digest}.{os.getpid()}.{threading.get_ident()}"
         tmp.write_bytes(blob)
         tmp.rename(p)  # atomic; concurrent same-digest writers agree
+        with self._lock:
+            self.version += 1
         return len(blob)
 
     def put(self, data: bytes) -> tuple[str, int]:
@@ -144,6 +157,75 @@ class ChunkStore:
     def missing(self, manifest: dict) -> list[str]:
         return [d for d in chunk_ids(manifest) if not self.has(d)]
 
+    # -- possession (gossip) -------------------------------------------------
+
+    def inventory(self) -> list[str]:
+        """Sorted ids of every chunk on disk — what this node can serve
+        a streaming joiner (the gossip possession ground truth)."""
+        out = []
+        for sub in (self.root / "chunks").iterdir():
+            out.extend(p.name for p in sub.iterdir()
+                       if not p.name.startswith("."))
+        return sorted(out)
+
+    def inventory_digest(self) -> tuple[int, str]:
+        """(n_chunks, sha256-hex over the sorted inventory): the compact
+        possession summary a gossip round ships instead of the full id
+        list. Cached against ``version`` so repeated polls between
+        writes don't rescan the chunk tree."""
+        with self._lock:
+            cached = self._digest_cache
+            version = self.version
+        if cached is not None and cached[0] == version:
+            return cached[1]
+        ids = self.inventory()
+        h = hashlib.sha256()
+        for d in ids:
+            h.update(d.encode())
+        result = (len(ids), h.hexdigest())
+        with self._lock:
+            # only cache if no write raced the scan
+            if self.version == version:
+                self._digest_cache = (version, result)
+        return result
+
+    # -- pins ----------------------------------------------------------------
+
+    def pin_chain(self, step: int) -> dict:
+        """Pin the manifest chain ending at ``step`` (its steps and
+        every referenced chunk) against gc while a peer streams it out.
+        Returns an opaque token for :meth:`unpin`."""
+        steps, ids = [], []
+        s = step
+        while True:
+            m = self.load_manifest(s)
+            steps.append(m["step"])
+            ids.extend(chunk_ids(m))
+            if m["kind"] != "delta":
+                break
+            s = m["prev_step"]
+        with self._lock:
+            self._pinned_steps.update(steps)
+            self._pinned_chunks.update(ids)
+        return {"steps": steps, "ids": ids}
+
+    def pin_ids(self, ids) -> dict:
+        """Pin loose chunk ids (no manifest required yet) against gc —
+        a streaming joiner pins the chain it is assembling into a
+        store that may concurrently run retention. Returns a token for
+        :meth:`unpin`."""
+        ids = list(ids)
+        with self._lock:
+            self._pinned_chunks.update(ids)
+        return {"steps": [], "ids": ids}
+
+    def unpin(self, token: dict) -> None:
+        with self._lock:
+            self._pinned_steps.subtract(token["steps"])
+            self._pinned_chunks.subtract(token["ids"])
+            self._pinned_steps += collections.Counter()  # drop <=0
+            self._pinned_chunks += collections.Counter()
+
     # -- manifests -----------------------------------------------------------
 
     def _manifest_path(self, step: int) -> pathlib.Path:
@@ -154,6 +236,8 @@ class ChunkStore:
         tmp = p.with_name("." + p.name)
         tmp.write_text(json.dumps(manifest, indent=1, sort_keys=True))
         tmp.rename(p)
+        with self._lock:
+            self.version += 1
         return p
 
     def load_manifest(self, step: int) -> dict:
@@ -235,16 +319,36 @@ class ChunkStore:
         """Drop manifests not in ``keep_steps`` (None keeps all) and
         every chunk no kept manifest references. Keeping a delta step
         implicitly keeps its whole chain back to the base — a kept
-        checkpoint must stay restorable."""
+        checkpoint must stay restorable. Steps and chunks pinned by a
+        serving ``ChunkPeer`` survive regardless (``pinned`` in the
+        returned stats counts what gc wanted to drop but couldn't), so
+        retention can never truncate a checkpoint mid-stream."""
         keep = set(self.steps() if keep_steps is None else keep_steps)
         for s in list(keep):
             m = self.load_manifest(s)
             while m["kind"] == "delta":
                 m = self.load_manifest(m["prev_step"])
                 keep.add(m["step"])
+        # pin checks happen per item at DELETION time (not one
+        # snapshot up front): a ChunkPeer/StreamingFetcher pins a
+        # whole chain atomically BEFORE serving/consuming a byte, so
+        # re-reading the counters right before each unlink closes the
+        # window where a pin taken mid-gc would be ignored
+        def step_pinned(s: int) -> bool:
+            with self._lock:
+                return self._pinned_steps.get(s, 0) > 0
+
+        def chunk_pinned(d: str) -> bool:
+            with self._lock:
+                return self._pinned_chunks.get(d, 0) > 0
+
+        pinned_saves = 0
         removed_manifests = 0
         for s in self.steps():
             if s not in keep:
+                if step_pinned(s):
+                    pinned_saves += 1
+                    continue
                 self._manifest_path(s).unlink()
                 removed_manifests += 1
         live: set[str] = set()
@@ -253,7 +357,13 @@ class ChunkStore:
         removed_chunks = 0
         for sub in (self.root / "chunks").iterdir():
             for p in sub.iterdir():
-                if not p.name.startswith(".") and p.name not in live:
-                    p.unlink()
-                    removed_chunks += 1
-        return {"manifests": removed_manifests, "chunks": removed_chunks}
+                if p.name.startswith(".") or p.name in live:
+                    continue
+                if chunk_pinned(p.name):
+                    continue
+                p.unlink()
+                removed_chunks += 1
+        with self._lock:
+            self.version += 1
+        return {"manifests": removed_manifests, "chunks": removed_chunks,
+                "pinned": pinned_saves}

@@ -11,16 +11,23 @@ to its ``ChunkStore``. ``swarm_fetch``:
   3. dedups against the local store (a rejoining node only fetches
      what changed since it left);
   4. splits the missing chunk ids into contiguous ranges on a shared
-     work queue and downloads them from ALL live peers in parallel —
-     each range is served by exactly one peer (disjoint striping);
+     work queue and downloads them from the live peers in parallel —
+     each range is served by exactly one peer (disjoint striping).
+     With a gossip ``possession`` map, a range is only ever handed to
+     a peer that actually HOLDS all its chunks (peers are partial
+     replicas, not full mirrors); without one, the legacy
+     every-peer-has-all assumption applies;
   5. verifies every chunk by its content address on arrival;
   6. when a peer dies mid-transfer (connection drop, bad bytes,
      missing chunk), re-queues that peer's unfinished range so the
-     survivors pick it up; the fetch fails only when NO peer is left.
+     surviving HOLDERS pick it up; the fetch fails only when no live
+     peer can serve a still-missing range.
 
 Protocol: length-prefixed sha256-checked frames (same framing as
 ``p2p``). Requests are JSON; chunk payloads are the store's deflated
-blobs, verified end-to-end by chunk id after inflation.
+blobs, verified end-to-end by chunk id after inflation. Gossip ops
+(``digest`` / ``inventory`` / ``have``) ride the same connection — see
+``repro.checkpointing.gossip``.
 """
 from __future__ import annotations
 
@@ -29,14 +36,18 @@ import json
 import pathlib
 import socket
 import threading
-from typing import Sequence
+import time
+from typing import Callable, Sequence
 
 from repro.checkpointing import delta as _delta
-from repro.checkpointing.p2p import (FetchError, _recv_frame,
+from repro.checkpointing.p2p import (FetchError, PeerConn, _recv_frame,
                                      _send_frame)
 from repro.checkpointing.store import ChunkCorruptError, ChunkStore
 
 Addr = tuple  # (host, port)
+
+# kept importable under the old private name (tests, older callers)
+_PeerConn = PeerConn
 
 
 class SwarmFetchError(FetchError):
@@ -55,21 +66,42 @@ class NoPeersError(SwarmFetchError):
 class ChunkPeer:
     """Serves a ``ChunkStore`` to joining peers.
 
-    Request frames (JSON): ``{"op": "latest"}`` ->
-    ``{"step": int|null}``; ``{"op": "manifest", "step": n}`` -> the
-    manifest (or ``{"error": "no-such-step"}``); ``{"op": "chunks",
-    "ids": [...]}`` -> one blob frame per id, in order (an empty frame
-    means the peer doesn't hold that chunk).
+    Request frames (JSON):
+      * ``{"op": "latest"}`` -> ``{"step": int|null}``;
+      * ``{"op": "manifest", "step": n}`` -> the manifest (or
+        ``{"error": "no-such-step"}``); serving a manifest PINS its
+        chain in the store until the session closes, so a concurrent
+        retention gc can never truncate a checkpoint mid-stream;
+      * ``{"op": "chunks", "ids": [...]}`` -> one blob frame per id, in
+        order (an empty frame means the peer doesn't hold that chunk);
+      * ``{"op": "digest"}`` -> ``{"latest", "n_chunks", "sha",
+        "version"}`` — the compact possession summary gossip polls;
+      * ``{"op": "inventory"}`` -> ``{"ids": [...]}`` full chunk-id
+        list (pulled only when the digest sha changed);
+      * ``{"op": "have", "ids": [...]}`` -> ``{"have": [0/1, ...]}``.
 
-    ``crash_after`` is the fault-injection hook used by the cluster
-    simulator: the peer serves that many chunks, then drops every
-    connection and stops accepting — a silent mid-transfer crash.
+    Fault-injection knobs used by the cluster simulator and the
+    deterministic fault harness:
+      * ``crash_after`` — serve that many chunks, then drop every
+        connection and stop accepting (silent mid-transfer crash);
+      * ``corrupt_after`` — serve that many good chunks, then ship
+        flipped bytes (checksum mismatch at the receiver);
+      * ``stall_chunks`` / ``stall_s`` — after ``stall_chunks`` chunks
+        sleep ``stall_s`` before EVERY subsequent chunk (a throttled /
+        stalling WAN link; also what the overlap benchmark uses to give
+        the fetch non-trivial wall time).
     """
 
     def __init__(self, store: ChunkStore, host: str = "127.0.0.1",
-                 port: int = 0, crash_after: int | None = None):
+                 port: int = 0, crash_after: int | None = None,
+                 corrupt_after: int | None = None,
+                 stall_chunks: int | None = None,
+                 stall_s: float = 0.0):
         self.store = store
         self.crash_after = crash_after
+        self.corrupt_after = corrupt_after
+        self.stall_chunks = stall_chunks
+        self.stall_s = stall_s
         self.served_chunks = 0
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -93,7 +125,22 @@ class ChunkPeer:
             threading.Thread(target=self._session, args=(conn,),
                              daemon=True).start()
 
+    def _send_chunk(self, conn: socket.socket, digest: str) -> None:
+        if self.stall_chunks is not None and \
+                self.served_chunks >= self.stall_chunks:
+            time.sleep(self.stall_s)
+        try:
+            blob = self.store.get_blob(digest)
+        except KeyError:
+            blob = b""
+        if self.corrupt_after is not None and \
+                self.served_chunks >= self.corrupt_after and blob:
+            blob = bytes(b ^ 0xFF for b in blob[:64]) + blob[64:]
+        _send_frame(conn, blob)
+        self.served_chunks += 1
+
     def _session(self, conn: socket.socket) -> None:
+        pins: list[dict] = []
         try:
             conn.settimeout(10.0)
             while not self._stop.is_set():
@@ -105,6 +152,7 @@ class ChunkPeer:
                 elif op == "manifest":
                     try:
                         m = self.store.load_manifest(req["step"])
+                        pins.append(self.store.pin_chain(req["step"]))
                         _send_frame(conn, json.dumps(m).encode())
                     except FileNotFoundError:
                         _send_frame(conn, json.dumps(
@@ -115,17 +163,27 @@ class ChunkPeer:
                                 self.served_chunks >= self.crash_after:
                             self.crash()
                             return
-                        try:
-                            blob = self.store.get_blob(digest)
-                        except KeyError:
-                            blob = b""
-                        _send_frame(conn, blob)
-                        self.served_chunks += 1
+                        self._send_chunk(conn, digest)
+                elif op == "digest":
+                    n, sha = self.store.inventory_digest()
+                    _send_frame(conn, json.dumps(
+                        {"latest": self.store.latest_step(),
+                         "n_chunks": n, "sha": sha,
+                         "version": self.store.version}).encode())
+                elif op == "inventory":
+                    _send_frame(conn, json.dumps(
+                        {"ids": self.store.inventory()}).encode())
+                elif op == "have":
+                    _send_frame(conn, json.dumps(
+                        {"have": [int(self.store.has(d))
+                                  for d in req["ids"]]}).encode())
                 else:
                     return
         except (FetchError, OSError, json.JSONDecodeError):
             pass
         finally:
+            for token in pins:
+                self.store.unpin(token)
             conn.close()
 
     def crash(self) -> None:
@@ -142,24 +200,7 @@ class ChunkPeer:
             pass
 
 
-class _PeerConn:
-    def __init__(self, addr: Addr, timeout: float):
-        self.addr = tuple(addr)
-        self.sock = socket.create_connection(addr, timeout=timeout)
-        self.sock.settimeout(timeout)
-
-    def request(self, payload: dict) -> bytes:
-        _send_frame(self.sock, json.dumps(payload).encode())
-        return _recv_frame(self.sock)
-
-    def close(self) -> None:
-        try:
-            self.sock.close()
-        except OSError:
-            pass
-
-
-def _manifest_chain(conn: _PeerConn, step: int) -> list[dict]:
+def _manifest_chain(conn: PeerConn, step: int) -> list[dict]:
     """The full manifest chain for ``step`` (base first), fetched from
     one peer."""
     chain = []
@@ -169,13 +210,17 @@ def _manifest_chain(conn: _PeerConn, step: int) -> list[dict]:
         if "error" in m:
             raise SwarmFetchError(
                 f"peer {conn.addr} lost step {s} mid-chain")
+        if m.get("step") != s:
+            raise SwarmFetchError(
+                f"peer {conn.addr} served a stale manifest "
+                f"({m.get('step')} for requested step {s})")
         chain.append(m)
         if m["kind"] != "delta":
             return chain[::-1]
         s = m["prev_step"]
 
 
-def _manifest_chain_any(holders: list[_PeerConn], step: int,
+def _manifest_chain_any(holders: list[PeerConn], step: int,
                         failures: dict) -> list[dict]:
     """Chain fetch with failover: a bad first holder must not abort a
     recovery two healthy holders could serve."""
@@ -192,12 +237,97 @@ def _manifest_chain_any(holders: list[_PeerConn], step: int,
                           f"for step {step}: {last}", failures)
 
 
+class _WorkQueue:
+    """Shared range queue with per-range candidate tracking.
+
+    Each range carries the set of peers believed (via gossip) to hold
+    ALL its chunks; a worker only pops ranges it is a candidate for.
+    When a peer dies it is struck from every range's candidate set —
+    a range with no candidates left fails the fetch immediately
+    instead of hanging (the caller may re-gossip and retry: the store
+    keeps whatever already landed)."""
+
+    def __init__(self, ranges: list[list[str]],
+                 candidates: Callable[[list[str]], set[Addr]]):
+        self.cv = threading.Condition()
+        self.pending: collections.deque = collections.deque(
+            (batch, candidates(batch)) for batch in ranges)
+        self.inflight = 0
+        self.dead: set[Addr] = set()
+        self.unservable: list[list[str]] = []
+        self.aborted = False
+
+    def abort(self) -> None:
+        """Fatal consumer-side error (e.g. the progress hook raised):
+        wake every worker and make them drain out — the fetch must
+        fail typed, never hang on a dead sibling's inflight count."""
+        with self.cv:
+            self.aborted = True
+            self.cv.notify_all()
+
+    def pop(self, addr: Addr):
+        """Next range ``addr`` can serve, or None when the queue has
+        fully drained (or this peer can serve nothing that's left)."""
+        with self.cv:
+            while True:
+                if self.aborted:
+                    return None
+                for _ in range(len(self.pending)):
+                    batch, cand = self.pending.popleft()
+                    cand -= self.dead
+                    if not cand:
+                        self.unservable.append(batch)
+                        self.cv.notify_all()
+                        continue
+                    if addr in cand:
+                        self.inflight += 1
+                        return batch
+                    self.pending.append((batch, cand))
+                if addr in self.dead or self.unservable:
+                    return None
+                if not self.pending and self.inflight == 0:
+                    return None
+                # everything left is assigned to others or in flight;
+                # an in-flight batch may yet fail and come back to us
+                self.cv.wait()
+
+    def done(self) -> None:
+        with self.cv:
+            self.inflight -= 1
+            self.cv.notify_all()
+
+    def requeue(self, batch: list[str], addr: Addr,
+                candidates: set[Addr]) -> None:
+        """Peer ``addr`` failed mid-range: mark it dead and hand the
+        remainder to the surviving candidates."""
+        with self.cv:
+            self.inflight -= 1
+            self.dead.add(addr)
+            if batch:
+                cand = candidates - self.dead
+                if cand:
+                    self.pending.append((batch, cand))
+                else:
+                    self.unservable.append(batch)
+            self.cv.notify_all()
+
+
 def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
                 *, step: int | None = None, range_chunks: int = 8,
-                timeout: float = 20.0) -> dict:
+                timeout: float = 20.0,
+                possession: dict | None = None,
+                progress: Callable[[str, int], None] | None = None
+                ) -> dict:
     """Fetch the newest checkpoint (manifest chain + all missing
     chunks) from ``peers`` into ``store``, striping disjoint chunk
     ranges across every live peer and reassigning on peer death.
+
+    ``possession`` (optional, from ``ChunkGossip.possession``) maps
+    peer addr -> set of chunk ids that peer holds; ranges are then only
+    assigned to actual holders instead of assuming full replicas. A
+    peer absent from the map is assumed full (legacy behavior).
+    ``progress(chunk_id, n_bytes)`` fires after each verified chunk
+    lands (the streaming assembler's hook).
 
     Returns stats: ``{"step", "chunks_fetched", "bytes_fetched",
     "per_peer", "reassigned_ranges", "dead_peers"}``.
@@ -205,10 +335,10 @@ def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
     if isinstance(store, (str, pathlib.Path)):
         store = ChunkStore(store)
     failures: dict[Addr, str] = {}
-    conns: list[_PeerConn] = []
+    conns: list[PeerConn] = []
     for addr in peers:
         try:
-            conns.append(_PeerConn(addr, timeout))
+            conns.append(PeerConn(addr, timeout))
         except OSError as e:
             failures[tuple(addr)] = f"connect: {e}"
     try:
@@ -239,72 +369,115 @@ def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
             for d in store.missing(m):
                 need.setdefault(d, None)
         ids = list(need)
-        ranges = collections.deque(
-            ids[i:i + range_chunks]
-            for i in range(0, len(ids), range_chunks))
-        cv = threading.Condition()
-        inflight = [0]   # ranges popped but not yet finished/requeued
+
+        # with a possession map, chunks a peer lacks never get routed
+        # to it — and a lagging peer (latest < target, or no manifest
+        # at all, e.g. a half-synced fellow joiner) still serves the
+        # chunks gossip says it holds. A peer the map doesn't cover
+        # falls back to the legacy assumption: full replica iff it
+        # holds the target step.
+        streamers = [c for c in conns
+                     if c.addr in latest
+                     or (possession is not None
+                         and c.addr in possession)]
+
+        def candidates(batch: list[str]) -> set[Addr]:
+            out = set()
+            for c in streamers:
+                if possession is not None and c.addr in possession:
+                    held = possession[c.addr]
+                    if all(d in held for d in batch):
+                        out.add(c.addr)
+                elif latest.get(c.addr, -1) >= step:
+                    out.add(c.addr)
+            return out
+
+        if possession is None:
+            ranges = [ids[i:i + range_chunks]
+                      for i in range(0, len(ids), range_chunks)]
+        else:
+            # group ids by holder set (manifest order preserved inside
+            # each group) so ranges stay candidate-homogeneous: a
+            # partial holder gets ranges made ONLY of chunks it has,
+            # instead of never qualifying for mixed ranges
+            groups: dict[frozenset, list[str]] = {}
+            for d in ids:
+                groups.setdefault(frozenset(candidates([d])),
+                                  []).append(d)
+            ranges = [grp[i:i + range_chunks]
+                      for grp in groups.values()
+                      for i in range(0, len(grp), range_chunks)]
+
+        queue = _WorkQueue(ranges, candidates)
+        lock = threading.Lock()
         stats = {"step": step, "chunks_fetched": 0, "bytes_fetched": 0,
                  "per_peer": {f"{a[0]}:{a[1]}": 0 for a in
-                              (c.addr for c in holders)},
+                              (c.addr for c in streamers)},
                  "reassigned_ranges": 0, "dead_peers": []}
 
-        def worker(conn: _PeerConn) -> None:
+        fatal: list[BaseException] = []
+
+        def worker(conn: PeerConn) -> None:
             name = f"{conn.addr[0]}:{conn.addr[1]}"
             while True:
-                with cv:
-                    # another peer's in-flight batch may yet fail and
-                    # be requeued — stay alive until nothing is left
-                    # pending anywhere, not merely until the queue is
-                    # momentarily empty
-                    cv.wait_for(lambda: ranges or inflight[0] == 0)
-                    if not ranges:
-                        return
-                    batch = ranges.popleft()
-                    inflight[0] += 1
+                batch = queue.pop(conn.addr)
+                if batch is None:
+                    return
                 done = 0
                 try:
                     payload = conn.request({"op": "chunks",
                                             "ids": batch})
                     for i, digest in enumerate(batch):
-                        blob = payload if i == 0 else _recv_frame(
-                            conn.sock)
+                        blob = payload if i == 0 else conn.recv_frame()
                         if not blob:
                             raise ChunkCorruptError(
                                 f"peer missing chunk {digest[:12]}")
                         store.put_blob(digest, blob)
                         done += 1
-                        with cv:
+                        with lock:
                             stats["chunks_fetched"] += 1
                             stats["bytes_fetched"] += len(blob)
                             stats["per_peer"][name] += 1
-                    with cv:
-                        inflight[0] -= 1
-                        cv.notify_all()
+                        if progress is not None:
+                            # a consumer-side failure (e.g. the chain
+                            # replayer rejecting a diverged chain) is
+                            # fatal to the whole fetch, not this peer:
+                            # abort every worker and re-raise after
+                            # join — never leave siblings waiting on
+                            # our inflight count
+                            try:
+                                progress(digest, len(blob))
+                            except BaseException as e:
+                                with lock:
+                                    fatal.append(e)
+                                queue.abort()
+                                return
+                    queue.done()
                 except (FetchError, ChunkCorruptError, OSError) as e:
-                    with cv:
-                        inflight[0] -= 1
-                        rest = batch[done:]
+                    rest = batch[done:]
+                    with lock:
                         if rest:
-                            ranges.append(rest)
                             stats["reassigned_ranges"] += 1
                         failures[conn.addr] = str(e)
                         stats["dead_peers"].append(name)
-                        cv.notify_all()
+                    queue.requeue(rest, conn.addr, candidates(rest))
                     return
 
         threads = [threading.Thread(target=worker, args=(c,),
-                                    daemon=True) for c in holders]
+                                    daemon=True) for c in streamers]
         for t in threads:
             t.start()
         for t in threads:
             t.join()
 
+        if fatal:
+            raise fatal[0]
+
         still_missing = [d for d in ids if not store.has(d)]
         if still_missing:
             raise SwarmFetchError(
                 f"{len(still_missing)} chunks unfetched after all "
-                f"peers failed", failures)
+                f"candidate peers failed", failures)
         # chunks are all present and verified: publish the manifests
         # (base first) so a local restore sees a complete chain
         for m in chain:

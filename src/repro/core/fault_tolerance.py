@@ -120,6 +120,14 @@ class EventKind(enum.Enum):
     LEAVE = "leave"                # graceful deathrattle
     CRASH = "crash"                # heartbeats stop silently
     STRAGGLE = "straggle"          # node too slow for this outer sync
+    ANNOUNCE = "announce"          # node intends to join soon: start
+    #                                streaming its checkpoint NOW so the
+    #                                fetch overlaps the inner phases
+    #                                before its JOIN boundary
+    STALL = "stall"                # a node's serving link stalls (its
+    #                                ChunkPeer stops answering for a
+    #                                while); membership is unaffected —
+    #                                subscribers throttle/kill the peer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,14 +171,20 @@ class ClusterSimulator:
     def begin_outer_step(self, outer_step: int) -> dict:
         """Apply events for this step; return the sync plan:
         {'live': [...], 'stragglers': [...], 'joined': [...],
-        'left': [...]}."""
-        joined, left, stragglers = [], [], []
+        'left': [...], 'announced': [...]}."""
+        joined, left, stragglers, announced = [], [], [], []
         for ev in self.events:
             if ev.outer_step != outer_step:
                 continue
             for fn in self._subscribers:
                 fn(ev)
-            if ev.kind == EventKind.JOIN:
+            if ev.kind in (EventKind.ANNOUNCE, EventKind.STALL):
+                # no membership change: ANNOUNCE kicks off a streaming
+                # fetch via the subscriber hooks; STALL is a peer-level
+                # fault the hooks inject into the serving ChunkPeer
+                if ev.kind == EventKind.ANNOUNCE:
+                    announced.append(ev.node_id)
+            elif ev.kind == EventKind.JOIN:
                 self.hb.register(ev.node_id, self.now)
                 # joiner downloads a checkpoint P2P, becomes live at THIS
                 # boundary with zero pseudo-gradient (paper non-blocking)
@@ -197,4 +211,5 @@ class ClusterSimulator:
         self.history.append((outer_step, tuple(live)))
         return {"live": live,
                 "stragglers": [s for s in stragglers if s in live],
-                "joined": joined, "left": sorted(set(left))}
+                "joined": joined, "left": sorted(set(left)),
+                "announced": announced}

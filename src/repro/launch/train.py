@@ -50,6 +50,13 @@ def main():
                     help="comma-separated host:port peers; swarm-fetch "
                          "the latest checkpoint into --ckpt-dir and "
                          "start from it")
+    ap.add_argument("--join-mode", default="blocking",
+                    choices=["blocking", "stream"],
+                    help="blocking: fetch completes before step 0 (the "
+                         "paper's production mode); stream: gossip + "
+                         "background chunk streaming overlapped with "
+                         "the inner phases, adopted at the first outer "
+                         "boundary where the chain is fully assembled")
     ap.add_argument("--events", default=None,
                     help='JSON list like [[2,"join",5],[3,"crash",1]]')
     ap.add_argument("--seed", type=int, default=0)
@@ -94,7 +101,6 @@ def main():
     trainer = ElasticTrainer(model, tcfg, dcfg, params, sim)
 
     if args.join_from:
-        from repro.checkpointing import recover
         peers = []
         for hp in args.join_from.split(","):
             host, _, port = hp.rpartition(":")
@@ -103,17 +109,34 @@ def main():
         assert args.ckpt_engine != "flat", \
             "--join-from fetches into a chunk store; use " \
             "--ckpt-engine store|delta"
-        tree, meta, stats = recover(peers, args.ckpt_dir,
-                                    trainer.checkpoint_like())
-        trainer.adopt_checkpoint(tree, meta)
-        print(f"joined via swarm: step {stats['step']}, "
-              f"{stats['chunks_fetched']} chunks "
-              f"({stats['bytes_fetched']} B) from "
-              f"{len(stats['per_peer'])} peers "
-              f"(reassigned={stats['reassigned_ranges']})")
+        if args.join_mode == "stream":
+            # overlapped onboarding: chunks stream + assemble in the
+            # background while the inner phases run; the trainer
+            # adopts at the first ready outer boundary
+            trainer.begin_stream_join(peers)
+            print(f"streaming join from {len(peers)} peers "
+                  f"(gossip + background chunk streaming)")
+        else:
+            from repro.checkpointing import recover
+            tree, meta, stats = recover(peers, args.ckpt_dir,
+                                        trainer.checkpoint_like())
+            trainer.adopt_checkpoint(tree, meta)
+            print(f"joined via swarm: step {stats['step']}, "
+                  f"{stats['chunks_fetched']} chunks "
+                  f"({stats['bytes_fetched']} B) from "
+                  f"{len(stats['per_peer'])} peers "
+                  f"(reassigned={stats['reassigned_ranges']})")
 
     hist = trainer.run(args.outer_steps,
                        inner_steps=args.inner_steps)
+    joins = [h["stream_join"] for h in hist if "stream_join" in h]
+    for j in joins:
+        st = j.get("stats", {})
+        print(f"stream join: admitted={j['admitted']} "
+              f"step={j.get('step')} "
+              f"fetch={st.get('fetch_seconds', 0):.3f}s "
+              f"chunks={st.get('chunks_fetched', 0)} "
+              f"replayed_on_stream={st.get('replayed_on_stream', 0)}")
     if args.serve_ckpt_port is not None:
         assert args.ckpt_dir, "--serve-ckpt-port needs --ckpt-dir"
         if args.ckpt_engine == "flat":

@@ -89,6 +89,8 @@ class ElasticTrainer:
         self.ckpt_store = None
         self.snapshotter = None
         self._ckpt_steps: list[int] = []
+        self.persisted_steps: list[int] = []   # on disk, not just queued
+        self._stream_join = None               # in-flight StreamingFetcher
         if cfg.ckpt_dir and cfg.ckpt_engine != "flat":
             from repro.checkpointing import (AsyncSnapshotter, ChunkStore,
                                              DeltaCheckpointer,
@@ -109,8 +111,13 @@ class ElasticTrainer:
                     f"unknown ckpt_engine {cfg.ckpt_engine!r}")
             # double-buffered: persists overlap the next inner phase,
             # bounded memory, FIFO so the delta reference chain is
-            # written in step order
-            self.snapshotter = AsyncSnapshotter(write_fn)
+            # written in step order; on_persist tracks what is actually
+            # on disk — the retention gc keep-set reads it at task
+            # execution time, so gc can never count an in-flight save
+            self.snapshotter = AsyncSnapshotter(
+                write_fn,
+                on_persist=lambda step, _m:
+                    self.persisted_steps.append(step))
 
     # -- inner phase ----------------------------------------------------------
 
@@ -205,6 +212,12 @@ class ElasticTrainer:
                        jax.tree.map(lambda p: p[0], self.params),
                        max(1, int(np.sum(np.asarray(weights) > 0))),
                        self.cfg.diloco)}
+            # streamed recovery that completed during this inner phase
+            # is adopted HERE — the paper's overlapped onboarding: the
+            # fetch ran under compute, admission costs one restore
+            join_rec = self.poll_stream_join()
+            if join_rec is not None:
+                rec["stream_join"] = join_rec
             self.history.append(rec)
 
             if self.cfg.ckpt_dir and \
@@ -219,11 +232,15 @@ class ElasticTrainer:
                     self._ckpt_steps.append(global_step)
                     if self.cfg.ckpt_keep and self.ckpt_store and \
                             len(self._ckpt_steps) > self.cfg.ckpt_keep:
-                        keep = tuple(
-                            self._ckpt_steps[-self.cfg.ckpt_keep:])
+                        # the keep set is computed when the task RUNS
+                        # (FIFO behind every pending persist), from
+                        # what is actually on disk by then — never
+                        # from steps still in flight
+                        keep = self.cfg.ckpt_keep
                         self.snapshotter.submit_task(
-                            lambda ks=keep: self.ckpt_store.gc(
-                                keep_steps=ks))
+                            lambda k=keep: self.ckpt_store.gc(
+                                keep_steps=tuple(
+                                    self.persisted_steps[-k:])))
                 else:
                     from repro.checkpointing import save_async
                     save_async(self.cfg.ckpt_dir, global_step, tree,
@@ -231,6 +248,53 @@ class ElasticTrainer:
         if self.snapshotter is not None:
             self.snapshotter.flush()
         return self.history
+
+    def begin_stream_join(self, peers, *, store_root=None,
+                          step: int | None = None,
+                          range_chunks: int = 8, timeout: float = 20.0):
+        """Start an overlapped streaming recovery from ``peers`` on a
+        background thread (paper §2.4.2: recovery overlaps the inner
+        phase). The fetch gossips chunk availability, streams the
+        manifest chain into this node's store and assembles the delta
+        chain incrementally; ``run()`` adopts the result at the first
+        outer boundary where it is ready. Returns the fetcher (callers
+        outside ``run()`` can ``wait_ready()`` it themselves)."""
+        assert self._stream_join is None or self._stream_join.done, \
+            "a streaming join is already in flight"
+        from repro.checkpointing import ChunkStore, StreamingFetcher
+        # an explicit store_root wins (the single-process simulation
+        # plays both cluster and joiner: the joiner must stream into
+        # its OWN store, not dedup against the serving one); a real
+        # joiner defaults to its configured chunk store
+        if store_root is not None:
+            store = ChunkStore(store_root)
+        else:
+            store = self.ckpt_store
+            assert store is not None, \
+                "streaming join needs a chunk store: configure " \
+                "ckpt_engine store|delta or pass store_root"
+        self._stream_join = StreamingFetcher(
+            peers, store, self.checkpoint_like(), step=step,
+            range_chunks=range_chunks, timeout=timeout).start()
+        return self._stream_join
+
+    def poll_stream_join(self) -> dict | None:
+        """Non-blocking: adopt a finished streaming recovery (called at
+        every outer boundary by ``run()``). Returns the admission
+        record, a failure record, or None while still streaming."""
+        f = self._stream_join
+        if f is None or not f.done:
+            return None
+        self._stream_join = None
+        if f.failed:
+            f.close()
+            return {"admitted": False, "error": str(f.error),
+                    "stats": f.stats()}
+        tree, meta, stats = f.result()
+        self.adopt_checkpoint(tree, meta)
+        f.close()
+        return {"admitted": True, "step": stats["step"],
+                "outer_step": meta.get("outer_step"), "stats": stats}
 
     def checkpoint_like(self):
         """Template pytree matching what run() checkpoints (for

@@ -83,17 +83,22 @@ def build_train_step(model, plan, mesh, optimizer: AdamW):
         return jax.tree.map(one, tree, pspecs,
                             is_leaf=lambda x: isinstance(x, P))
 
-    def grads_of(params, batch):
+    def grads_of(params, batch, hints: bool = True):
         """Microbatched (gradient-accumulation) value_and_grad with the
-        activation hints active."""
+        activation hints active. ``hints=False`` traces the body with
+        NO in-body sharding constraints at all — required inside plain
+        vmap on data-sharded-params plans, where any constraint in the
+        vmapped body lowers through XLA's manual-subgroup machinery and
+        CHECK-crashes the compiler."""
         from repro.sharding.act_hints import activation_hints
 
-        with activation_hints(act_spec):
+        constrain = _soft_constrain if hints else (lambda t: t)
+        with activation_hints(act_spec if hints else None):
             if plan.microbatches == 1:
                 (_, metrics), grads = jax.value_and_grad(
                     model.loss, has_aux=True)(params, batch,
                                               remat=plan.remat)
-                return _soft_constrain(grads), metrics
+                return constrain(grads), metrics
             nmb = plan.microbatches
             mb = jax.tree.map(
                 lambda x: x.reshape((nmb, x.shape[0] // nmb)
@@ -103,12 +108,12 @@ def build_train_step(model, plan, mesh, optimizer: AdamW):
                 (_, m), g = jax.value_and_grad(
                     model.loss, has_aux=True)(params, b_i,
                                               remat=plan.remat)
-                g = _soft_constrain(g)
+                g = constrain(g)
                 acc = jax.tree.map(
                     lambda a, gg: a + gg.astype(jnp.float32), acc, g)
-                return _soft_constrain(acc), m
+                return constrain(acc), m
 
-            zeros = _soft_constrain(jax.tree.map(
+            zeros = constrain(jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params))
             grads, ms = jax.lax.scan(body, zeros, mb)
             grads = jax.tree.map(lambda g: g / nmb, grads)
@@ -142,47 +147,31 @@ def build_train_step(model, plan, mesh, optimizer: AdamW):
     state_specs = TrainState(
         lead(pspecs), AdamWState(P(dax), lead(pspecs), lead(pspecs)))
 
-    def _uses_data(spec: P) -> bool:
-        return any(e == "data" or (isinstance(e, tuple) and "data" in e)
-                   for e in spec)
+    # XLA's SPMD partitioner CHECK-fails (`Check failed:
+    # sharding.IsManualSubgroup()`) whenever a constraint meets a
+    # manual subgroup: a shard_map region manual over the DiLoCo axis
+    # whose body constrains leaves over the remaining mesh axes needs
+    # manual-subgroup shardings this XLA cannot partition, and
+    # `vmap(spmd_axis_name=dax)` lowers through the same machinery.
+    # Partitioner-safe formulation with NO manual axes at all:
+    # plain-vmap the per-worker step (traced hint-free — any in-body
+    # constraint reintroduces the crash) over the stacked leading dim
+    # and constrain the STACKED trees at the vmap boundary; sharding is
+    # driven entirely by the boundary constraints and pjit propagation.
+    def step(state: TrainState, batch):
+        batch = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dax, *bspec))), batch)
 
-    needs_data_sharded_params = any(
-        _uses_data(s) for s in jax.tree.leaves(
-            pspecs, is_leaf=lambda x: isinstance(x, P)))
+        grads, metrics = jax.vmap(
+            lambda p, b: grads_of(p, b, hints=False))(
+                state.params, batch)
+        grads = _constrain(mesh, grads, lead(pspecs))
+        params, opt = jax.vmap(optimizer.update)(
+            grads, state.opt, state.params)
+        params = _constrain(mesh, params, lead(pspecs))
+        return TrainState(params, opt), metrics
 
-    if needs_data_sharded_params:
-        # XLA's SPMD partitioner CHECK-fails on manual('pod') subgroups
-        # combined with data-axis-sharded params (spmd_partitioner_util
-        # partition-group math). Equivalent formulation with NO manual
-        # axes: vmap the per-worker step over the stacked leading dim
-        # and let pjit shard it over the DiLoCo axis.
-        def step(state: TrainState, batch):
-            batch = jax.tree.map(
-                lambda x: jax.lax.with_sharding_constraint(
-                    x, NamedSharding(mesh, P(dax, *bspec))), batch)
-
-            # spmd_axis_name prepends dax to every constraint inside
-            # the vmapped body, so hints use the per-worker spec
-            grads, metrics = jax.vmap(
-                grads_of, spmd_axis_name=dax)(state.params, batch)
-            grads = _constrain(mesh, grads, lead(pspecs))
-            params, opt = jax.vmap(optimizer.update)(
-                grads, state.opt, state.params)
-            params = _constrain(mesh, params, lead(pspecs))
-            return TrainState(params, opt), metrics
-
-        return step, state_specs
-
-    def per_worker(state: TrainState, batch):
-        unlift = lambda t: jax.tree.map(lambda x: x[0], t)
-        lift = lambda t: jax.tree.map(lambda x: x[None], t)
-        params, opt = unlift(state.params), unlift(state.opt)
-        params, opt, metrics = inner(params, opt, unlift(batch))
-        return TrainState(lift(params), lift(opt)), lift(metrics)
-
-    step = compat.shard_map(per_worker, mesh=mesh, in_specs=P(dax),
-                            out_specs=P(dax), check_vma=False,
-                            axis_names=frozenset({dax}))
     return step, state_specs
 
 

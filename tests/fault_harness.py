@@ -1,0 +1,156 @@
+"""Deterministic fault-injection harness for the streaming recovery
+subsystem.
+
+Everything is derived from one integer seed: the membership schedule
+(`NodeEvent`s driving `ClusterSimulator`), which chunks each serving
+peer holds (partial replicas), and the peer-level faults (kill N chunks
+into a transfer, stall the link, corrupt a frame). Tests replay the
+same seed and get the same world, every run.
+
+Pieces:
+  * ``seeded_events(seed, ...)`` — a reproducible kill/join/stall
+    schedule for ``ClusterSimulator``;
+  * ``PeerFleet`` — builds per-node ``ChunkStore``s holding seeded
+    subsets of a source store's chunks (union guaranteed complete),
+    serves them with ``ChunkPeer``s, and applies fault events
+    (CRASH -> ``crash_after`` mid-transfer, STALL -> per-chunk sleep,
+    plus direct ``corrupt``/``kill`` knobs for scenario tests);
+  * ``FakeStore`` — in-memory stand-in for ``ChunkStore``'s gossip
+    surface (inventory/digest/has/latest), for socket-free property
+    tests via ``gossip.store_transport``.
+"""
+from __future__ import annotations
+
+import hashlib
+import pathlib
+
+import numpy as np
+
+from repro.checkpointing import ChunkPeer, ChunkStore
+from repro.core.fault_tolerance import EventKind, NodeEvent
+
+
+def seeded_events(seed: int, n_outer: int, joiner_ids,
+                  crash_ids, stall_ids, *, announce_lead: int = 1
+                  ) -> list[NodeEvent]:
+    """A reproducible membership schedule: every joiner gets an
+    ANNOUNCE ``announce_lead`` steps before its JOIN; crashes and
+    stalls land at seeded steps."""
+    rng = np.random.default_rng(seed)
+    events: list[NodeEvent] = []
+    for nid in joiner_ids:
+        join_at = int(rng.integers(announce_lead + 1, n_outer))
+        events.append(NodeEvent(join_at - announce_lead,
+                                EventKind.ANNOUNCE, nid))
+        events.append(NodeEvent(join_at, EventKind.JOIN, nid))
+    for nid in crash_ids:
+        events.append(NodeEvent(int(rng.integers(1, n_outer)),
+                                EventKind.CRASH, nid))
+    for nid in stall_ids:
+        events.append(NodeEvent(int(rng.integers(1, n_outer)),
+                                EventKind.STALL, nid))
+    return sorted(events, key=lambda e: e.outer_step)
+
+
+class PeerFleet:
+    """Seeded fleet of partial-replica serving peers over one source
+    store, wired to ``ClusterSimulator`` fault events."""
+
+    def __init__(self, src: ChunkStore, node_ids, root: pathlib.Path,
+                 seed: int = 0, *, hold_fraction: float = 0.6,
+                 chunk_bytes: int | None = None):
+        self.src = src
+        self.rng = np.random.default_rng(seed)
+        self.stores: dict[int, ChunkStore] = {}
+        self.peers: dict[int, ChunkPeer] = {}
+        cb = chunk_bytes or src.chunk_bytes
+        ids = src.inventory()
+        node_ids = list(node_ids)
+        for i, nid in enumerate(node_ids):
+            if i == 0 or hold_fraction >= 1.0:
+                # the first peer is a full replica: the union must
+                # cover every chunk no matter what the rng drops
+                self.stores[nid] = src
+            else:
+                st = ChunkStore(root / f"node_{nid}", chunk_bytes=cb)
+                held = self.rng.random(len(ids)) < hold_fraction
+                # partial replicas carry chunks but NO manifests —
+                # they model mid-sync joiners; gossip is what
+                # advertises their possession to the fetch
+                for d, h in zip(ids, held):
+                    if h:
+                        st.put_blob(d, src.get_blob(d))
+                self.stores[nid] = st
+            self.peers[nid] = ChunkPeer(self.stores[nid])
+
+    @property
+    def addrs(self) -> list[tuple]:
+        return [p.addr for p in self.peers.values()]
+
+    def addr_of(self, nid: int) -> tuple:
+        return self.peers[nid].addr
+
+    def kill(self, nid: int, after_chunks: int = 0) -> None:
+        """Crash ``nid``'s peer ``after_chunks`` more served chunks
+        (0 = immediately)."""
+        p = self.peers[nid]
+        if after_chunks <= 0:
+            p.crash()
+        else:
+            p.crash_after = p.served_chunks + after_chunks
+
+    def stall(self, nid: int, seconds: float) -> None:
+        p = self.peers[nid]
+        p.stall_chunks = p.served_chunks
+        p.stall_s = seconds
+
+    def corrupt(self, nid: int, after_chunks: int = 0) -> None:
+        p = self.peers[nid]
+        p.corrupt_after = p.served_chunks + after_chunks
+
+    def on_event(self, ev: NodeEvent) -> None:
+        """``ClusterSimulator.subscribe`` hook: apply peer-level
+        faults as membership events land."""
+        if ev.node_id not in self.peers:
+            return
+        if ev.kind == EventKind.CRASH:
+            self.kill(ev.node_id, after_chunks=2)
+        elif ev.kind == EventKind.STALL:
+            self.stall(ev.node_id, 0.05)
+
+    def close(self) -> None:
+        for p in self.peers.values():
+            p.close()
+
+
+class FakeStore:
+    """In-memory gossip surface (what ``store_transport`` needs):
+    chunk-id set + latest step, no disk, no sockets."""
+
+    def __init__(self, ids=(), latest=None):
+        self.ids = set(ids)
+        self.latest = latest
+        self.version = 0
+
+    def add(self, *ids) -> None:
+        self.ids.update(ids)
+        self.version += 1
+
+    def drop(self, *ids) -> None:
+        self.ids.difference_update(ids)
+        self.version += 1
+
+    def inventory(self):
+        return sorted(self.ids)
+
+    def inventory_digest(self):
+        h = hashlib.sha256()
+        for d in self.inventory():
+            h.update(d.encode())
+        return len(self.ids), h.hexdigest()
+
+    def latest_step(self):
+        return self.latest
+
+    def has(self, d):
+        return d in self.ids

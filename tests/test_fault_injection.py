@@ -1,0 +1,364 @@
+"""Deterministic fault-injection suite for overlapped streaming
+recovery: every scenario is a seeded schedule of peer kill/join/stall
+events (tests/fault_harness.py) driving the gossip + streaming fetch
+path, asserting the joiner still assembles a bit-exact checkpoint —
+or fails with the right typed error when it genuinely can't."""
+import pathlib
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpointing import (ChunkGossip, ChunkPeer, ChunkStore,
+                                 DeltaCheckpointer, DeltaConfig,
+                                 NoPeersError, StreamingFetcher,
+                                 SwarmFetchError, swarm_fetch)
+from repro.checkpointing import delta as delta_mod
+
+from tests.fault_harness import PeerFleet, seeded_events
+
+
+@pytest.fixture()
+def rng():
+    """Module-local generator: shadows the session-scoped conftest
+    fixture so these tests don't consume from (and reorder) the shared
+    stream that downstream suites' data depends on."""
+    return np.random.default_rng(1234)
+
+
+def _delta_chain_store(root, rng, *, n=24_000, steps=4,
+                       chunk_bytes=1 << 12):
+    """Source store with a base + deltas chain; returns
+    (store, writer, trees)."""
+    store = ChunkStore(root, chunk_bytes=chunk_bytes)
+    ck = DeltaCheckpointer(store, DeltaConfig(base_every=steps + 1))
+    w = rng.normal(size=(n,)).astype(np.float32)
+    trees = []
+    for t in range(steps):
+        tree = {"w": w.copy(),
+                "b": rng.normal(size=(128,)).astype(np.float32),
+                "step": np.int32(t)}
+        trees.append(tree)
+        ck.save(t, tree, extra_meta={"outer_step": t})
+        w = (w + rng.normal(size=w.shape).astype(np.float32)
+             * 1e-3).astype(np.float32)
+    return store, ck, trees
+
+
+# -- scenario 1: peer death mid-gossip ----------------------------------------
+
+
+def test_peer_death_mid_gossip_expires_and_fetch_survives(tmp_path,
+                                                          rng):
+    src, ck, trees = _delta_chain_store(tmp_path / "src", rng)
+    fleet = PeerFleet(src, [0, 1, 2], tmp_path, seed=7)
+    try:
+        g = ChunkGossip(fleet.addrs, expire_polls=2)
+        g.poll_once()
+        assert len(g.possession) == 3
+        # node 1 dies between gossip rounds
+        fleet.kill(1, after_chunks=0)
+        for _ in range(2):
+            g.poll_once()
+        pos = g.possession
+        assert fleet.addr_of(1) not in pos      # corpse expired
+        assert len(pos) == 2
+        # the fetch runs off the post-death map: no range is ever
+        # routed to the dead peer, so nothing needs reassignment
+        dst = ChunkStore(tmp_path / "dst", chunk_bytes=src.chunk_bytes)
+        stats = swarm_fetch([a for a in g.live_peers()], dst,
+                            possession=pos, range_chunks=3)
+        assert stats["dead_peers"] == []
+        got, meta = delta_mod.restore(dst, trees[-1])
+        np.testing.assert_array_equal(got["w"],
+                                      ck.reference(trees[-1])["w"])
+        assert meta["outer_step"] == len(trees) - 1
+    finally:
+        fleet.close()
+
+
+# -- scenario 2: mid-stream chunk reassignment --------------------------------
+
+
+def test_mid_stream_death_reassigns_to_surviving_holders(tmp_path,
+                                                         rng):
+    src, ck, trees = _delta_chain_store(tmp_path / "src", rng)
+    fleet = PeerFleet(src, [0, 1], tmp_path, seed=3)
+    try:
+        # node 0 (the full replica) dies two chunks into the stream;
+        # node 1 is partial — give it everything so the reassignment
+        # target can actually finish the job
+        for d in src.inventory():
+            if not fleet.stores[1].has(d):
+                fleet.stores[1].put_blob(d, src.get_blob(d))
+        fleet.kill(0, after_chunks=2)
+        f = StreamingFetcher(fleet.addrs, tmp_path / "dst", trees[-1],
+                             range_chunks=2).start()
+        stats = f.wait_ready(timeout=30)
+        assert len(stats["dead_peers"]) >= 1
+        tree, meta, _ = f.result()
+        np.testing.assert_array_equal(tree["w"],
+                                      ck.reference(trees[-1])["w"])
+        # the chain was assembled WHILE streaming, not after
+        assert stats["replayed_on_stream"] == stats["replayed_steps"] \
+            == len(trees)
+        f.close()
+    finally:
+        fleet.close()
+
+
+def test_unservable_chunk_fails_typed_not_hangs(tmp_path, rng):
+    """Partial peers whose union does NOT cover the manifest: the
+    fetch must fail with SwarmFetchError (chunks unfetched), not
+    deadlock waiting for a holder that doesn't exist."""
+    src, ck, trees = _delta_chain_store(tmp_path / "src", rng)
+    ids = src.inventory()
+    partial = ChunkStore(tmp_path / "partial",
+                         chunk_bytes=src.chunk_bytes)
+    for d in ids[: len(ids) // 2]:
+        partial.put_blob(d, src.get_blob(d))
+    # the partial peer ALSO has the manifests (it lags on chunks only)
+    for s in src.steps():
+        partial.write_manifest(src.load_manifest(s))
+    peer = ChunkPeer(partial)
+    try:
+        g = ChunkGossip([peer.addr])
+        g.poll_once()
+        with pytest.raises(SwarmFetchError):
+            swarm_fetch([peer.addr], tmp_path / "dst",
+                        possession=g.possession, range_chunks=3,
+                        timeout=5.0)
+    finally:
+        peer.close()
+
+
+# -- scenario 3: stale manifest from a lagging peer ---------------------------
+
+
+def test_lagging_peer_serves_what_it_has_fetch_targets_newest(
+        tmp_path, rng):
+    # build the lagging snapshot first (steps 0..1), then extend the
+    # source to steps 0..3
+    lag_root = tmp_path / "lag"
+    src = ChunkStore(tmp_path / "src", chunk_bytes=1 << 12)
+    ck = DeltaCheckpointer(src, DeltaConfig(base_every=8))
+    w = rng.normal(size=(24_000,)).astype(np.float32)
+    trees = []
+    lag = ChunkStore(lag_root, chunk_bytes=1 << 12)
+    for t in range(4):
+        tree = {"w": w.copy(), "step": np.int32(t)}
+        trees.append(tree)
+        ck.save(t, tree, extra_meta={"outer_step": t})
+        if t == 1:   # the laggard stops syncing after step 1
+            for d in src.inventory():
+                lag.put_blob(d, src.get_blob(d))
+            for s in src.steps():
+                lag.write_manifest(src.load_manifest(s))
+        w = (w + rng.normal(size=w.shape).astype(np.float32)
+             * 1e-3).astype(np.float32)
+    fresh = ChunkPeer(src)
+    laggard = ChunkPeer(lag)
+    try:
+        g = ChunkGossip([fresh.addr, laggard.addr])
+        g.poll_once()
+        # gossip targets the NEWEST step across peers, not the first
+        # answer: a lagging peer can never roll a joiner back
+        assert g.latest_step() == 3
+        f = StreamingFetcher([fresh.addr, laggard.addr],
+                             tmp_path / "dst", trees[-1],
+                             range_chunks=2, gossip=g).start()
+        stats = f.wait_ready(timeout=30)
+        tree, meta, _ = f.result()
+        assert meta["outer_step"] == 3
+        np.testing.assert_array_equal(tree["w"],
+                                      ck.reference(trees[-1])["w"])
+        # the laggard contributed the base/early chunks it holds
+        lag_name = f"{laggard.addr[0]}:{laggard.addr[1]}"
+        assert stats["per_peer"].get(lag_name, 0) > 0
+        assert stats["dead_peers"] == []
+        f.close()
+    finally:
+        fresh.close()
+        laggard.close()
+
+
+def test_only_lagging_peer_cannot_serve_newer_step(tmp_path, rng):
+    src, ck, trees = _delta_chain_store(tmp_path / "src", rng,
+                                        steps=3)
+    lag = ChunkStore(tmp_path / "lag", chunk_bytes=src.chunk_bytes)
+    # laggard holds only step 0's manifest + chunks
+    m0 = src.load_manifest(0)
+    from repro.checkpointing.store import chunk_ids
+    for d in chunk_ids(m0):
+        lag.put_blob(d, src.get_blob(d))
+    lag.write_manifest(m0)
+    peer = ChunkPeer(lag)
+    try:
+        # pinned to a step the laggard never saw -> typed NoPeersError
+        with pytest.raises(NoPeersError):
+            swarm_fetch([peer.addr], tmp_path / "dst", step=2,
+                        timeout=5.0)
+        # unpinned: the fetch honestly serves the laggard's step 0
+        stats = swarm_fetch([peer.addr], tmp_path / "dst2")
+        assert stats["step"] == 0
+    finally:
+        peer.close()
+
+
+# -- scenario 4: checksum mismatch during streaming ---------------------------
+
+
+def test_corrupting_peer_detected_and_replaced(tmp_path, rng):
+    src, ck, trees = _delta_chain_store(tmp_path / "src", rng)
+    healthy = ChunkPeer(src)
+    corrupter = ChunkPeer(src, corrupt_after=1)  # bad bytes from #2 on
+    try:
+        f = StreamingFetcher([corrupter.addr, healthy.addr],
+                             tmp_path / "dst", trees[-1],
+                             range_chunks=2).start()
+        stats = f.wait_ready(timeout=30)
+        corrupt_name = f"{corrupter.addr[0]}:{corrupter.addr[1]}"
+        assert corrupt_name in stats["dead_peers"]
+        tree, _, _ = f.result()
+        # corruption never reaches the restored tree: every chunk is
+        # content-verified before the store accepts it
+        np.testing.assert_array_equal(tree["w"],
+                                      ck.reference(trees[-1])["w"])
+        f.close()
+    finally:
+        healthy.close()
+        corrupter.close()
+
+
+def test_fatal_progress_error_fails_typed_not_hangs(tmp_path, rng):
+    """A consumer-side failure in the progress hook (e.g. the chain
+    replayer rejecting a diverged chain) must abort the whole fetch
+    typed — never leave sibling workers waiting on a dead thread's
+    inflight count."""
+    src, ck, trees = _delta_chain_store(tmp_path / "src", rng)
+    peers = [ChunkPeer(src) for _ in range(2)]
+    try:
+        class Diverged(ValueError):
+            pass
+
+        calls = []
+
+        def bad_progress(digest, n):
+            calls.append(digest)
+            if len(calls) == 3:
+                raise Diverged("chain replay diverged")
+
+        with pytest.raises(Diverged):
+            swarm_fetch([p.addr for p in peers], tmp_path / "dst",
+                        range_chunks=2, timeout=5.0,
+                        progress=bad_progress)
+    finally:
+        for p in peers:
+            p.close()
+
+
+def test_joiner_side_pins_survive_concurrent_gc(tmp_path, rng):
+    """A streaming joiner assembling into a store that concurrently
+    runs retention gc must not lose in-flight chunks: the fetcher pins
+    the chain's ids before streaming."""
+    src, ck, trees = _delta_chain_store(tmp_path / "src", rng)
+    dst = ChunkStore(tmp_path / "dst", chunk_bytes=src.chunk_bytes)
+    chain = [src.load_manifest(s) for s in src.steps()]
+    from repro.checkpointing.store import chunk_ids
+    ids = []
+    for m in chain:
+        for d in chunk_ids(m):
+            if d not in ids:
+                ids.append(d)
+    token = dst.pin_ids(ids)
+    # half the chunks have landed; no manifest published yet
+    for d in ids[: len(ids) // 2]:
+        dst.put_blob(d, src.get_blob(d))
+    res = dst.gc(keep_steps=[])     # trainer retention fires mid-fetch
+    assert res["chunks"] == 0       # nothing in flight was collected
+    for d in ids[len(ids) // 2:]:
+        dst.put_blob(d, src.get_blob(d))
+    for m in chain:
+        dst.write_manifest(m)
+    dst.unpin(token)
+    got, _ = delta_mod.restore(dst, trees[-1])
+    np.testing.assert_array_equal(got["w"], ck.reference(trees[-1])["w"])
+
+
+# -- seeded end-to-end churn schedule -----------------------------------------
+
+
+def test_seeded_churn_schedule_streaming_join_admitted(tmp_path):
+    """Acceptance: a seeded kill/join/stall schedule drives
+    ClusterSimulator; the ANNOUNCEd joiner streams the checkpoint
+    during the inner phases (overlapped), survives a serving-peer
+    crash and a stall, and run() admits it at the next outer boundary
+    with a restore bit-exact vs the source store."""
+    import jax
+
+    from repro.configs import CONFIGS
+    from repro.core.diloco import DiLoCoConfig
+    from repro.core.fault_tolerance import ClusterSimulator, EventKind
+    from repro.data.pipeline import DataConfig
+    from repro.models.registry import get_model
+    from repro.train.loop import ElasticTrainer, TrainerConfig
+
+    cfg = CONFIGS["mamba2-130m"].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, batch_per_worker=2,
+                      total_steps=80)
+    events = seeded_events(seed=11, n_outer=5, joiner_ids=[4],
+                           crash_ids=[1], stall_ids=[2])
+    sim = ClusterSimulator([0, 1, 2], events=events)
+    tcfg = TrainerConfig(
+        diloco=DiLoCoConfig(inner_steps=2, quant="fp32"),
+        inner_lr=1e-3, max_workers=6,
+        ckpt_dir=str(tmp_path / "cluster"), ckpt_engine="delta",
+        ckpt_delta_base_every=2, ckpt_chunk_bytes=1 << 14)
+    tr = ElasticTrainer(model, tcfg, dcfg, params, sim)
+
+    fleet = {}
+    started = {}
+
+    def on_event(ev):
+        if ev.kind == EventKind.CRASH and ev.node_id in fleet:
+            p = fleet[ev.node_id]
+            p.crash_after = p.served_chunks + 2
+        elif ev.kind == EventKind.STALL and ev.node_id in fleet:
+            p = fleet[ev.node_id]
+            p.stall_chunks = p.served_chunks
+            p.stall_s = 0.01
+        elif ev.kind == EventKind.ANNOUNCE:
+            # the announced joiner starts streaming NOW — the fetch
+            # overlaps the inner phases until its JOIN boundary
+            tr.snapshotter.flush()
+            started["fetcher"] = tr.begin_stream_join(
+                [p.addr for p in fleet.values()],
+                store_root=tmp_path / "joiner")
+
+    sim.subscribe(on_event)
+    # nodes 1 and 2 serve the cluster's chunk store
+    fleet[1] = ChunkPeer(tr.ckpt_store)
+    fleet[2] = ChunkPeer(tr.ckpt_store)
+    try:
+        hist = tr.run(5)
+    finally:
+        for p in fleet.values():
+            p.close()
+
+    assert "fetcher" in started, "ANNOUNCE never fired"
+    joins = [h["stream_join"] for h in hist if "stream_join" in h]
+    assert joins and joins[0]["admitted"], joins
+    st = joins[0]["stats"]
+    assert st["chunks_fetched"] > 0
+    # bit-exact: the streamed restore matches a direct (non-streamed)
+    # restore of the same step from the serving store
+    tree, meta, _ = started["fetcher"].result()
+    truth, truth_meta = delta_mod.restore(
+        tr.ckpt_store, tr.checkpoint_like(), step=st["step"])
+    assert meta == truth_meta
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(truth)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # training continued through the churn
+    assert all(np.isfinite(h["loss"]) for h in hist)

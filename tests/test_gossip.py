@@ -1,0 +1,191 @@
+"""ChunkGossip + streaming-recovery unit tests: digest/inventory wire
+ops, possession tracking and expiry, store pins vs gc, incremental
+ChainReplayer, and the snapshotter's persist callback."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpointing import (AsyncSnapshotter, ChainReplayer,
+                                 ChunkGossip, ChunkMissingError,
+                                 ChunkPeer, ChunkStore,
+                                 DeltaCheckpointer, DeltaConfig,
+                                 store_transport)
+from repro.checkpointing import delta as delta_mod
+
+from tests.fault_harness import FakeStore
+
+
+@pytest.fixture()
+def rng():
+    """Module-local generator: shadows the session-scoped conftest
+    fixture so these tests don't consume from (and reorder) the shared
+    stream that downstream suites' data depends on."""
+    return np.random.default_rng(4321)
+
+
+def _chain_store(root, rng, steps=3, n=20_000, chunk_bytes=1 << 12):
+    store = ChunkStore(root, chunk_bytes=chunk_bytes)
+    ck = DeltaCheckpointer(store, DeltaConfig(base_every=steps + 1))
+    w = rng.normal(size=(n,)).astype(np.float32)
+    trees = []
+    for t in range(steps):
+        tree = {"w": w.copy(), "step": np.int32(t)}
+        trees.append(tree)
+        ck.save(t, tree, extra_meta={"outer_step": t})
+        w = (w + rng.normal(size=w.shape).astype(np.float32)
+             * 1e-3).astype(np.float32)
+    return store, ck, trees
+
+
+# -- store possession surface -------------------------------------------------
+
+
+def test_inventory_digest_tracks_writes(tmp_path):
+    store = ChunkStore(tmp_path, chunk_bytes=64)
+    n0, sha0 = store.inventory_digest()
+    assert n0 == 0
+    store.put(b"x" * 100)
+    store.put(b"y" * 100)
+    n1, sha1 = store.inventory_digest()
+    assert n1 == 2 and sha1 != sha0
+    # digest is cached between writes: same version -> same answer
+    assert store.inventory_digest() == (n1, sha1)
+    assert sorted(store.inventory()) == store.inventory()
+
+
+def test_gc_respects_pins(tmp_path, rng):
+    store, ck, trees = _chain_store(tmp_path, rng, steps=3)
+    token = store.pin_chain(2)          # a peer is serving step 2
+    res = store.gc(keep_steps=[])       # retention wants everything gone
+    assert res["pinned"] > 0
+    # the pinned chain is still fully restorable
+    got, _ = delta_mod.restore(store, trees[-1], step=2)
+    np.testing.assert_array_equal(got["w"], ck.reference(trees[-1])["w"])
+    store.unpin(token)
+    res2 = store.gc(keep_steps=[])
+    assert res2["manifests"] > 0 and res2["pinned"] == 0
+    assert store.steps() == []
+
+
+def test_peer_serves_digest_inventory_have(tmp_path, rng):
+    store, _, _ = _chain_store(tmp_path, rng)
+    peer = ChunkPeer(store)
+    try:
+        from repro.checkpointing import PeerConn
+        c = PeerConn(peer.addr, 5.0)
+        d = c.request_json({"op": "digest"})
+        n, sha = store.inventory_digest()
+        assert d["n_chunks"] == n and d["sha"] == sha
+        assert d["latest"] == store.latest_step()
+        inv = c.request_json({"op": "inventory"})["ids"]
+        assert inv == store.inventory()
+        got = c.request_json({"op": "have",
+                              "ids": [inv[0], "00" * 32]})["have"]
+        assert got == [1, 0]
+        c.close()
+    finally:
+        peer.close()
+
+
+# -- gossip state machine -----------------------------------------------------
+
+
+def test_gossip_pulls_inventory_only_when_digest_changes():
+    s = FakeStore(["aa", "bb"], latest=1)
+    g = ChunkGossip([("n", 1)], transport=store_transport({("n", 1): s}))
+    g.poll_once()
+    assert g.possession[("n", 1)] == frozenset({"aa", "bb"})
+    pulls = g.stats["inventories"]
+    g.poll_once()                       # nothing changed: digest only
+    assert g.stats["inventories"] == pulls
+    s.add("cc")                         # sha moves -> one more pull
+    g.poll_once()
+    assert g.stats["inventories"] == pulls + 1
+    assert g.possession[("n", 1)] == frozenset({"aa", "bb", "cc"})
+
+
+def test_gossip_expiry_and_recovery():
+    s = FakeStore(["aa"], latest=0)
+    world = {("n", 1): s}
+    g = ChunkGossip([("n", 1)], expire_polls=2,
+                    transport=store_transport(world))
+    g.poll_once()
+    assert g.live_peers() == [("n", 1)]
+    world[("n", 1)] = None              # peer goes dark
+    g.poll_once()
+    assert g.live_peers() == [("n", 1)]   # one miss: not expired yet
+    g.poll_once()
+    assert g.live_peers() == []           # expired, possession dropped
+    assert g.possession == {}
+    world[("n", 1)] = s                 # peer comes back
+    g.poll_once()
+    assert g.live_peers() == [("n", 1)]
+    assert g.possession[("n", 1)] == frozenset({"aa"})
+
+
+def test_gossip_remove_peer_is_immediate():
+    s = FakeStore(["aa"])
+    g = ChunkGossip([("n", 1)], transport=store_transport({("n", 1): s}))
+    g.poll_once()
+    g.remove_peer(("n", 1))
+    assert g.possession == {} and g.peers() == []
+
+
+# -- incremental chain replay -------------------------------------------------
+
+
+def test_chain_replayer_streams_bit_exact(tmp_path, rng):
+    src, ck, trees = _chain_store(tmp_path / "src", rng, steps=4)
+    chain = [src.load_manifest(s) for s in src.steps()]
+    dst = ChunkStore(tmp_path / "dst", chunk_bytes=src.chunk_bytes)
+    rp = ChainReplayer(dst, chain)
+    with pytest.raises(ChunkMissingError):
+        rp.finish(trees[-1])            # nothing streamed yet
+    # chunks arrive in arbitrary (here: reversed) order
+    ids = src.inventory()
+    for d in reversed(ids):
+        dst.put_blob(d, src.get_blob(d))
+        rp.on_chunk(d)
+    assert rp.complete
+    assert rp.stats["replayed_on_stream"] == len(chain)
+    tree, meta = rp.finish(trees[-1])
+    np.testing.assert_array_equal(tree["w"], ck.reference(trees[-1])["w"])
+    assert meta["outer_step"] == len(trees) - 1
+    # identical to the non-streamed restore, bit for bit
+    for s in src.steps():
+        dst.write_manifest(src.load_manifest(s))
+    direct, _ = delta_mod.restore(dst, trees[-1])
+    np.testing.assert_array_equal(tree["w"], direct["w"])
+
+
+def test_chain_replayer_rejects_diverged_chain(tmp_path, rng):
+    src, ck, trees = _chain_store(tmp_path / "src", rng, steps=3)
+    chain = [src.load_manifest(s) for s in src.steps()]
+    # corrupt the recorded reconstruction sha of the last step
+    chain[-1] = dict(chain[-1])
+    chain[-1]["ref_sha"] = {k: "0" * 64
+                            for k in chain[-1]["ref_sha"]}
+    rp = ChainReplayer(src, chain)
+    with pytest.raises(delta_mod.DeltaChainError):
+        rp.advance()
+
+
+# -- snapshotter persist callback ---------------------------------------------
+
+
+def test_snapshotter_on_persist_fires_in_order():
+    seen = []
+    done = threading.Event()
+
+    def write(step, tree, meta):
+        return {"step": step}
+
+    snap = AsyncSnapshotter(write, on_persist=lambda s, m:
+                            (seen.append((s, m["step"])),
+                             done.set() if s == 3 else None))
+    for s in (1, 2, 3):
+        snap.submit(s, {"x": np.zeros(4)})
+    assert done.wait(5)
+    snap.close()
+    assert seen == [(1, 1), (2, 2), (3, 3)]

@@ -1,0 +1,104 @@
+"""Property tests (hypothesis, optional via tests/hypo_compat.py) for
+the streaming-recovery tentpole:
+
+  * gossip possession maps converge to ground truth under ARBITRARY
+    join/leave/stall schedules — whatever churn happened historically,
+    once the world holds still for the expiry window the map equals
+    exactly what the live peers hold;
+  * streamed delta-chain restores are bit-exact for ANY chunk arrival
+    order, chain length and codec — the incremental ChainReplayer and
+    the one-shot restore produce identical bytes.
+"""
+import tempfile
+
+import numpy as np
+
+from repro.checkpointing import (ChainReplayer, ChunkGossip,
+                                 ChunkStore, DeltaCheckpointer,
+                                 DeltaConfig, store_transport)
+from repro.checkpointing import delta as delta_mod
+
+from tests.fault_harness import FakeStore
+from tests.hypo_compat import given, settings, st
+
+PEERS = [("p", 0), ("p", 1), ("p", 2)]
+UNIVERSE = [f"{i:02x}" * 32 for i in range(12)]
+
+# one churn action: (peer index, op, chunk index)
+_action = st.tuples(st.integers(0, 2),
+                    st.sampled_from(["up", "down", "gain", "lose"]),
+                    st.integers(0, 11))
+_schedule = st.lists(st.lists(_action, max_size=4), max_size=8)
+
+
+@given(schedule=_schedule, expire=st.integers(1, 3))
+@settings(max_examples=30, deadline=None)
+def test_gossip_possession_converges_to_ground_truth(schedule, expire):
+    stores = {addr: FakeStore() for addr in PEERS}
+    world: dict = dict(stores)           # None = down / stalled
+    g = ChunkGossip(PEERS, expire_polls=expire,
+                    transport=store_transport(world))
+    for round_actions in schedule:
+        for pi, op, ci in round_actions:
+            addr = PEERS[pi]
+            if op == "up":
+                world[addr] = stores[addr]
+            elif op == "down":
+                world[addr] = None
+            elif op == "gain":
+                stores[addr].add(UNIVERSE[ci])
+            elif op == "lose":
+                stores[addr].drop(UNIVERSE[ci])
+        g.poll_once()   # gossip runs concurrently with the churn
+
+    # the world holds still: everything converges within the expiry
+    # window plus one clean round
+    for _ in range(expire + 1):
+        g.poll_once()
+    pos = g.possession
+    for addr in PEERS:
+        if world[addr] is None:
+            assert addr not in pos, \
+                f"dead peer {addr} still in the map"
+        else:
+            assert pos.get(addr) == frozenset(world[addr].ids), \
+                f"possession diverged for {addr}"
+
+
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 4),
+       codec=st.sampled_from(["int8", "int4"]),
+       order_seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_streamed_chain_restore_bit_exact_any_order(seed, steps,
+                                                    codec, order_seed):
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as td:
+        src = ChunkStore(f"{td}/src", chunk_bytes=1 << 10)
+        ck = DeltaCheckpointer(src, DeltaConfig(base_every=steps + 1,
+                                                codec=codec))
+        w = rng.normal(size=(4_000,)).astype(np.float32)
+        tree = None
+        for t in range(steps):
+            tree = {"w": w.copy(), "step": np.int32(t)}
+            ck.save(t, tree, extra_meta={"t": t})
+            w = (w + rng.normal(size=w.shape).astype(np.float32)
+                 * 1e-3).astype(np.float32)
+
+        chain = [src.load_manifest(s) for s in src.steps()]
+        dst = ChunkStore(f"{td}/dst", chunk_bytes=1 << 10)
+        rp = ChainReplayer(dst, chain)
+        ids = src.inventory()
+        order = np.random.default_rng(order_seed).permutation(len(ids))
+        for i in order:
+            dst.put_blob(ids[i], src.get_blob(ids[i]))
+            rp.on_chunk(ids[i])
+        assert rp.complete
+        streamed, meta = rp.finish(tree)
+        assert meta["t"] == steps - 1
+
+        # bit-exact vs the writer's reconstruction AND the one-shot
+        # restore from the source store
+        np.testing.assert_array_equal(streamed["w"],
+                                      ck.reference(tree)["w"])
+        direct, _ = delta_mod.restore(src, tree)
+        np.testing.assert_array_equal(streamed["w"], direct["w"])
