@@ -1,5 +1,18 @@
 """Outer-sync engine benchmark: fused/bucketed SyncEngine vs the seed's
-flatten -> quantize -> ring -> unflatten monolith.
+flatten -> quantize -> ring -> unflatten monolith, plus the two PR 5
+scenarios:
+
+* ``buckets`` — ``sync_buckets > 1`` changes the wire format (one
+  codebook sideband PER sub-bucket) but also gives each sub-bucket its
+  own codebook: quality-vs-sideband sweep at a realistic per-worker
+  element count, reporting per-worker wire bytes, sideband bytes and
+  cosine similarity of the int8-reduced result against the fp32 ring;
+* ``overlap`` — the overlapped outer sync end-to-end on the elastic
+  trainer: hidden-comm fraction of the ring under the chunked inner
+  phase (CommOverlapLedger logical time), delayed-application loss
+  trajectory vs the synchronous run, and a worker dying mid-overlap
+  recovering through the synchronous fallback bit-consistently
+  (two identical runs produce bit-identical anchors).
 
 The seed path (reproduced verbatim below as ``_seed_*``) re-flattened
 the anchor pytree once per worker inside a vmap (plus once more in the
@@ -11,10 +24,9 @@ quantizes the first hop straight off (anchor, theta), accumulates with
 the fused decode+add, and runs workers under ``vmap`` / hops under
 ``fori_loop``.
 
-Reports XLA:CPU wall time for a >=16M-element model, per-worker wire
-bytes, and the analytic count of full-model HBM round-trips on each
-path. ``python -m benchmarks.run sync --json`` additionally writes
-``BENCH_sync.json`` so future PRs have a perf trajectory.
+``python -m benchmarks.run sync --json`` writes ``BENCH_sync.json``
+(the perf trajectory future PRs diff against); ``--smoke`` shrinks the
+element counts and trainer runs for CI.
 """
 from __future__ import annotations
 
@@ -26,10 +38,14 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import diloco as dl
+from repro.core import ring_reduce as rr
 from repro.kernels import ops as qops
+from repro.kernels.ref import NUM_BUCKETS
 from repro.optim.nesterov import NesterovState
 
 N_ELEMS = 1 << 24           # 16.8M params (~64 MiB fp32)
+N_ELEMS_SMOKE = 1 << 18
+N_BUCKET_ELEMS = 1 << 22    # ring-only sweep: 4.2M params
 N_WORKERS = 4
 
 
@@ -172,9 +188,172 @@ def _time(fn, iters=2):
     return (time.perf_counter() - t0) / iters
 
 
-def _measure(seed: int = 0) -> dict:
+def _bucket_quality(seed: int, smoke: bool) -> list[dict]:
+    """Quality-vs-sideband sweep over ``sync_buckets`` (PR 1 follow-up):
+    per-bucket codebooks cost 4*256 B of sideband per sub-bucket per
+    chunk-hop but quantize each sub-chunk against its OWN histogram, so
+    heavy-tailed pseudo-gradients lose less to clipping."""
+    n = N_ELEMS_SMOKE if smoke else N_BUCKET_ELEMS
+    k = N_WORKERS
     rng = np.random.default_rng(seed)
-    params = _model(rng)
+    # heavy-tailed pseudo-gradients (95% small + 5% spikes), the same
+    # shape the recovery bench uses for outer updates
+    pgs = rng.standard_normal((k, n)).astype(np.float32) * 1e-3
+    pgs += ((rng.random((k, n)) < 0.05)
+            * rng.standard_normal((k, n))).astype(np.float32) * 0.03
+    pgs = jnp.asarray(pgs)
+    ref = rr.simulate_ring_all_reduce(
+        pgs, cfg=rr.RingConfig(quant="fp32"))[0]
+    ref = np.asarray(ref, np.float64)
+    out = []
+    for buckets in (1, 2, 4, 8):
+        got = rr.simulate_ring_all_reduce(
+            pgs, cfg=rr.RingConfig(quant="int8", buckets=buckets))[0]
+        got = np.asarray(got, np.float64)
+        cos = float(np.dot(ref, got)
+                    / max(np.linalg.norm(ref) * np.linalg.norm(got),
+                          1e-30))
+        wire = rr.ring_wire_bytes(n, k, "int8", buckets=buckets)
+        out.append({
+            "buckets": buckets,
+            "wire_bytes_per_worker": wire,
+            "sideband_bytes_per_worker":
+                2 * (k - 1) * 4 * NUM_BUCKETS * buckets,
+            "sideband_frac": 2 * (k - 1) * 4 * NUM_BUCKETS * buckets
+                / wire,
+            "cosine_vs_fp32": cos,
+            "rmse_vs_fp32": float(np.sqrt(np.mean((ref - got) ** 2))),
+        })
+    return out
+
+
+def _make_trainer(overlap: str, chunks: int, inner: int, events=(),
+                  workers: int = 3, max_workers: int = 4):
+    import jax as _jax
+
+    from repro.configs import CONFIGS
+    from repro.core.fault_tolerance import ClusterSimulator
+    from repro.data.pipeline import DataConfig
+    from repro.models.registry import get_model
+    from repro.train.loop import ElasticTrainer, TrainerConfig
+
+    cfg = CONFIGS["mamba2-130m"].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(_jax.random.PRNGKey(0))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, batch_per_worker=2,
+                      total_steps=inner * 32)
+    tcfg = TrainerConfig(
+        diloco=dl.DiLoCoConfig(inner_steps=inner, quant="int8",
+                               overlap=overlap),
+        inner_lr=3e-3, max_workers=max_workers, inner_chunks=chunks)
+    return ElasticTrainer(model, tcfg, dcfg, params,
+                          ClusterSimulator(list(range(workers)),
+                                           events=list(events)))
+
+
+def _overlap_scenario(seed: int, smoke: bool) -> dict:
+    """End-to-end overlapped outer sync on the elastic trainer (the
+    acceptance scenario): hops of the in-flight ring dispatched between
+    inner scan chunks, reduced pseudo-gradient applied one phase late,
+    a worker dying mid-overlap recovered via the synchronous fallback."""
+    from repro.core.fault_tolerance import EventKind, NodeEvent
+
+    # the sim rings over all max_workers slots: hops = 2*(slots-1).
+    # inner_chunks >= hops + 1 dispatches the whole ring before the
+    # boundary, so steady-state windows hide ~100% of the ring.
+    if smoke:
+        workers, slots, inner, chunks, steps = 2, 3, 5, 5, 4
+    else:
+        workers, slots, inner, chunks, steps = 3, 4, 8, 8, 8
+
+    def losses(tr):
+        return [h["loss"] for h in tr.history]
+
+    def anchor_eval(tr):
+        """Loss of the FINAL anchor on a fixed held-out batch: after
+        the end-of-run drain both schedules have applied the same
+        number of outer updates, so this is the apples-to-apples
+        trajectory endpoint (the per-phase loss traces are offset by
+        one boundary by construction)."""
+        import jax as _jax
+        # a held-out FUTURE batch from the same token pipeline (both
+        # trainers share data config + slot): same distribution, never
+        # trained on by either run
+        batch = tr._pipeline(0).batch_at(10_000)
+        anchor = _jax.tree.map(
+            lambda a: a.astype(jnp.float32), tr.outer.anchor)
+        loss, _ = tr.model.loss(anchor, batch)
+        return float(loss)
+
+    t0 = time.perf_counter()
+    tr_sync = _make_trainer("none", 1, inner, workers=workers,
+                            max_workers=slots)
+    tr_sync.run(steps)
+    t_sync = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    tr_del = _make_trainer("delayed", chunks, inner, workers=workers,
+                           max_workers=slots)
+    tr_del.run(steps)
+    t_del = time.perf_counter() - t0
+
+    led = tr_del.comm_ledger
+    # the last record is the end-of-run drain (no next phase to hide
+    # under); steady-state windows are the paper's operating regime
+    steady = led.records[:-1] if len(led.records) > 1 else led.records
+    s_total = sum(r["comm_total_s"] for r in steady)
+    s_hidden = sum(r["comm_hidden_s"] for r in steady)
+    ls, ld = losses(tr_sync), losses(tr_del)
+    # delayed applies each reduction one phase late: compare the
+    # trajectory shifted by one boundary, plus the anchor endpoints
+    # (same number of applied updates once the drain lands)
+    shifted = [abs(d - s) / max(abs(s), 1e-9)
+               for d, s in zip(ld[1:], ls[:-1])]
+    ev_sync, ev_del = anchor_eval(tr_sync), anchor_eval(tr_del)
+
+    # worker death mid-overlap: node 1 crashes at step 2 while the
+    # step-1 boundary's reduction is on the wire -> torn -> synchronous
+    # re-reduction over the survivors. Bit-consistency: two identical
+    # runs land bit-identical anchors.
+    ev = [NodeEvent(2, EventKind.CRASH, 1)]
+    tr_c1 = _make_trainer("delayed", chunks, inner, events=ev,
+                          workers=workers, max_workers=slots)
+    h_c1 = tr_c1.run(steps)
+    tr_c2 = _make_trainer("delayed", chunks, inner, events=ev,
+                          workers=workers, max_workers=slots)
+    tr_c2.run(steps)
+    fallbacks = [h["sync_fallback"] for h in h_c1
+                 if "sync_fallback" in h]
+    bit_consistent = bool(jnp.array_equal(tr_c1.outer.anchor_flat,
+                                          tr_c2.outer.anchor_flat))
+
+    return {
+        "workers": workers, "slots": slots, "inner_steps": inner,
+        "inner_chunks": chunks, "outer_steps": steps,
+        "ring_hops": 2 * (slots - 1),
+        "hidden_frac_steady": s_hidden / s_total if s_total else 1.0,
+        "hidden_frac_with_drain": led.hidden_fraction,
+        "comm_windows": len(led.records),
+        "loss_sync": ls, "loss_delayed": ld,
+        "loss_shifted_reldiff_max": max(shifted) if shifted else 0.0,
+        "final_loss_sync": ls[-1], "final_loss_delayed": ld[-1],
+        "anchor_eval_sync": ev_sync, "anchor_eval_delayed": ev_del,
+        "anchor_eval_reldiff": abs(ev_del - ev_sync)
+            / max(abs(ev_sync), 1e-9),
+        "loss_decreased": ld[-1] < ld[0],
+        "wall_s_sync": t_sync, "wall_s_delayed": t_del,
+        "death_mid_overlap": {
+            "fallbacks": fallbacks,
+            "recovered": bool(fallbacks
+                              and np.isfinite(h_c1[-1]["loss"])),
+            "bit_consistent": bit_consistent,
+        },
+    }
+
+
+def _measure(seed: int = 0, smoke: bool = False) -> dict:
+    rng = np.random.default_rng(seed)
+    params = _model(rng, N_ELEMS_SMOKE if smoke else N_ELEMS)
     stacked = _drift(params, N_WORKERS)
     cfg = dl.DiLoCoConfig(quant="int8", sync_buckets=2)
     st = dl.init_outer_state_sim(params, cfg, N_WORKERS)
@@ -207,10 +386,14 @@ def _measure(seed: int = 0) -> dict:
         "wire_bytes_per_worker": dl.sync_wire_bytes(
             params, N_WORKERS, cfg),
         "hbm_passes": hbm,
+        "buckets": _bucket_quality(seed, smoke),
+        "overlap": _overlap_scenario(seed, smoke),
     }
 
 
 def _rows(m: dict) -> list[str]:
+    ov = m["overlap"]
+    best = max(m["buckets"], key=lambda b: b["cosine_vs_fp32"])
     return [
         common.csv_row("sync/outer_sync_fused", m["fused_outer_sync_s"]
                        * 1e6, f"elems={m['elements']};k={m['workers']};"
@@ -220,13 +403,36 @@ def _rows(m: dict) -> list[str]:
                        f"speedup_fused={m['speedup']:.2f}x"),
         common.csv_row("sync/wire_bytes", 0.0,
                        f"per_worker_bytes={m['wire_bytes_per_worker']}"),
+        common.csv_row(
+            "sync/buckets_quality", 0.0,
+            ";".join(f"B={b['buckets']}:cos={b['cosine_vs_fp32']:.6f}"
+                     f":side={b['sideband_bytes_per_worker']}"
+                     for b in m["buckets"])
+            + f";best=B={best['buckets']}"),
+        common.csv_row(
+            "sync/overlap_hidden", 0.0,
+            f"hidden_steady={ov['hidden_frac_steady']:.2f};"
+            f"hidden_with_drain={ov['hidden_frac_with_drain']:.2f};"
+            f"hops={ov['ring_hops']};chunks={ov['inner_chunks']}"),
+        common.csv_row(
+            "sync/overlap_delayed_loss", 0.0,
+            f"anchor_eval_sync={ov['anchor_eval_sync']:.4f};"
+            f"anchor_eval_delayed={ov['anchor_eval_delayed']:.4f};"
+            f"reldiff={ov['anchor_eval_reldiff']:.3f};"
+            f"shifted_traj_reldiff_max="
+            f"{ov['loss_shifted_reldiff_max']:.3f}"),
+        common.csv_row(
+            "sync/overlap_death_fallback", 0.0,
+            f"recovered={ov['death_mid_overlap']['recovered']};"
+            f"bit_consistent="
+            f"{ov['death_mid_overlap']['bit_consistent']}"),
     ]
 
 
-def run(seed: int = 0) -> list[str]:
-    return _rows(_measure(seed))
+def run(seed: int = 0, smoke: bool = False) -> list[str]:
+    return _rows(_measure(seed, smoke=smoke))
 
 
-def run_json(seed: int = 0):
-    m = _measure(seed)
+def run_json(seed: int = 0, smoke: bool = False):
+    m = _measure(seed, smoke=smoke)
     return _rows(m), {"sync": m}

@@ -15,8 +15,11 @@ to its ``ChunkStore``. ``swarm_fetch``:
      each range is served by exactly one peer (disjoint striping).
      With a gossip ``possession`` map, a range is only ever handed to
      a peer that actually HOLDS all its chunks (peers are partial
-     replicas, not full mirrors); without one, the legacy
-     every-peer-has-all assumption applies;
+     replicas, not full mirrors) and ranges are scheduled
+     RAREST-FIRST (fewest holders lead the queue) so scarce chunks
+     don't wait behind well-replicated ones and overlap-joins spread
+     across the swarm; without one, the legacy every-peer-has-all
+     assumption applies in manifest order;
   5. verifies every chunk by its content address on arrival;
   6. when a peer dies mid-transfer (connection drop, bad bytes,
      missing chunk), re-queues that peer's unfinished range so the
@@ -237,6 +240,35 @@ def _manifest_chain_any(holders: list[PeerConn], step: int,
                           f"for step {step}: {last}", failures)
 
 
+def _schedule_ranges(ids: list[str], candidates, range_chunks: int,
+                     possession_aware: bool) -> list[list[str]]:
+    """Split the missing chunk ids into download ranges.
+
+    Without a possession map: plain manifest-order ranges (legacy
+    full-replica assumption). With one: group ids by holder set so
+    ranges stay candidate-homogeneous (a partial holder gets ranges
+    made ONLY of chunks it has), then schedule RAREST-FIRST — groups
+    with the fewest holders lead the queue. Fetching scarce chunks
+    first means (a) the single holder of a rare range starts on it
+    immediately instead of burning its window on chunks everyone has,
+    and (b) the well-replicated remainder is left for the drain phase,
+    where every peer qualifies — so concurrent overlap-joins don't all
+    pile onto the same (well-known) peer for the scarce tail. Manifest
+    order is preserved inside each group (the chain replayer tolerates
+    any order; in-order keeps its incremental replay warm).
+    """
+    if not possession_aware:
+        return [ids[i:i + range_chunks]
+                for i in range(0, len(ids), range_chunks)]
+    groups: dict[frozenset, list[str]] = {}
+    for d in ids:
+        groups.setdefault(frozenset(candidates([d])), []).append(d)
+    rarest = sorted(groups.items(), key=lambda kv: len(kv[0]))
+    return [grp[i:i + range_chunks]
+            for _, grp in rarest
+            for i in range(0, len(grp), range_chunks)]
+
+
 class _WorkQueue:
     """Shared range queue with per-range candidate tracking.
 
@@ -267,22 +299,28 @@ class _WorkQueue:
 
     def pop(self, addr: Addr):
         """Next range ``addr`` can serve, or None when the queue has
-        fully drained (or this peer can serve nothing that's left)."""
+        fully drained (or this peer can serve nothing that's left).
+        The scan preserves queue order (no rotation): the scheduler's
+        rarest-first ordering survives peers skipping ranges they
+        don't hold."""
         with self.cv:
             while True:
                 if self.aborted:
                     return None
-                for _ in range(len(self.pending)):
-                    batch, cand = self.pending.popleft()
+                i = 0
+                while i < len(self.pending):
+                    batch, cand = self.pending[i]
                     cand -= self.dead
                     if not cand:
+                        del self.pending[i]
                         self.unservable.append(batch)
                         self.cv.notify_all()
                         continue
                     if addr in cand:
+                        del self.pending[i]
                         self.inflight += 1
                         return batch
-                    self.pending.append((batch, cand))
+                    i += 1
                 if addr in self.dead or self.unservable:
                     return None
                 if not self.pending and self.inflight == 0:
@@ -306,7 +344,9 @@ class _WorkQueue:
             if batch:
                 cand = candidates - self.dead
                 if cand:
-                    self.pending.append((batch, cand))
+                    # front of the queue: losing a holder made this
+                    # range RARER, so rarest-first puts it next
+                    self.pending.appendleft((batch, cand))
                 else:
                     self.unservable.append(batch)
             self.cv.notify_all()
@@ -392,21 +432,8 @@ def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
                     out.add(c.addr)
             return out
 
-        if possession is None:
-            ranges = [ids[i:i + range_chunks]
-                      for i in range(0, len(ids), range_chunks)]
-        else:
-            # group ids by holder set (manifest order preserved inside
-            # each group) so ranges stay candidate-homogeneous: a
-            # partial holder gets ranges made ONLY of chunks it has,
-            # instead of never qualifying for mixed ranges
-            groups: dict[frozenset, list[str]] = {}
-            for d in ids:
-                groups.setdefault(frozenset(candidates([d])),
-                                  []).append(d)
-            ranges = [grp[i:i + range_chunks]
-                      for grp in groups.values()
-                      for i in range(0, len(grp), range_chunks)]
+        ranges = _schedule_ranges(ids, candidates, range_chunks,
+                                  possession is not None)
 
         queue = _WorkQueue(ranges, candidates)
         lock = threading.Lock()

@@ -13,7 +13,17 @@ Deterministic (logical-clock) re-implementation of PRIME's mechanisms:
   * **ClusterSimulator** — drives a schedule of join/leave/crash/
     straggler events against an elastic training loop; used by the
     resilience benchmark (paper Fig. 5: 4 -> 14 nodes) and the
-    integration tests.
+    integration tests. With the overlapped outer sync (PR 5) it also
+    tracks the sync IN FLIGHT across the phase boundary
+    (``note_sync_begin``): a participant dying while its reduction is
+    on the wire surfaces as ``plan["sync_torn"]`` so the trainer falls
+    back to a synchronous re-reduction instead of applying a torn
+    partial accumulator.
+  * **CommOverlapLedger** — logical-time accounting of ring-hop
+    transfers hidden under chunked inner compute (the paper's 83–96%
+    compute-utilization claim): hops queue on a modeled WAN link and
+    drain while compute windows advance the clock; whatever is still
+    on the wire at ``finish_sync`` is exposed stall time.
 
 Nothing here touches wall-clock time: time is an explicit float so tests
 are deterministic.
@@ -160,6 +170,7 @@ class ClusterSimulator:
         # moment its CRASH event lands (so a swarm fetch in flight
         # loses that peer mid-transfer)
         self._subscribers: list[Callable[[NodeEvent], None]] = []
+        self._inflight_sync: dict | None = None
         for nid in initial_nodes:
             self.hb.register(nid, self.now)
             self.hb.mark_live(nid)
@@ -168,10 +179,33 @@ class ClusterSimulator:
         """Call ``fn(event)`` whenever an event is applied."""
         self._subscribers.append(fn)
 
+    # -- in-flight overlapped sync -------------------------------------------
+
+    def note_sync_begin(self, outer_step: int,
+                        participants: Iterable[int]) -> None:
+        """The trainer kicked off an overlapped outer sync at this
+        boundary; its ring hops ride under the NEXT inner phase. Until
+        ``note_sync_end``, any participant leaving the cluster tears
+        the in-flight reduction (reported via ``plan['sync_torn']``)."""
+        self._inflight_sync = {"outer_step": outer_step,
+                               "nodes": frozenset(participants)}
+
+    def note_sync_end(self) -> None:
+        """The in-flight sync was applied (or abandoned)."""
+        self._inflight_sync = None
+
+    @property
+    def inflight_sync(self) -> dict | None:
+        return self._inflight_sync
+
     def begin_outer_step(self, outer_step: int) -> dict:
         """Apply events for this step; return the sync plan:
         {'live': [...], 'stragglers': [...], 'joined': [...],
-        'left': [...], 'announced': [...]}."""
+        'left': [...], 'announced': [...], 'sync_torn': [...]}.
+
+        ``sync_torn`` lists in-flight-sync participants that left the
+        cluster at this boundary (crash eviction or graceful leave
+        while their pseudo-gradient reduction was still on the wire)."""
         joined, left, stragglers, announced = [], [], [], []
         for ev in self.events:
             if ev.outer_step != outer_step:
@@ -209,7 +243,89 @@ class ClusterSimulator:
 
         live = self.hb.live_ids()
         self.history.append((outer_step, tuple(live)))
+        torn: list[int] = []
+        if self._inflight_sync is not None:
+            torn = sorted(self._inflight_sync["nodes"] & set(left))
         return {"live": live,
                 "stragglers": [s for s in stragglers if s in live],
                 "joined": joined, "left": sorted(set(left)),
-                "announced": announced}
+                "announced": announced, "sync_torn": torn}
+
+
+# -- logical-time overlap accounting ------------------------------------------
+
+
+class CommOverlapLedger:
+    """Models ring-hop transfers on a WAN link running concurrently
+    with (chunked) inner compute, in the simulator's logical time.
+
+    The wire is a serial resource: a dispatched hop starts when the
+    link frees up (``max(clock, busy)``) and occupies it for the hop's
+    transfer time. Compute windows advance ``clock`` without touching
+    the link, so transfers in flight during compute are HIDDEN; at
+    ``finish_sync`` whatever the link still owes past the clock is
+    EXPOSED stall time (the cluster waits at the boundary). This is the
+    quantity the paper's 83–96% compute-utilization figures hide.
+    """
+
+    def __init__(self):
+        self.clock = 0.0            # logical time consumed by compute
+        self.busy_until = 0.0       # when the wire frees up
+        self.records: list[dict] = []
+        self._cur: dict | None = None
+
+    def begin_sync(self, hop_seconds: float) -> None:
+        """A new outer sync's comm window opens (at the boundary)."""
+        assert self._cur is None, "previous sync window still open"
+        self._cur = {"hop_s": float(hop_seconds), "hops": 0,
+                     "t_open": self.clock}
+
+    def dispatch_hop(self, n: int = 1) -> None:
+        """``n`` ring hops handed to the wire at the current clock."""
+        assert self._cur is not None, "no sync window open"
+        for _ in range(n):
+            self.busy_until = max(self.busy_until, self.clock) \
+                + self._cur["hop_s"]
+            self._cur["hops"] += 1
+
+    def compute(self, seconds: float) -> None:
+        """A compute window (inner-phase scan chunk) ran."""
+        self.clock += float(seconds)
+
+    def finish_sync(self) -> dict:
+        """Close the window: the wire's remaining debt is exposed."""
+        assert self._cur is not None, "no sync window open"
+        cur, self._cur = self._cur, None
+        total = cur["hops"] * cur["hop_s"]
+        exposed = max(0.0, self.busy_until - self.clock)
+        exposed = min(exposed, total)   # debt older than this window
+        #                                 belongs to earlier records
+        self.clock = max(self.clock, self.busy_until)
+        rec = {"comm_total_s": total, "comm_exposed_s": exposed,
+               "comm_hidden_s": total - exposed,
+               "hidden_frac": (total - exposed) / total if total else 1.0,
+               "torn": False}
+        self.records.append(rec)
+        return rec
+
+    def tear_sync(self, resync_hops: int) -> dict:
+        """The in-flight sync was torn by a death: its partial comm is
+        discarded and the synchronous re-reduction of ``resync_hops``
+        hops runs fully exposed at the boundary."""
+        assert self._cur is not None, "no sync window open"
+        cur, self._cur = self._cur, None
+        total = resync_hops * cur["hop_s"]
+        self.busy_until = max(self.busy_until, self.clock)
+        self.clock += total
+        self.busy_until = self.clock
+        rec = {"comm_total_s": total, "comm_exposed_s": total,
+               "comm_hidden_s": 0.0, "hidden_frac": 0.0, "torn": True}
+        self.records.append(rec)
+        return rec
+
+    @property
+    def hidden_fraction(self) -> float:
+        """Aggregate hidden fraction over every closed sync window."""
+        total = sum(r["comm_total_s"] for r in self.records)
+        hidden = sum(r["comm_hidden_s"] for r in self.records)
+        return hidden / total if total else 1.0

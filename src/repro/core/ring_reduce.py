@@ -235,23 +235,35 @@ def ring_all_reduce(x: jnp.ndarray, axis_name: str,
 # -- single-process mirror (stacked workers) ---------------------------------
 
 
+def _row_deq(cfg: RingConfig, bsize: int):
+    """Row-wise dequant fn for (k, bsize) stacked payloads (static per
+    (cfg, bsize) so the all-gather hops can rebuild it without carrying
+    closures through jit boundaries)."""
+    if cfg.quant == "fp32":
+        return lambda p: p[0]
+    if cfg.quant == "int4":
+        from repro.core import compression
+        return lambda p: jax.vmap(
+            lambda pk, bk: compression.dequantize4(
+                compression.Quantized4(pk, bk), (bsize,)))(*p)
+    return lambda p: jax.vmap(
+        lambda c, bk: qops.dequantize(qops.Quantized(c, bk),
+                                      impl=cfg.impl))(*p)
+
+
 def _quant_rows(vals: jnp.ndarray, cfg: RingConfig):
     """Row-wise transmit quantization of (k, bsize) stacked buckets ->
     (payload tuple of stacked arrays, row-wise dequant fn). vmap over
     workers is bit-identical to per-row calls on XLA:CPU (tested)."""
     bsize = vals.shape[-1]
     if cfg.quant == "fp32":
-        return (vals,), lambda p: p[0]
+        return (vals,), _row_deq(cfg, bsize)
     if cfg.quant == "int4":
         from repro.core import compression
         q = jax.vmap(compression.quantize4)(vals)
-        return tuple(q), lambda p: jax.vmap(
-            lambda pk, bk: compression.dequantize4(
-                compression.Quantized4(pk, bk), (bsize,)))(*p)
+        return tuple(q), _row_deq(cfg, bsize)
     q = jax.vmap(lambda v: qops.quantize(v, impl=cfg.impl))(vals)
-    return tuple(q), lambda p: jax.vmap(
-        lambda c, bk: qops.dequantize(qops.Quantized(c, bk),
-                                      impl=cfg.impl))(*p)
+    return tuple(q), _row_deq(cfg, bsize)
 
 
 def _rx_add_rows(payload, deq, acc_vals: jnp.ndarray, cfg: RingConfig):
@@ -274,6 +286,77 @@ def _set_bucket_rows(accs, idxs, b: int, vals, chunk: int, bsize: int):
 def _roll1(payload):
     """Position p receives from position p-1."""
     return tuple(jnp.roll(p, 1, axis=0) for p in payload)
+
+
+# -- hop bodies (shared by the one-shot simulator and RingSyncOp) ------------
+
+
+def _rs_hop_rows(s, accs, k: int, chunk: int, bsize: int, nb: int,
+                 cfg: RingConfig, fused_operands=None):
+    """One reduce-scatter hop across all ring positions/buckets.
+    ``fused_operands=(a_flat, t_pos, w_pos)`` routes the transmit
+    through the fused pseudo-gradient quantizer (hop 0 only)."""
+    positions = jnp.arange(k)
+    send_idx = (positions - s) % k
+    recv_idx = (positions - s - 1) % k
+    staged = []
+    for b in range(nb):
+        if fused_operands is not None:
+            a_flat, t_pos, w_pos = fused_operands
+            starts = send_idx * chunk + b * bsize
+            a_rows = jax.vmap(lambda i: jax.lax.dynamic_slice_in_dim(
+                a_flat, i, bsize, axis=-1))(starts)
+            t_rows = jax.vmap(
+                lambda t, i: jax.lax.dynamic_slice_in_dim(
+                    t, i, bsize, axis=-1))(t_pos, starts)
+            q = jax.vmap(lambda a, t, w: qops.quantize_pseudograd(
+                a, t, scale=w, impl=cfg.impl))(a_rows, t_rows, w_pos)
+            staged.append((tuple(q), _row_deq(cfg, bsize)))
+        else:
+            staged.append(_quant_rows(
+                _get_bucket_rows(accs, send_idx, b, chunk, bsize), cfg))
+    for b, (payload, deq) in enumerate(staged):
+        payload = _roll1(payload)
+        acc_vals = _get_bucket_rows(accs, recv_idx, b, chunk, bsize)
+        accs = _set_bucket_rows(
+            accs, recv_idx, b,
+            _rx_add_rows(payload, deq, acc_vals, cfg),
+            chunk, bsize)
+    return accs
+
+
+def _ag_init_rows(accs, k: int, chunk: int, bsize: int, nb: int,
+                  cfg: RingConfig):
+    """All-gather prologue: every owner quantizes its reduced chunk ONCE
+    (per bucket); the codes are then forwarded verbatim so every worker
+    decodes identical bytes. Returns (accs, per-bucket payloads)."""
+    positions = jnp.arange(k)
+    own_idx = (positions + 1) % k
+    payloads = []
+    for b in range(nb):
+        vals = _get_bucket_rows(accs, own_idx, b, chunk, bsize)
+        payload, deq = _quant_rows(vals, cfg)
+        accs = _set_bucket_rows(accs, own_idx, b, deq(payload),
+                                chunk, bsize)
+        payloads.append(payload)
+    return accs, tuple(payloads)
+
+
+def _ag_hop_rows(s, accs, payloads, k: int, chunk: int, bsize: int,
+                 nb: int, cfg: RingConfig):
+    """One all-gather hop: shift every bucket's forwarded codes one
+    position and decode in place. Buckets write disjoint regions, so
+    hop-major order here equals the bucket-major order bit-for-bit."""
+    positions = jnp.arange(k)
+    recv_idx = (positions - s) % k
+    deq = _row_deq(cfg, bsize)
+    new_payloads = []
+    for b in range(nb):
+        payload = _roll1(payloads[b])
+        accs = _set_bucket_rows(accs, recv_idx, b, deq(payload),
+                                chunk, bsize)
+        new_payloads.append(payload)
+    return accs, tuple(new_payloads)
 
 
 def simulate_ring_all_reduce(xs: jnp.ndarray,
@@ -311,7 +394,6 @@ def simulate_ring_all_reduce(xs: jnp.ndarray,
     w_pos = weights[jnp.asarray(perm)]
     accs = xs[perm] * w_pos[:, None]
     accs, chunk, bsize = _pad_to_chunks(accs, k, nb)
-    positions = jnp.arange(k)
 
     use_fused_tx = (fused_src is not None and cfg.fused
                     and cfg.quant == "int8")
@@ -322,67 +404,180 @@ def simulate_ring_all_reduce(xs: jnp.ndarray,
         t_pos = jnp.pad(thetas.astype(jnp.float32)[perm],
                         [(0, 0), (0, pad)])
 
-    def rs_hop(s, accs, fused: bool):
-        """One reduce-scatter hop across all positions/buckets."""
-        send_idx = (positions - s) % k
-        recv_idx = (positions - s - 1) % k
-        staged = []
-        for b in range(nb):
-            if fused:
-                starts = send_idx * chunk + b * bsize
-                a_rows = jax.vmap(lambda i: jax.lax.dynamic_slice_in_dim(
-                    a_flat, i, bsize, axis=-1))(starts)
-                t_rows = jax.vmap(
-                    lambda t, i: jax.lax.dynamic_slice_in_dim(
-                        t, i, bsize, axis=-1))(t_pos, starts)
-                q = jax.vmap(lambda a, t, w: qops.quantize_pseudograd(
-                    a, t, scale=w, impl=cfg.impl))(a_rows, t_rows, w_pos)
-                deq = lambda p: jax.vmap(
-                    lambda c, bk: qops.dequantize(
-                        qops.Quantized(c, bk), impl=cfg.impl))(*p)
-                staged.append((tuple(q), deq))
-            else:
-                staged.append(_quant_rows(
-                    _get_bucket_rows(accs, send_idx, b, chunk, bsize),
-                    cfg))
-        for b, (payload, deq) in enumerate(staged):
-            payload = _roll1(payload)
-            acc_vals = _get_bucket_rows(accs, recv_idx, b, chunk, bsize)
-            accs = _set_bucket_rows(
-                accs, recv_idx, b,
-                _rx_add_rows(payload, deq, acc_vals, cfg),
-                chunk, bsize)
-        return accs
-
     # Phase 1: reduce-scatter. Hop 0 is peeled so the fused
     # pseudo-gradient transmit (different payload source) stays out of
     # the uniform fori_loop body.
-    accs = rs_hop(0, accs, use_fused_tx)
+    fused_ops = (a_flat, t_pos, w_pos) if use_fused_tx else None
+    accs = _rs_hop_rows(0, accs, k, chunk, bsize, nb, cfg, fused_ops)
     if k > 2:
         accs = jax.lax.fori_loop(
-            1, k - 1, lambda s, a: rs_hop(s, a, False), accs)
+            1, k - 1,
+            lambda s, a: _rs_hop_rows(s, a, k, chunk, bsize, nb, cfg),
+            accs)
 
-    # Phase 2: all-gather with forwarded codes, one fori_loop per bucket
-    # (payload arrays ride the loop carry; the row deq fn is static).
-    own_idx = (positions + 1) % k
-    for b in range(nb):
-        vals = _get_bucket_rows(accs, own_idx, b, chunk, bsize)
-        payload, deq = _quant_rows(vals, cfg)
-        accs = _set_bucket_rows(accs, own_idx, b, deq(payload),
-                                chunk, bsize)
-
-        def ag_hop(s, carry, b=b, deq=deq):
-            accs, payload = carry
-            payload = _roll1(payload)
-            recv_idx = (positions - s) % k
-            accs = _set_bucket_rows(accs, recv_idx, b, deq(payload),
-                                    chunk, bsize)
-            return accs, payload
-
-        accs, _ = jax.lax.fori_loop(0, k - 1, ag_hop, (accs, payload))
+    # Phase 2: all-gather with forwarded codes; owners quantize once,
+    # then one fori_loop over hops with every bucket's payload riding
+    # the carry (hop-major == the per-bucket order bit-for-bit: buckets
+    # write disjoint regions).
+    accs, payloads = _ag_init_rows(accs, k, chunk, bsize, nb, cfg)
+    accs, _ = jax.lax.fori_loop(
+        0, k - 1,
+        lambda s, c: _ag_hop_rows(s, c[0], c[1], k, chunk, bsize, nb,
+                                  cfg),
+        (accs, payloads))
 
     out_pos = accs[..., :orig_size]
     if cfg.average:
         out_pos = out_pos / jnp.maximum(total_w, 1e-20)
     # out[worker w] lives at ring position inv[w]
     return out_pos[jnp.asarray(inv)]
+
+
+# -- hop-steppable simulation (overlapped outer sync) ------------------------
+
+
+_HOP_JIT: dict = {}
+
+
+def _hop_jit(kind: str, k: int, chunk: int, bsize: int, nb: int,
+             cfg: RingConfig):
+    """Per-hop jitted wrappers, cached on the static ring geometry so
+    repeated outer steps reuse compilations. ``s`` rides as a traced
+    scalar: one compilation serves every hop index."""
+    key = (kind, k, chunk, bsize, nb, cfg)
+    fn = _HOP_JIT.get(key)
+    if fn is None:
+        if kind == "rs":
+            fn = jax.jit(lambda s, a: _rs_hop_rows(
+                s, a, k, chunk, bsize, nb, cfg))
+        elif kind == "rs_fused":
+            fn = jax.jit(lambda s, a, af, tp, wp: _rs_hop_rows(
+                s, a, k, chunk, bsize, nb, cfg, (af, tp, wp)))
+        elif kind == "ag_init":
+            fn = jax.jit(lambda a: _ag_init_rows(
+                a, k, chunk, bsize, nb, cfg))
+        elif kind == "ag":
+            fn = jax.jit(lambda s, a, p: _ag_hop_rows(
+                s, a, p, k, chunk, bsize, nb, cfg))
+        else:
+            raise ValueError(kind)
+        _HOP_JIT[key] = fn
+    return fn
+
+
+class RingSyncOp:
+    """Host-steppable mirror of :func:`simulate_ring_all_reduce`.
+
+    The same reduce-scatter / all-gather hop math, split at WIRE-HOP
+    granularity so a training loop can dispatch one hop between each
+    inner-phase scan chunk and hide the ring under compute (the paper's
+    overlapped outer sync). ``step()`` dispatches the next hop (async
+    on device), ``finish()`` drains the remainder and returns the
+    reduced (k, D) result — bit-identical to the one-shot simulator,
+    which the tests assert.
+
+    The op RETAINS its inputs (``xs``, ``weights``, ``fused_src``): a
+    worker dying mid-overlap leaves the accumulator torn (it already
+    absorbed hops that assumed the dead worker would keep forwarding),
+    so recovery must re-reduce from the retained pseudo-gradients over
+    the survivors — :meth:`restart` — never apply the partial state.
+    """
+
+    def __init__(self, xs: jnp.ndarray,
+                 ring_order: Sequence[int] | None = None,
+                 cfg: RingConfig = RingConfig(),
+                 weights: jnp.ndarray | None = None,
+                 fused_src=None):
+        k, orig_size = xs.shape
+        self.k, self.orig_size = k, orig_size
+        self.cfg = cfg
+        self.xs = xs.astype(jnp.float32)
+        self.weights = (jnp.ones((k,), jnp.float32) if weights is None
+                        else weights)
+        self.ring_order = (tuple(ring_order) if ring_order is not None
+                           else tuple(range(k)))
+        self.fused_src = fused_src
+        self.hops_done = 0
+        self._out: jnp.ndarray | None = None
+        self._total_w = jnp.sum(self.weights)
+        if k == 1:
+            self.hops_total = 0
+            out = self.xs * self.weights[:, None] / jnp.maximum(
+                self._total_w, 1e-20) if cfg.average else self.xs
+            self._out = out
+            return
+
+        assert sorted(self.ring_order) == list(range(k)), \
+            "ring order must be a permutation"
+        perm = np.asarray(self.ring_order)
+        self._inv = jnp.asarray(np.argsort(perm))
+        nb = max(1, cfg.buckets)
+        w_pos = self.weights[jnp.asarray(perm)]
+        accs = self.xs[perm] * w_pos[:, None]
+        accs, chunk, bsize = _pad_to_chunks(accs, k, nb)
+        self._accs = accs
+        self._chunk, self._bsize, self._nb = chunk, bsize, nb
+        self._w_pos = w_pos
+        self._fused0 = (fused_src is not None and cfg.fused
+                        and cfg.quant == "int8")
+        if self._fused0:
+            a_flat, thetas = fused_src
+            pad = accs.shape[-1] - orig_size
+            self._a_flat = jnp.pad(a_flat.astype(jnp.float32), (0, pad))
+            self._t_pos = jnp.pad(thetas.astype(jnp.float32)[perm],
+                                  [(0, 0), (0, pad)])
+        self._payloads = None
+        # wire hops: (k-1) reduce-scatter + (k-1) all-gather forwards
+        # (the owner-quantize prologue is compute-only and rides with
+        # the first all-gather hop)
+        self.hops_total = 2 * (k - 1)
+
+    @property
+    def pending(self) -> bool:
+        return self.hops_done < self.hops_total
+
+    def step(self) -> bool:
+        """Dispatch ONE wire hop (async device work); returns True iff
+        a hop was dispatched."""
+        if self._out is not None or not self.pending:
+            return False
+        i, k = self.hops_done, self.k
+        args = (self.k, self._chunk, self._bsize, self._nb, self.cfg)
+        if i < k - 1:
+            if i == 0 and self._fused0:
+                self._accs = _hop_jit("rs_fused", *args)(
+                    jnp.int32(0), self._accs, self._a_flat,
+                    self._t_pos, self._w_pos)
+            else:
+                self._accs = _hop_jit("rs", *args)(
+                    jnp.int32(i), self._accs)
+        else:
+            s = i - (k - 1)
+            if s == 0:
+                self._accs, self._payloads = _hop_jit(
+                    "ag_init", *args)(self._accs)
+            self._accs, self._payloads = _hop_jit("ag", *args)(
+                jnp.int32(s), self._accs, self._payloads)
+        self.hops_done += 1
+        return True
+
+    def finish(self) -> jnp.ndarray:
+        """Drain any remaining hops and return the (k, D) reduced
+        result (identical rows across workers)."""
+        if self._out is None:
+            while self.pending:
+                self.step()
+            out_pos = self._accs[..., :self.orig_size]
+            if self.cfg.average:
+                out_pos = out_pos / jnp.maximum(self._total_w, 1e-20)
+            self._out = out_pos[self._inv]
+            self._accs = self._payloads = None  # free the in-flight state
+        return self._out
+
+    def restart(self, weights: jnp.ndarray) -> jnp.ndarray:
+        """Torn-reduction fallback: synchronously re-reduce the RETAINED
+        inputs under ``weights`` (dead workers zeroed), discarding the
+        partial accumulator. Returns the (k, D) reduced result."""
+        return simulate_ring_all_reduce(
+            self.xs, ring_order=self.ring_order, cfg=self.cfg,
+            weights=weights, fused_src=self.fused_src)

@@ -82,3 +82,47 @@ class SyncEngine:
             out.append(vec[self.offsets[i]:self.offsets[i] + size]
                        .reshape(shape).astype(dtypes[i]))
         return jax.tree.unflatten(self.treedef, out)
+
+
+# -- per-shard flat view ------------------------------------------------------
+
+
+def shard_flat_size(shapes, specs, axis_sizes: dict) -> int:
+    """Per-DEVICE flat length of the concat of local parameter shards.
+
+    Inside a ``shard_map`` region manual over the whole mesh, each
+    device sees its leaves as LOCAL shards; flattening those yields a
+    per-shard flat anchor whose length is the sum of local shard sizes
+    — ``prod(shape) / prod(mesh axes named in the leaf's spec)``. This
+    is the static metadata the sharded-plan outer sync uses to size the
+    buffer it threads through the region (the per-shard analogue of
+    ``OuterState.anchor_flat``).
+
+    ``shapes``/``specs`` are matching pytrees of leaf shapes (tuples or
+    ShapeDtypeStructs) and PartitionSpecs; ``axis_sizes`` maps mesh
+    axis name -> size.
+    """
+    import jax.sharding as _js
+
+    def leaf_local(shape, spec) -> int:
+        shape = tuple(getattr(shape, "shape", shape))
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        div = 1
+        for entry in tuple(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for a in names:
+                div *= int(axis_sizes.get(a, 1))
+        assert size % div == 0, \
+            f"shard spec {spec} does not divide leaf {shape}"
+        return size // div
+
+    leaves_s = jax.tree.leaves(
+        shapes, is_leaf=lambda x: isinstance(x, (tuple, list))
+        or hasattr(x, "shape"))
+    leaves_p = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, _js.PartitionSpec))
+    assert len(leaves_s) == len(leaves_p), \
+        "shapes/specs trees do not match"
+    return sum(leaf_local(s, p) for s, p in zip(leaves_s, leaves_p))

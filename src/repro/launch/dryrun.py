@@ -165,14 +165,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                         jnp.float32),
                     jax.ShapeDtypeStruct((), jnp.int32))
                 if outer_specs.anchor_flat is not None:
-                    # replicated-param plans thread the persistent
-                    # flat fp32 anchor through the sync step
-                    nflat = 0
-                    for s in jax.tree.leaves(pshapes):
-                        n = 1
-                        for d in s.shape:
-                            n *= d
-                        nflat += n
+                    # every DiLoCo plan threads the persistent flat
+                    # fp32 anchor through the sync step: replicated
+                    # plans the full flatten, sharded plans the
+                    # per-shard concat view (device-major, opaque)
+                    nflat = step_lib.flat_anchor_len(model, plan,
+                                                     mesh)
                     outer_s = outer_s._replace(
                         anchor_flat=jax.ShapeDtypeStruct(
                             (nflat,), jnp.float32))

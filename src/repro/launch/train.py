@@ -31,6 +31,21 @@ def main():
     ap.add_argument("--batch-per-worker", type=int, default=4)
     ap.add_argument("--quant", default="int8",
                     choices=["int8", "int4", "fp32"])
+    ap.add_argument("--overlap", default="none",
+                    choices=["none", "delayed"],
+                    help="none: outer sync is a barrier between inner "
+                         "phases; delayed: the quantized ring runs "
+                         "under the next inner phase (hops dispatched "
+                         "between scan chunks) and the reduced pseudo-"
+                         "gradient is applied one phase late (paper "
+                         "§2.2 overlapped sync)")
+    ap.add_argument("--inner-chunks", type=int, default=1,
+                    help="jitted scan chunks per inner phase; the gaps "
+                         "are where in-flight ring hops are dispatched "
+                         "(>= ring hops + 1 hides the whole ring)")
+    ap.add_argument("--sync-buckets", type=int, default=1,
+                    help="sub-buckets per ring chunk-hop (independent "
+                         "codebooks; pipelines compress/transmit)")
     ap.add_argument("--error-feedback", action="store_true")
     ap.add_argument("--inner-lr", type=float, default=3e-4)
     ap.add_argument("--outer-lr", type=float, default=0.7)
@@ -91,12 +106,14 @@ def main():
     tcfg = TrainerConfig(
         diloco=DiLoCoConfig(
             inner_steps=args.inner_steps or 100, quant=args.quant,
-            outer_lr=args.outer_lr,
+            outer_lr=args.outer_lr, overlap=args.overlap,
+            sync_buckets=args.sync_buckets,
             error_feedback=args.error_feedback),
         inner_lr=args.inner_lr, ckpt_dir=args.ckpt_dir,
         ckpt_engine=args.ckpt_engine,
         ckpt_delta_base_every=args.ckpt_base_every,
         ckpt_codec=args.ckpt_codec,
+        inner_chunks=args.inner_chunks,
         max_workers=max(args.workers * 2, args.workers + 2))
     trainer = ElasticTrainer(model, tcfg, dcfg, params, sim)
 
@@ -158,6 +175,12 @@ def main():
     for h in hist:
         print(json.dumps({k: v for k, v in h.items()
                           if k != "ring_order"}, default=str))
+    if args.overlap == "delayed":
+        led = trainer.comm_ledger
+        falls = sum(1 for h in hist if "sync_fallback" in h)
+        print(f"overlapped sync: {led.hidden_fraction:.0%} of ring "
+              f"comm hidden under the chunked inner phase "
+              f"({len(led.records)} windows, {falls} torn fallbacks)")
     print(f"final loss: {hist[-1]['loss']:.4f}  "
           f"bandwidth reduction vs fp32 DP: "
           f"{tcfg.diloco.inner_steps * 4 / (0.5 if args.quant=='int4' else (1 if args.quant=='int8' else 4)):.0f}x")

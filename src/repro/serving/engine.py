@@ -70,15 +70,26 @@ def sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray,
 
     temp == 0 -> greedy (bitwise argmax, matching the wave engine);
     temp > 0 -> categorical over logits/temp, optionally top-k-masked.
-    One key serves the whole batch (categorical draws independent
-    gumbels per row)."""
+    ``key`` is either one key for the whole batch (legacy: categorical
+    draws independent gumbels per row, but the draw depends on the
+    slot's NEIGHBORS) or a (B, 2) stack of PER-SLOT keys — each slot
+    then consumes its own deterministic key stream, so a request's
+    sampled tokens are reproducible regardless of slot placement or
+    co-batched traffic."""
     lg = logits.astype(jnp.float32)
     greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
     safe = jnp.where(temps > 0, temps, 1.0)[:, None]
+    per_slot = key.ndim == 2
     if top_k and top_k > 0:
         vals, idx = jax.lax.top_k(lg, top_k)
-        choice = jax.random.categorical(key, vals / safe)
+        scaled = vals / safe
+        if per_slot:
+            choice = jax.vmap(jax.random.categorical)(key, scaled)
+        else:
+            choice = jax.random.categorical(key, scaled)
         sampled = jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]
+    elif per_slot:
+        sampled = jax.vmap(jax.random.categorical)(key, lg / safe)
     else:
         sampled = jax.random.categorical(key, lg / safe)
     return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
@@ -322,7 +333,12 @@ class ContinuousEngine(_EngineBase):
         self.done = jnp.ones((self.slots,), bool)
         self.remaining = jnp.zeros((self.slots,), jnp.int32)
         self.temps = jnp.zeros((self.slots,), jnp.float32)
-        self.rng = jax.random.PRNGKey(seed)
+        # per-slot PRNG streams: each request's stream is seeded from
+        # (engine seed, request id) at admission, so its temperature /
+        # top-k draws are reproducible REGARDLESS of which slot it
+        # lands in or what else is co-batched
+        self.base_key = jax.random.PRNGKey(seed)
+        self.slot_keys = jnp.zeros((self.slots, 2), jnp.uint32)
         self._pending_first: list = [None] * self.slots
         self._prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
         self._admit_jit = jax.jit(self._admit_fn)
@@ -333,13 +349,17 @@ class ContinuousEngine(_EngineBase):
 
     # -- device-side pieces ---------------------------------------------------
 
-    def _admit_fn(self, cache, tokens, done, remaining, temps, rng,
-                  sub_cache, logits, slot, budget, temp):
+    def _admit_fn(self, cache, tokens, done, remaining, temps,
+                  slot_keys, sub_cache, logits, slot, budget, temp,
+                  rid):
         """Insert a freshly prefilled request into ``slot``: cache
-        splice + first-token sample + per-slot state reset, one jit."""
+        splice + first-token sample + per-slot state reset, one jit.
+        The request's PRNG stream is derived from (engine seed, rid) —
+        slot placement never enters the key chain."""
         cache = tree_insert_slot(cache, sub_cache, slot, self.slots)
-        rng, key = jax.random.split(rng)
-        first = sample_tokens(logits, key,
+        req_key = jax.random.fold_in(self.base_key, rid)
+        k_first, k_stream = jax.random.split(req_key)
+        first = sample_tokens(logits, k_first[None, :],
                               jnp.reshape(temp, (1,)).astype(jnp.float32),
                               self.top_k)                 # (1,)
         tokens = jax.lax.dynamic_update_slice(
@@ -351,27 +371,35 @@ class ContinuousEngine(_EngineBase):
                                                  (slot,))
         temps = jax.lax.dynamic_update_slice(
             temps, jnp.reshape(temp, (1,)).astype(jnp.float32), (slot,))
-        return cache, tokens, done, remaining, temps, rng, first[0]
+        slot_keys = jax.lax.dynamic_update_slice(
+            slot_keys, k_stream[None, :].astype(slot_keys.dtype),
+            (slot, 0))
+        return cache, tokens, done, remaining, temps, slot_keys, first[0]
 
     def _chunk_fn(self, params, cache, tokens, done, remaining, temps,
-                  rng, *, n: int):
+                  slot_keys, *, n: int):
         """N decode+sample steps as one lax.scan; emits the (N, B)
-        sampled-token block (-1 for slots already done at step start)."""
+        sampled-token block (-1 for slots already done at step start).
+        Every slot advances its OWN key chain one split per step, so a
+        request's draw sequence depends only on (engine seed, rid,
+        token index) — never on chunk boundaries or sibling slots."""
         def body(carry, _):
-            tokens, cache, done, remaining, rng = carry
+            tokens, cache, done, remaining, keys = carry
             logits, cache = self.model.decode(params, tokens, cache)
-            rng, key = jax.random.split(rng)
-            nxt = sample_tokens(logits, key, temps, self.top_k)
+            nk = jax.vmap(jax.random.split)(keys)        # (B, 2, 2)
+            step_keys, keys = nk[:, 0], nk[:, 1]
+            nxt = sample_tokens(logits, step_keys, temps, self.top_k)
             remaining = remaining - jnp.where(done, 0, 1)
             newly = (~done) & ((nxt == self.eos_id) | (remaining <= 0))
             emit = jnp.where(done, -1, nxt)
             done = done | newly
             return (nxt[:, None].astype(jnp.int32), cache, done,
-                    remaining, rng), emit
+                    remaining, keys), emit
 
-        (tokens, cache, done, remaining, rng), toks = jax.lax.scan(
-            body, (tokens, cache, done, remaining, rng), None, length=n)
-        return cache, tokens, done, remaining, rng, toks
+        (tokens, cache, done, remaining, slot_keys), toks = jax.lax.scan(
+            body, (tokens, cache, done, remaining, slot_keys), None,
+            length=n)
+        return cache, tokens, done, remaining, slot_keys, toks
 
     # -- host-side scheduler --------------------------------------------------
 
@@ -394,11 +422,11 @@ class ContinuousEngine(_EngineBase):
                  "prompt_len": jnp.asarray([plen], jnp.int32)},
                 self._pcache0)
             (self.cache, self.tokens, self.done, self.remaining,
-             self.temps, self.rng, first) = self._admit_jit(
+             self.temps, self.slot_keys, first) = self._admit_jit(
                 self.cache, self.tokens, self.done, self.remaining,
-                self.temps, self.rng, sub, logits,
+                self.temps, self.slot_keys, sub, logits,
                 jnp.int32(slot), self._budget(req) - 1,
-                float(req.temperature))
+                float(req.temperature), jnp.int32(req.rid))
             self._pending_first[slot] = first   # fetched lazily at drain
             self.active[slot] = req
             self.stats["admitted"] += 1
@@ -439,10 +467,10 @@ class ContinuousEngine(_EngineBase):
         if not any(r is not None for r in self.active):
             return 0
         n = self.decode_chunk
-        (self.cache, self.tokens, self.done, self.remaining, self.rng,
-         toks) = self._chunk_jit(self.params, self.cache, self.tokens,
-                                 self.done, self.remaining, self.temps,
-                                 self.rng, n=n)
+        (self.cache, self.tokens, self.done, self.remaining,
+         self.slot_keys, toks) = self._chunk_jit(
+            self.params, self.cache, self.tokens, self.done,
+            self.remaining, self.temps, self.slot_keys, n=n)
         toks_np = np.asarray(toks)              # ONE host sync per chunk
         self.stats["host_syncs"] += 1
         self.stats["decode_chunks"] += 1

@@ -33,7 +33,8 @@ import numpy as np
 from repro.core import diloco as dl
 from repro.core import topology
 from repro.core.elastic_mesh import SlotAssignment
-from repro.core.fault_tolerance import ClusterSimulator, RetryPolicy
+from repro.core.fault_tolerance import (ClusterSimulator,
+                                        CommOverlapLedger, RetryPolicy)
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.optim.adamw import AdamW
 
@@ -58,6 +59,14 @@ class TrainerConfig:
     max_workers: int = 16
     blocking_join: bool = True     # paper used blocking in production
     seconds_per_outer_step: float = 60.0
+    # inner phase as C jitted scan chunks instead of one monolithic
+    # scan: the gaps between chunks are the host's interleave points
+    # where in-flight ring hops are dispatched (diloco.overlap =
+    # 'delayed'). <=2 distinct chunk lengths -> <=2 compilations.
+    inner_chunks: int = 1
+    # modeled WAN link for the CommOverlapLedger's logical-time
+    # hidden/exposed accounting (paper: ~4 Gb/s internet links)
+    sync_link_bytes_per_s: float = 500e6
 
 
 class ElasticTrainer:
@@ -84,6 +93,23 @@ class ElasticTrainer:
         self.bw = topology.BandwidthMonitor(k)
         self.ring_order = tuple(range(k))
         self.inner_phase_jit = jax.jit(self._inner_phase)
+        # overlapped outer sync (diloco.overlap == 'delayed'): the
+        # in-flight handle spans one inner phase; its ring hops are
+        # dispatched between scan chunks and the reduced result is
+        # applied at the NEXT boundary
+        self.overlap = cfg.diloco.overlap == "delayed"
+        if self.overlap and cfg.inner_chunks <= 1:
+            import warnings
+            warnings.warn(
+                "overlap='delayed' with inner_chunks<=1: the inner "
+                "phase has no interleave points, so all but the first "
+                "ring hop drain EXPOSED at the boundary — you pay the "
+                "delayed-application schedule without hiding the "
+                "communication. Set TrainerConfig.inner_chunks >= "
+                f"2*(k-1)+1 = {2 * (cfg.max_workers - 1) + 1} to hide "
+                "the whole ring.", stacklevel=2)
+        self._inflight: dl.OuterSyncHandle | None = None
+        self.comm_ledger = CommOverlapLedger()
         self.history: list[dict] = []
         self._pipelines = {}
         self.ckpt_store = None
@@ -150,6 +176,40 @@ class ElasticTrainer:
             body, (params, opt_state), batches)
         return params, opt_state, losses
 
+    def _run_inner_phase(self, batches, active):
+        """Run the inner phase as ``cfg.inner_chunks`` jitted scan
+        chunks (near-equal lengths: at most 2 distinct shapes, so at
+        most 2 compilations). The gap after each chunk is a host
+        interleave point: one in-flight ring hop is dispatched there,
+        hiding the outer sync's communication under compute. Chunking
+        only moves the jit boundary — the per-step scan body is
+        unchanged, so the loss trajectory is bit-identical to the
+        monolithic scan (tested)."""
+        h = jax.tree.leaves(batches)[0].shape[0]
+        c = max(1, min(int(self.cfg.inner_chunks), h))
+        sec_per_step = self.cfg.seconds_per_outer_step / max(1, h)
+        if c == 1:
+            self.params, self.opt_state, losses = self.inner_phase_jit(
+                self.params, self.opt_state, batches, active)
+            if self.overlap:
+                self.comm_ledger.compute(h * sec_per_step)
+            return losses
+        bounds = np.linspace(0, h, c + 1).astype(int)
+        losses = []
+        for ci in range(c):
+            lo, hi = int(bounds[ci]), int(bounds[ci + 1])
+            if hi == lo:
+                continue
+            part = jax.tree.map(lambda x: x[lo:hi], batches)
+            self.params, self.opt_state, l = self.inner_phase_jit(
+                self.params, self.opt_state, part, active)
+            losses.append(l)
+            if self.overlap:
+                self.comm_ledger.compute((hi - lo) * sec_per_step)
+                if self._inflight is not None and self._inflight.step():
+                    self.comm_ledger.dispatch_hop()
+        return jnp.concatenate(losses, axis=0)
+
     def _pipeline(self, slot: int) -> TokenPipeline:
         if slot not in self._pipelines:
             self._pipelines[slot] = TokenPipeline(
@@ -168,6 +228,14 @@ class ElasticTrainer:
         global_step = int(self.outer.outer_step) * h
         for t in range(n_outer_steps):
             plan = self.sim.begin_outer_step(t)
+            # a participant of the in-flight overlapped sync left the
+            # cluster: the partial reduction is torn — fall back to a
+            # synchronous re-reduction over the survivors BEFORE the
+            # dead node's slot is released (we need its slot to zero
+            # its weight)
+            fallback_rec = None
+            if self._inflight is not None and plan.get("sync_torn"):
+                fallback_rec = self._fallback_resync(plan)
             live_slots = self._sync_membership(plan)
             active = jnp.asarray(
                 self.slots.live_mask(plan["live"]), jnp.float32)
@@ -175,8 +243,7 @@ class ElasticTrainer:
             batches = jax.tree.map(
                 lambda *xs: jnp.stack(xs),
                 *[self._batches(global_step + i) for i in range(h)])
-            self.params, self.opt_state, losses = self.inner_phase_jit(
-                self.params, self.opt_state, batches, active)
+            losses = self._run_inner_phase(batches, active)
             global_step += h
 
             # bandwidth-aware ring re-ordering (paper §2.5)
@@ -191,15 +258,21 @@ class ElasticTrainer:
                 plan["live"],
                 zero_weight_ids=plan["joined"] + plan["stragglers"])
 
-            def attempt(live_set):
-                w = np.array(weights)
-                for nid, slot in self.slots.slot_of.items():
-                    if nid not in live_set:
-                        w[slot] = 0.0
-                return self._outer_sync(jnp.asarray(w))
+            if self.overlap:
+                overlap_rec = self._overlapped_boundary(t, weights)
+                attempts = 1
+            else:
+                overlap_rec = None
 
-            (self.params, self.outer), _, attempts = \
-                self.retry.run_collective(attempt, plan["live"])
+                def attempt(live_set):
+                    w = np.array(weights)
+                    for nid, slot in self.slots.slot_of.items():
+                        if nid not in live_set:
+                            w[slot] = 0.0
+                    return self._outer_sync(jnp.asarray(w))
+
+                (self.params, self.outer), _, attempts = \
+                    self.retry.run_collective(attempt, plan["live"])
 
             mean_loss = float(losses[-1][
                 jnp.asarray(weights) > 0].mean()) if np.any(
@@ -212,6 +285,10 @@ class ElasticTrainer:
                        jax.tree.map(lambda p: p[0], self.params),
                        max(1, int(np.sum(np.asarray(weights) > 0))),
                        self.cfg.diloco)}
+            if overlap_rec is not None:
+                rec["overlap"] = overlap_rec
+            if fallback_rec is not None:
+                rec["sync_fallback"] = fallback_rec
             # streamed recovery that completed during this inner phase
             # is adopted HERE — the paper's overlapped onboarding: the
             # fetch ran under compute, admission costs one restore
@@ -245,6 +322,16 @@ class ElasticTrainer:
                     from repro.checkpointing import save_async
                     save_async(self.cfg.ckpt_dir, global_step, tree,
                                meta)
+        # drain: the last boundary's sync is still in flight — apply it
+        # so the returned anchor includes the final phase's progress
+        if self._inflight is not None:
+            self._drain_hops(self._inflight)
+            self.history[-1].setdefault("overlap", {})["drain"] = \
+                self.comm_ledger.finish_sync()
+            self.params, self.outer = dl.finish_outer_sync_sim(
+                self._inflight, self.params, self.outer)
+            self._inflight = None
+            self.sim.note_sync_end()
         if self.snapshotter is not None:
             self.snapshotter.flush()
         return self.history
@@ -341,6 +428,93 @@ class ElasticTrainer:
                                  self.cfg.diloco,
                                  ring_order=self.ring_order[: self.k],
                                  weights=weights)
+
+    # -- overlapped outer sync (diloco.overlap == 'delayed') ------------------
+
+    def _hop_seconds(self, weights) -> float:
+        """Modeled wire time of ONE sim ring hop: the live workers'
+        per-worker wire bytes spread over the sim's hop count (the sim
+        rings over all k slots; the real cluster rings over the live
+        ones — total bytes are what the link actually carries)."""
+        n_live = max(1, int(np.sum(np.asarray(weights) > 0)))
+        total = dl.sync_wire_bytes(
+            jax.tree.map(lambda p: p[0], self.params), n_live,
+            self.cfg.diloco)
+        hops = max(1, 2 * (self.k - 1))
+        return total / hops / self.cfg.sync_link_bytes_per_s
+
+    def _participants(self, weights) -> frozenset:
+        w = np.asarray(weights)
+        return frozenset(nid for nid, slot in self.slots.slot_of.items()
+                         if slot < len(w) and w[slot] > 0)
+
+    def _overlapped_boundary(self, t: int, weights) -> dict:
+        """Boundary protocol for the delayed overlap (paper §2.2):
+
+          1. compute + quantize THIS phase's pseudo-gradients against
+             the current anchor (the one every worker started from) and
+             stage the ring — ``begin`` before ``finish`` so the new
+             pseudo-gradient never sees the about-to-land update;
+          2. drain + apply the PREVIOUS boundary's reduction (one-phase
+             delay) — every worker resets to the updated anchor;
+          3. dispatch the new sync's first hop so its transfer hides
+             under the next inner phase from the very start.
+        """
+        w = jnp.asarray(np.asarray(weights), jnp.float32)
+        h_new = dl.begin_outer_sync_sim(
+            self.params, self.outer, self.cfg.diloco,
+            ring_order=self.ring_order[: self.k], weights=w)
+        rec: dict = {"hops": h_new.hops_total}
+        prev = self._inflight
+        if prev is not None:
+            self._drain_hops(prev)
+            rec["prev"] = self.comm_ledger.finish_sync()
+            self.params, self.outer = dl.finish_outer_sync_sim(
+                prev, self.params, self.outer)
+        else:
+            # first boundary: nothing in flight to apply — reset every
+            # worker to the (unchanged) anchor; this phase's progress
+            # arrives via the delayed application at the next boundary
+            self._reset_to_anchor()
+        self.sim.note_sync_begin(t, self._participants(weights))
+        self._inflight = h_new
+        self.comm_ledger.begin_sync(self._hop_seconds(weights))
+        if h_new.step():
+            self.comm_ledger.dispatch_hop()
+        return rec
+
+    def _fallback_resync(self, plan) -> dict:
+        """A participant of the in-flight sync left: discard the torn
+        partial reduction and synchronously re-reduce the retained
+        pseudo-gradients with the dead workers' weights zeroed
+        (bit-consistent: every survivor re-derives the same result
+        from the same retained inputs)."""
+        h = self._inflight
+        self._inflight = None
+        self.sim.note_sync_end()
+        w = np.asarray(h.weights, np.float32).copy()
+        for nid in plan["sync_torn"]:
+            slot = self.slots.slot_of.get(nid)
+            if slot is not None and slot < len(w):
+                w[slot] = 0.0
+        self.params, self.outer = dl.resync_outer_sim(
+            h, self.params, self.outer, jnp.asarray(w))
+        led = self.comm_ledger.tear_sync(resync_hops=h.hops_total)
+        return {"torn_by": list(plan["sync_torn"]),
+                "resync_hops": h.hops_total, "ledger": led}
+
+    def _drain_hops(self, handle: dl.OuterSyncHandle) -> None:
+        """Dispatch every remaining hop of ``handle`` (exposed comm:
+        the boundary is waiting on the wire)."""
+        while handle.step():
+            self.comm_ledger.dispatch_hop()
+
+    def _reset_to_anchor(self) -> None:
+        for_slot = self.outer.anchor
+        self.params = jax.tree.map(
+            lambda stacked, a: jnp.broadcast_to(
+                a.astype(stacked.dtype)[None], stacked.shape),
+            self.params, for_slot)
 
     def _sync_membership(self, plan) -> list[int]:
         for nid in plan["left"]:

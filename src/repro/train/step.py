@@ -16,11 +16,12 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import diloco as dl
-from repro.core.sync_engine import SyncEngine
+from repro.core.sync_engine import SyncEngine, shard_flat_size
 from repro.models import common
 from repro.optim.adamw import AdamW, AdamWState
 from repro.optim.nesterov import NesterovState
@@ -42,6 +43,50 @@ def _constrain(mesh, tree, spec_tree):
 def param_specs(model, plan, mesh) -> Any:
     shapes, axes = common.eval_axes(model.init, jax.random.PRNGKey(0))
     return partition.param_pspecs(axes, shapes, plan, mesh_axes(mesh))
+
+
+def _shard_flat_dims(shapes, pspecs, amap: dict,
+                     diloco_axis: str | None) -> tuple[int, int]:
+    """(padded_local_len, tile) of the per-shard flat anchor buffer a
+    sharded plan threads through its sync region: the concat of each
+    device's local anchor shards PLUS ONE SENTINEL element, tiled over
+    the non-DiLoCo mesh axes. The sentinel makes the threaded layout's
+    length provably distinct from a global flatten (numel) even when
+    every leaf shards evenly — so ``sync()`` can always tell a
+    global-layout buffer (e.g. ``init_outer_state``'s) from its own
+    and rebuild instead of silently mis-reading it. Single source of
+    truth for both ``build_outer_sync`` and ``flat_anchor_len``;
+    callers pass their already-evaluated (shapes, pspecs)."""
+    local = shard_flat_size(shapes, pspecs, amap) + 1
+    tile = 1
+    for a, n in amap.items():
+        if a != diloco_axis:
+            tile *= n
+    return local, tile
+
+
+def flat_anchor_len(model, plan, mesh) -> int:
+    """GLOBAL length of the persistent flat anchor buffer the outer
+    sync threads through its region (dry-run / device_put lockstep).
+
+    Replicated-param plans thread the full flat anchor (numel).
+    Sharded plans thread the PER-SHARD flat view: each device holds the
+    concat of its local anchor shards plus a sentinel element (see
+    ``_shard_flat_dims``), and the buffer's global shape is that local
+    length tiled over the non-DiLoCo mesh axes (an opaque device-major
+    concat, only ever interpreted inside the manual region)."""
+    shapes, axes = common.eval_axes(model.init, jax.random.PRNGKey(0))
+    amap = mesh_axes(mesh)
+    pspecs = partition.param_pspecs(axes, shapes, plan, amap)
+    sharded = any(s != P() for s in jax.tree.leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P)))
+    if not sharded:
+        return sum(int(np.prod(s.shape, dtype=np.int64))
+                   if s.shape else 1
+                   for s in jax.tree.leaves(shapes))
+    local, tile = _shard_flat_dims(shapes, pspecs, amap,
+                                   plan.diloco_axis)
+    return local * tile
 
 
 def batch_pspecs(model, shape, plan, mesh, *, stacked: bool) -> Any:
@@ -270,33 +315,68 @@ def build_outer_sync(model, plan, mesh, diloco_cfg: dl.DiLoCoConfig,
                                     P(dax), P(), P())
         return sync, outer_specs
 
+    # Sharded plans thread the PER-SHARD flat anchor view (the zero-
+    # flatten fused path replicated plans got in PR 2): inside the
+    # manual region every device's anchor leaves are LOCAL shards, so
+    # the persistent buffer is the concat of those shards plus one
+    # SENTINEL element (see _shard_flat_dims — it keeps the threaded
+    # layout's length distinct from a global flatten, so a buffer from
+    # init_outer_state can never be mis-read as per-shard). It rides
+    # in/out of the region as an opaque device-major array whose first
+    # dim is "sharded" over the non-DiLoCo mesh axes (and replicated
+    # over the DiLoCo axis, like the anchor itself); sync() rebuilds
+    # the view whenever the incoming buffer's length differs.
+    nondax = tuple(a for a in mesh.axis_names if a != dax)
+    flat_spec = P(nondax) if nondax else P()
+    shapes, _ = common.eval_axes(model.init, jax.random.PRNGKey(0))
+    padded_local, tile = _shard_flat_dims(shapes, pspecs,
+                                          mesh_axes(mesh), dax)
+    flat_global = padded_local * tile
+
+    def _local_flatten(anchor):
+        flat = SyncEngine.for_tree(anchor).flatten(anchor)
+        return jnp.pad(flat, (0, 1))          # sentinel element
+
+    flatten_local = compat.shard_map(
+        _local_flatten, mesh=mesh, in_specs=(pspecs,),
+        out_specs=flat_spec, check_vma=False)
+
     def per_worker(params, anchor, momentum, residual, outer_step,
-                   weights):
+                   a_flat, weights):
         p_i = jax.tree.map(lambda x: x[0], params)
         st = dl.OuterState(anchor, NesterovState(momentum),
-                           residual[0], outer_step)
+                           residual[0], outer_step,
+                           anchor_flat=a_flat[:-1])  # drop sentinel
         new_p, new_st = dl.outer_sync(
             p_i, st, diloco_cfg, dax, ring_order=ring_order,
             weight=weights[0])
         return (jax.tree.map(lambda x: x[None], new_p), new_st.anchor,
                 new_st.opt.momentum, new_st.residual[None],
-                new_st.outer_step)
+                new_st.outer_step, jnp.pad(new_st.anchor_flat, (0, 1)))
 
     def sync(params_stacked, outer_state: dl.OuterState, weights):
-        new_p, anchor, momentum, residual, ostep = compat.shard_map(
-            per_worker, mesh=mesh,
-            in_specs=(lead(pspecs), pspecs, pspecs, P(dax), P(),
-                      P(dax)),
-            out_specs=(lead(pspecs), pspecs, pspecs, P(dax), P()),
-            check_vma=False)(
-                params_stacked, outer_state.anchor,
-                outer_state.opt.momentum, outer_state.residual,
-                outer_state.outer_step, weights)
+        a_flat = outer_state.anchor_flat
+        if a_flat is None or tuple(a_flat.shape) != (flat_global,):
+            # first sync (or a global-layout buffer from
+            # init_outer_state): build the per-shard view once; the
+            # updated buffer threads through every later sync
+            a_flat = flatten_local(outer_state.anchor)
+        new_p, anchor, momentum, residual, ostep, new_a_flat = \
+            compat.shard_map(
+                per_worker, mesh=mesh,
+                in_specs=(lead(pspecs), pspecs, pspecs, P(dax), P(),
+                          flat_spec, P(dax)),
+                out_specs=(lead(pspecs), pspecs, pspecs, P(dax), P(),
+                           flat_spec),
+                check_vma=False)(
+                    params_stacked, outer_state.anchor,
+                    outer_state.opt.momentum, outer_state.residual,
+                    outer_state.outer_step, a_flat, weights)
         return new_p, dl.OuterState(anchor, NesterovState(momentum),
-                                    residual, ostep)
+                                    residual, ostep, new_a_flat)
 
     outer_specs = dl.OuterState(pspecs, NesterovState(pspecs),
-                                P(dax), P())
+                                P(dax), P(), flat_spec)
     return sync, outer_specs
 
 

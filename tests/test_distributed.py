@@ -196,6 +196,84 @@ def test_replicated_plan_sync_threads_anchor_flat():
     assert "ANCHOR-FLAT-OK" in out
 
 
+def test_sharded_plan_threads_per_shard_anchor_flat():
+    """Sharded plans thread the PER-SHARD flat anchor view through the
+    manual sync region (PR 5): the concat of each device's local anchor
+    shards rides in/out as an opaque buffer, so the pseudo-gradient is
+    one subtract off the persistent buffer — and the result is
+    BIT-EXACT against the tree-path sync that re-flattens the local
+    anchor every call."""
+    out = _run("""
+        from repro.core import diloco
+        from repro.configs import CONFIGS
+        from repro.configs.base import ShapeConfig
+        from repro.sharding.plans import ParallelismPlan
+        from repro.train import step as step_lib
+        from repro.models.registry import get_model
+        from jax.sharding import PartitionSpec as P
+
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
+        cfg = CONFIGS["internlm2-1.8b"].reduced()
+        # reduced() configs all take the inner-DP (replicated) rules;
+        # force real TP sharding so the per-shard path is exercised
+        plan = ParallelismPlan(
+            diloco_axis="data",
+            rules=(("vocab", "model"), ("heads", "model"),
+                   ("ff", "model"), ("experts", "model"),
+                   ("embed", None), ("layers", None)),
+            batch_axes=(), seq_axis=None, remat=False, n_workers=4)
+        model = get_model(cfg)
+        pspecs = step_lib.param_specs(model, plan, mesh)
+        specs = jax.tree.leaves(
+            pspecs, is_leaf=lambda x: isinstance(x, P))
+        assert any(s != P() for s in specs), "plan must shard params"
+        params, _ = model.init(jax.random.PRNGKey(0))
+        k = 4
+        stacked = jax.tree.map(
+            lambda x: jnp.stack([x + 0.01 * i for i in range(k)]),
+            params)
+        dcfg = diloco.DiLoCoConfig(quant="fp32")
+        st = diloco.init_outer_state(params, dcfg)
+        st = st._replace(residual=jnp.zeros((k, 0), jnp.float32),
+                         anchor_flat=None)
+        numel = sum(l.size for l in jax.tree.leaves(params))
+        with mesh:
+            sync, outer_specs = step_lib.build_outer_sync(
+                model, plan, mesh, dcfg)
+            # sharded plan => a per-shard flat spec is threaded
+            assert outer_specs.anchor_flat is not None
+            flat_len = step_lib.flat_anchor_len(model, plan, mesh)
+            assert flat_len > numel  # replicated leaves concat per dev
+            w = jnp.ones((k,), jnp.float32)
+            jsync = jax.jit(sync)
+            p1, st1 = jsync(stacked, st, w)
+            assert st1.anchor_flat.shape == (flat_len,)
+            # chained: threaded buffer vs tree-path rebuild, bit-exact
+            p2a, st2a = jsync(p1, st1, w)
+            p2b, st2b = jsync(p1, st1._replace(anchor_flat=None), w)
+            for a, b in zip(jax.tree.leaves(p2a), jax.tree.leaves(p2b)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+            np.testing.assert_array_equal(
+                np.asarray(st2a.anchor_flat),
+                np.asarray(st2b.anchor_flat))
+        # and the sharded sync still equals the unsharded simulation
+        sim_st = diloco.init_outer_state_sim(params, dcfg, k)
+        sim_p, sim_st = diloco.outer_sync_sim(stacked, sim_st, dcfg)
+        sim_p2, _ = diloco.outer_sync_sim(p1, sim_st, dcfg)
+        np.testing.assert_allclose(
+            np.asarray(p1["embed"], np.float32),
+            np.asarray(sim_p["embed"], np.float32),
+            rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(p2a["embed"], np.float32),
+            np.asarray(sim_p2["embed"], np.float32),
+            rtol=1e-4, atol=1e-5)
+        print("SHARD-ANCHOR-FLAT-OK")
+    """)
+    assert "SHARD-ANCHOR-FLAT-OK" in out
+
+
 def test_full_manual_sync_with_sharded_params():
     """Hybrid FSDP+DiLoCo: per-shard rings on a 2x2 mesh equal the
     unsharded simulation."""

@@ -1,0 +1,341 @@
+"""Overlapped outer sync: hop-steppable ring vs the one-shot
+simulator (bit-exact), begin/finish delayed application, torn-overlap
+fallback, chunked inner phase, and the logical-time overlap ledger."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import diloco as dl
+from repro.core import ring_reduce as rr
+from repro.core.fault_tolerance import (ClusterSimulator,
+                                        CommOverlapLedger, EventKind,
+                                        NodeEvent)
+
+_rng = np.random.default_rng(77)
+
+
+# -- RingSyncOp == one-shot simulator -----------------------------------------
+
+
+@pytest.mark.parametrize("k", [2, 4, 5])
+@pytest.mark.parametrize("quant,buckets", [("fp32", 1), ("int8", 1),
+                                           ("int8", 3), ("int4", 1)])
+def test_stepped_ring_bit_matches_oneshot(k, quant, buckets):
+    xs = jnp.asarray(_rng.normal(size=(k, 1027)), jnp.float32)
+    order = tuple(np.random.default_rng(k).permutation(k).tolist())
+    w = jnp.asarray(_rng.uniform(0.5, 1.5, size=(k,)), jnp.float32)
+    cfg = rr.RingConfig(quant=quant, buckets=buckets)
+    one = rr.simulate_ring_all_reduce(xs, ring_order=order, cfg=cfg,
+                                      weights=w)
+    op = rr.RingSyncOp(xs, ring_order=order, cfg=cfg, weights=w)
+    assert op.hops_total == 2 * (k - 1)
+    n = 0
+    while op.step():
+        n += 1
+    assert n == op.hops_total
+    assert not op.step()                      # idempotent once drained
+    np.testing.assert_array_equal(np.asarray(one),
+                                  np.asarray(op.finish()))
+
+
+def test_stepped_ring_fused_src_bit_matches(rng):
+    k, n = 4, 1500
+    anchor = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    thetas = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    pgs = anchor[None] - thetas
+    w = jnp.asarray([1.0, 0.0, 1.0, 1.0], jnp.float32)
+    cfg = rr.RingConfig(quant="int8", buckets=2)
+    one = rr.simulate_ring_all_reduce(pgs, cfg=cfg, weights=w,
+                                      fused_src=(anchor, thetas))
+    op = rr.RingSyncOp(pgs, cfg=cfg, weights=w,
+                       fused_src=(anchor, thetas))
+    np.testing.assert_array_equal(np.asarray(one),
+                                  np.asarray(op.finish()))
+
+
+def test_stepped_ring_finish_drains_partial(rng):
+    """finish() after a few step()s equals finish() with none."""
+    xs = jnp.asarray(rng.normal(size=(4, 515)), jnp.float32)
+    cfg = rr.RingConfig(quant="int8")
+    a = rr.RingSyncOp(xs, cfg=cfg)
+    for _ in range(3):
+        a.step()
+    b = rr.RingSyncOp(xs, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(a.finish()),
+                                  np.asarray(b.finish()))
+
+
+def test_stepped_ring_restart_matches_fresh_weights(rng):
+    """The torn-overlap fallback re-reduces the RETAINED inputs under
+    new weights, bit-identical to a fresh synchronous reduction."""
+    xs = jnp.asarray(rng.normal(size=(4, 700)), jnp.float32)
+    cfg = rr.RingConfig(quant="int8")
+    op = rr.RingSyncOp(xs, cfg=cfg)
+    for _ in range(4):                 # partially reduced, then torn
+        op.step()
+    w = jnp.asarray([1.0, 1.0, 0.0, 1.0], jnp.float32)
+    got = op.restart(w)
+    want = rr.simulate_ring_all_reduce(xs, cfg=cfg, weights=w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_stepped_ring_k1_degenerate():
+    xs = jnp.asarray([[1.0, 2.0, 3.0]], jnp.float32)
+    op = rr.RingSyncOp(xs)
+    assert op.hops_total == 0 and not op.step()
+    np.testing.assert_array_equal(np.asarray(op.finish()),
+                                  np.asarray(xs))
+
+
+# -- begin / finish outer sync ------------------------------------------------
+
+
+def _stacked(rng, k=4, n=515):
+    p0 = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32),
+          "b": jnp.asarray(rng.normal(size=(9,)), jnp.float32)}
+    stacked = jax.tree.map(
+        lambda a: jnp.stack([a * (1 + 0.01 * i) for i in range(k)]), p0)
+    return p0, stacked
+
+
+@pytest.mark.parametrize("quant", ["fp32", "int8", "int4"])
+def test_begin_finish_equals_outer_sync_sim(quant, rng):
+    p0, stacked = _stacked(rng)
+    cfg = dl.DiLoCoConfig(quant=quant, sync_buckets=2)
+    st = dl.init_outer_state_sim(p0, cfg, 4)
+    want_p, want_st = dl.outer_sync_sim(stacked, st, cfg)
+    h = dl.begin_outer_sync_sim(stacked, st, cfg)
+    while h.step():                    # interleave-style stepping
+        pass
+    got_p, got_st = dl.finish_outer_sync_sim(h, stacked, st)
+    np.testing.assert_array_equal(np.asarray(want_p["w"]),
+                                  np.asarray(got_p["w"]))
+    np.testing.assert_array_equal(np.asarray(want_st.anchor_flat),
+                                  np.asarray(got_st.anchor_flat))
+    assert int(got_st.outer_step) == 1
+
+
+def test_resync_equals_direct_weighted_sync(rng):
+    """Fallback after a death == a synchronous sync with the dead
+    worker's weight zeroed, bit-for-bit."""
+    p0, stacked = _stacked(rng)
+    cfg = dl.DiLoCoConfig(quant="int8")
+    st = dl.init_outer_state_sim(p0, cfg, 4)
+    h = dl.begin_outer_sync_sim(stacked, st, cfg)
+    for _ in range(3):
+        h.step()                       # mid-overlap when the death hits
+    w = jnp.asarray([1.0, 0.0, 1.0, 1.0], jnp.float32)
+    got_p, got_st = dl.resync_outer_sim(h, stacked, st, w)
+    want_p, want_st = dl.outer_sync_sim(stacked, st, cfg, weights=w)
+    np.testing.assert_array_equal(np.asarray(want_p["w"]),
+                                  np.asarray(got_p["w"]))
+    np.testing.assert_array_equal(np.asarray(want_st.anchor_flat),
+                                  np.asarray(got_st.anchor_flat))
+
+
+def test_delayed_apply_roots_at_begin_time_snapshot(rng):
+    """The trainer's boundary order is begin-new -> finish-old, so a
+    handle finishes AFTER the anchor absorbed the previous boundary's
+    delta. The delayed apply deliberately lands each delta on the
+    anchor SNAPSHOT its pseudo-gradients are rooted at (zero
+    base-mismatch — the synchronous DiLoCo rule per lineage; applying
+    to the moved tip instead compounds same-rooted progress under the
+    outer momentum and measurably overshoots, see
+    finish_outer_sync_sim). Momentum threads SEQUENTIALLY through
+    every apply, mixing the two interleaved lineages."""
+    p0, stacked_a = _stacked(rng)
+    stacked_b = jax.tree.map(lambda x: x * 1.02, stacked_a)
+    cfg = dl.DiLoCoConfig(quant="int8")
+    st0 = dl.init_outer_state_sim(p0, cfg, 4)
+
+    h0 = dl.begin_outer_sync_sim(stacked_a, st0, cfg)
+    # next boundary: the NEW sync begins against the pre-apply anchor…
+    h1 = dl.begin_outer_sync_sim(stacked_b, st0, cfg)
+    # …then the old one finishes and the tip moves to T1
+    _, st1 = dl.finish_outer_sync_sim(h0, stacked_b, st0)
+    # final boundary: h1's delta lands on ITS root (A0), with the
+    # momentum state as of the finish (threaded through T1's apply)
+    _, st2 = dl.finish_outer_sync_sim(h1, stacked_b, st1)
+
+    from repro.core.ring_reduce import simulate_ring_all_reduce
+    from repro.core.sync_engine import SyncEngine
+    eng = SyncEngine.for_tree(p0)
+    p_flats = jax.vmap(eng.flatten)(stacked_b)
+    pgs1 = st0.anchor_flat[None, :] - p_flats
+    red1 = simulate_ring_all_reduce(
+        pgs1, cfg=cfg.ring,
+        fused_src=(st0.anchor_flat, p_flats))[0]
+    want_a2, want_m2 = cfg.outer_opt.update_flat(
+        red1, eng.flatten(st1.opt.momentum), st0.anchor_flat)
+    np.testing.assert_array_equal(np.asarray(st2.anchor_flat),
+                                  np.asarray(want_a2))
+    np.testing.assert_array_equal(
+        np.asarray(eng.flatten(st2.opt.momentum)), np.asarray(want_m2))
+    # both lineages moved and the flat/tree anchor views agree
+    assert not np.array_equal(np.asarray(st1.anchor_flat),
+                              np.asarray(st0.anchor_flat))
+    assert not np.array_equal(np.asarray(st2.anchor_flat),
+                              np.asarray(st1.anchor_flat))
+    np.testing.assert_array_equal(
+        np.asarray(st2.anchor_flat),
+        np.asarray(eng.flatten(st2.anchor)))
+
+
+def test_delayed_overlap_rejects_error_feedback(rng):
+    p0, stacked = _stacked(rng)
+    cfg = dl.DiLoCoConfig(quant="int8", error_feedback=True,
+                          overlap="delayed")
+    st = dl.init_outer_state_sim(p0, cfg, 4)
+    with pytest.raises(NotImplementedError):
+        dl.begin_outer_sync_sim(stacked, st, cfg)
+
+
+# -- elastic trainer: chunked inner phase + delayed application ---------------
+
+
+def _trainer(overlap, chunks, events=(), inner=3, workers=3,
+             max_workers=4):
+    from repro.configs import CONFIGS
+    from repro.data.pipeline import DataConfig
+    from repro.models.registry import get_model
+    from repro.train.loop import ElasticTrainer, TrainerConfig
+
+    cfg = CONFIGS["mamba2-130m"].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, batch_per_worker=2,
+                      total_steps=inner * 16)
+    tcfg = TrainerConfig(
+        diloco=dl.DiLoCoConfig(inner_steps=inner, quant="int8",
+                               overlap=overlap),
+        inner_lr=3e-3, max_workers=max_workers, inner_chunks=chunks)
+    return ElasticTrainer(model, tcfg, dcfg, params,
+                          ClusterSimulator(list(range(workers)),
+                                           events=list(events)))
+
+
+def test_chunked_inner_phase_bit_matches_monolithic():
+    """Chunking only moves the jit boundary: the loss trajectory and
+    the final anchor are bit-identical to the single-scan phase."""
+    a = _trainer("none", 1)
+    b = _trainer("none", 3)
+    ha = a.run(3)
+    hb = b.run(3)
+    assert [h["loss"] for h in ha] == [h["loss"] for h in hb]
+    np.testing.assert_array_equal(np.asarray(a.outer.anchor_flat),
+                                  np.asarray(b.outer.anchor_flat))
+
+
+def test_delayed_one_step_with_drain_equals_sync():
+    """Run 1 outer step: the delayed schedule begins the sync at the
+    boundary and the end-of-run drain applies it — the SAME reduction
+    of the SAME phase-0 pseudo-gradients the synchronous schedule
+    applies at that boundary. Anchors must match bit-for-bit."""
+    a = _trainer("none", 1)
+    b = _trainer("delayed", 3)
+    a.run(1)
+    b.run(1)
+    np.testing.assert_array_equal(np.asarray(a.outer.anchor_flat),
+                                  np.asarray(b.outer.anchor_flat))
+    assert int(b.outer.outer_step) == 1
+
+
+def test_delayed_trains_and_hides_comm():
+    tr = _trainer("delayed", 8, inner=8)
+    hist = tr.run(4)
+    losses = [h["loss"] for h in hist]
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0]
+    # every boundary-closed window fully hid the ring (chunks >= hops);
+    # only the end-of-run drain is exposed
+    steady = tr.comm_ledger.records[:-1]
+    assert steady and all(r["hidden_frac"] > 0.99 for r in steady)
+    assert tr.comm_ledger.records[-1]["hidden_frac"] < 0.01
+    assert all(h["overlap"]["hops"] == 2 * (tr.k - 1) for h in hist)
+
+
+def test_worker_death_mid_overlap_falls_back_bit_consistently():
+    """A participant crashes while its reduction is on the wire: the
+    trainer must discard the torn partial state, re-reduce the retained
+    pseudo-gradients over the survivors, and keep training. Two
+    identical runs land bit-identical anchors (deterministic
+    recovery)."""
+    ev = [NodeEvent(2, EventKind.CRASH, 1)]
+    a = _trainer("delayed", 4, events=ev)
+    ha = a.run(4)
+    fallbacks = [h["sync_fallback"] for h in ha if "sync_fallback" in h]
+    assert len(fallbacks) == 1
+    assert fallbacks[0]["torn_by"] == [1]
+    assert fallbacks[0]["ledger"]["torn"] is True
+    assert all(np.isfinite(h["loss"]) for h in ha)
+    b = _trainer("delayed", 4, events=ev)
+    b.run(4)
+    np.testing.assert_array_equal(np.asarray(a.outer.anchor_flat),
+                                  np.asarray(b.outer.anchor_flat))
+
+
+def test_nonparticipant_death_does_not_tear():
+    """A node that joined AFTER the in-flight sync began (zero weight,
+    not a participant) dying must not trigger the fallback."""
+    ev = [NodeEvent(1, EventKind.JOIN, 9),
+          NodeEvent(2, EventKind.CRASH, 9)]
+    tr = _trainer("delayed", 4, events=ev)
+    hist = tr.run(4)
+    assert not any("sync_fallback" in h for h in hist)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+# -- ClusterSimulator in-flight sync ------------------------------------------
+
+
+def test_simulator_reports_torn_sync():
+    sim = ClusterSimulator([0, 1, 2], events=[
+        NodeEvent(1, EventKind.CRASH, 1),
+        NodeEvent(2, EventKind.LEAVE, 2)])
+    sim.begin_outer_step(0)
+    sim.note_sync_begin(0, [0, 1])          # node 2 not a participant
+    plan = sim.begin_outer_step(1)          # node 1 crashes -> evicted
+    assert plan["sync_torn"] == [1]
+    sim.note_sync_end()
+    plan = sim.begin_outer_step(2)          # node 2 leaves, no sync
+    assert plan["sync_torn"] == []
+
+
+# -- CommOverlapLedger --------------------------------------------------------
+
+
+def test_ledger_fully_hidden_when_compute_covers_comm():
+    led = CommOverlapLedger()
+    led.begin_sync(hop_seconds=1.0)
+    for _ in range(4):
+        led.dispatch_hop()
+        led.compute(2.0)                   # each hop drains in-window
+    rec = led.finish_sync()
+    assert rec["comm_total_s"] == 4.0
+    assert rec["comm_hidden_s"] == pytest.approx(4.0)
+    assert led.hidden_fraction == pytest.approx(1.0)
+
+
+def test_ledger_fully_exposed_without_compute():
+    led = CommOverlapLedger()
+    led.begin_sync(hop_seconds=1.0)
+    led.dispatch_hop(3)
+    rec = led.finish_sync()
+    assert rec["comm_exposed_s"] == pytest.approx(3.0)
+    assert rec["hidden_frac"] == pytest.approx(0.0)
+
+
+def test_ledger_partial_and_tear():
+    led = CommOverlapLedger()
+    led.begin_sync(hop_seconds=2.0)
+    led.dispatch_hop(2)                    # 4 s of comm
+    led.compute(1.0)                       # only 1 s hidden
+    rec = led.finish_sync()
+    assert rec["comm_hidden_s"] == pytest.approx(1.0)
+    assert rec["comm_exposed_s"] == pytest.approx(3.0)
+    led.begin_sync(hop_seconds=0.5)
+    led.dispatch_hop()
+    rec = led.tear_sync(resync_hops=6)     # full ring re-run, exposed
+    assert rec["torn"] and rec["comm_exposed_s"] == pytest.approx(3.0)
+    assert rec["comm_hidden_s"] == 0.0

@@ -172,6 +172,42 @@ def test_sampling_deterministic_and_top1_is_greedy(setup):
     assert run(0, 5.0, 1) == run(0, 0.0, 0)
 
 
+def test_per_slot_seed_reproducible_across_slot_placement(setup):
+    """A sampled request's token stream is seeded from (engine seed,
+    rid): the SAME request must produce the SAME tokens whether it is
+    served alone in slot 0 or admitted mid-stream into a busy engine's
+    last free slot next to other sampled traffic."""
+    cfg, model, params = setup
+    prompt = np.arange(2, 9).astype(np.int32)
+
+    solo_req = Request(7, prompt.copy(), max_new_tokens=6,
+                       temperature=0.9)
+    solo = ContinuousEngine(model, params, batch_slots=1, max_len=64,
+                            decode_chunk=4, seed=3)
+    solo.submit(solo_req)
+    solo.run_until_drained()
+
+    busy = ContinuousEngine(model, params, batch_slots=3, max_len=64,
+                            decode_chunk=4, seed=3)
+    for i, t in ((100, 1.3), (101, 0.7)):     # different rids/temps
+        busy.submit(Request(i, np.arange(3, 12).astype(np.int32),
+                            max_new_tokens=20, temperature=t))
+    busy.step()                                # both decode a chunk
+    late = Request(7, prompt.copy(), max_new_tokens=6,
+                   temperature=0.9)
+    busy.submit(late)                          # lands in slot 2
+    busy.run_until_drained()
+    assert late.out_tokens == solo_req.out_tokens
+
+    # different engine seed -> different stream for the same rid
+    other = ContinuousEngine(model, params, batch_slots=1, max_len=64,
+                             decode_chunk=4, seed=4)
+    req2 = Request(7, prompt.copy(), max_new_tokens=6, temperature=0.9)
+    other.submit(req2)
+    other.run_until_drained()
+    assert req2.out_tokens != solo_req.out_tokens
+
+
 def test_mid_stream_admission_uses_per_slot_positions(setup):
     """A request admitted while another slot is deep into decode must
     produce the same tokens as when served alone."""

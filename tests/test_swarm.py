@@ -195,3 +195,74 @@ def test_cluster_sim_kills_peer_mid_fetch_joiner_still_enters(tmp_path):
     assert all(np.isfinite(h["loss"]) for h in hist[3:])
     for p in peers.values():
         p.close()
+
+
+# -- rarest-first range scheduling --------------------------------------------
+
+
+def test_schedule_ranges_rarest_first():
+    """With a possession map, ranges are ordered fewest-holders-first:
+    the scarce chunks lead the queue so their lone holder starts on
+    them immediately instead of burning its window on chunks everyone
+    has (and concurrent joins don't pile onto one peer for the tail)."""
+    from repro.checkpointing.swarm import _schedule_ranges
+
+    common = [f"c{i}" for i in range(6)]     # held by A, B, C
+    rare = [f"r{i}" for i in range(4)]       # held only by A
+    duo = [f"d{i}" for i in range(2)]        # held by A, B
+    holders = {**{c: {"A", "B", "C"} for c in common},
+               **{r: {"A"} for r in rare},
+               **{d: {"A", "B"} for d in duo}}
+
+    def candidates(batch):
+        out = {"A", "B", "C"}
+        for d in batch:
+            out &= holders[d]
+        return out
+
+    ids = common[:3] + rare + common[3:] + duo   # manifest order
+    ranges = _schedule_ranges(ids, candidates, 2, True)
+    order = [len(candidates(r)) for r in ranges]
+    assert order == sorted(order), order          # rarest first
+    assert ranges[0] == rare[:2] and ranges[1] == rare[2:]
+    assert ranges[2] == duo
+    # manifest order preserved within the common group
+    assert [d for r in ranges[3:] for d in r] == common
+    # legacy path (no possession): plain manifest-order ranges
+    legacy = _schedule_ranges(ids, candidates, 4, False)
+    assert [d for r in legacy for d in r] == ids
+
+
+def test_rarest_first_fetch_rare_chunks_land_first(tmp_path, rng):
+    """End-to-end: a fetch with a possession map downloads the chunks
+    with the fewest holders before the well-replicated ones."""
+    store, tree = _store_with_tree(tmp_path / "src", rng)
+    ids = store.inventory()
+    assert len(ids) >= 4
+    rare = set(ids[: len(ids) // 3]) or {ids[0]}
+    full_peer = ChunkPeer(store)                  # holds everything
+    partial_store = ChunkStore(tmp_path / "partial")
+    for d in set(ids) - rare:
+        partial_store.put_blob(d, store.get_blob(d))
+    # the partial peer is throttled: the fast full peer works through
+    # its (rarest-first) queue while the partial peer crawls, so the
+    # landed order tracks the schedule up to a couple of slow chunks
+    partial_peer = ChunkPeer(partial_store, stall_chunks=0,
+                             stall_s=0.05)
+    possession = {full_peer.addr: frozenset(ids),
+                  partial_peer.addr: frozenset(set(ids) - rare)}
+    landed: list[str] = []
+    try:
+        swarm_fetch([full_peer.addr, partial_peer.addr],
+                    tmp_path / "dst", step=5, range_chunks=2,
+                    possession=possession,
+                    progress=lambda d, n: landed.append(d))
+    finally:
+        full_peer.close()
+        partial_peer.close()
+    assert set(landed) == set(ids)
+    # the full peer (sole holder of the rare set) pops the rare ranges
+    # FIRST: every rare chunk lands in the opening stretch, not after
+    # the well-replicated tail
+    last_rare = max(i for i, d in enumerate(landed) if d in rare)
+    assert last_rare < len(rare) + 4, (last_rare, landed)
