@@ -60,6 +60,88 @@ def _run_engine(kind, model, params, trace):
     return engine.perf_summary(), [r.out_tokens for r in warm]
 
 
+def _run_swarm(cfg, params, trace, cont_out, smoke):
+    """Swarm-serving leg: a K-stage x 2-replica fleet serves a subset
+    of the trace through a ``SwarmRouter``; a mid-chain stage holder is
+    crashed partway through the timed pass, so the numbers include one
+    real failover + re-prefill recovery. Outputs must stay
+    bit-identical to the continuous engine's."""
+    import tempfile
+    import time
+    from pathlib import Path
+
+    from repro.checkpointing import (ChunkGossip, ChunkStore,
+                                     PeerConnPool)
+    from repro.models import registry
+    from repro.serving import StageServer, SwarmRouter, publish_stages
+
+    k = 2
+    # short-prompt subset: keeps the per-bucket stage compiles cheap
+    subset = [(i, prompt, mnew) for i, (rid, prompt, mnew)
+              in enumerate(trace) if len(prompt) < 24]
+    subset = subset[:4 if smoke else 8]
+    stages = registry.make_stages(cfg, k)
+    servers, pool, gossip = {}, None, None
+    with tempfile.TemporaryDirectory() as td:
+        root = Path(td)
+        seed_store = ChunkStore(root / "seed")
+        publish_stages(seed_store, cfg, params, k)
+        try:
+            for sid in range(k):
+                sp = stages[sid].slice_params(params)
+                for r in range(2):
+                    srv = StageServer(
+                        cfg, ChunkStore(root / f"srv_{sid}_{r}"),
+                        k_stages=k, max_len=MAX_LEN)
+                    srv.serve_stage(sid, sp)
+                    servers[(sid, r)] = srv
+            pool = PeerConnPool(timeout=10.0)
+            gossip = ChunkGossip([s.addr for s in servers.values()],
+                                 timeout=10.0, pool=pool)
+            gossip.poll_once()
+
+            def pass_over(tag):
+                router = SwarmRouter(k, gossip, timeout=10.0,
+                                     pool=pool, max_len=MAX_LEN)
+                t0 = time.perf_counter()
+                outs = [router.generate(p.tolist(), mnew,
+                                        rid=f"{tag}{i}")
+                        for i, p, mnew in subset]
+                return outs, time.perf_counter() - t0, router.stats
+
+            pass_over("warm")               # pays the stage compiles
+            # crash the stage-1 holder the router will pick (lowest
+            # address wins), so the timed pass hits a real failover
+            picked = min(servers[(1, r)].addr for r in range(2))
+            victim = next(s for s in servers.values()
+                          if s.addr == picked)
+            victim.crash_after = victim.served_chunks + 3
+            outs, wall, st = pass_over("t")  # ...during the timed pass
+            identical = outs == [cont_out[i] for i, _, _ in subset]
+            assert identical, \
+                "swarm vs continuous greedy outputs diverged"
+            ntok = sum(len(o) for o in outs)
+            return {
+                "k_stages": k, "replicas": 2,
+                "requests": len(subset), "tokens_out": ntok,
+                "tokens_per_s": ntok / max(wall, 1e-9),
+                "failovers": st["failovers"],
+                "recoveries": st["recoveries"],
+                "replayed_tokens": st["replayed_tokens"],
+                "recovery_latency_s": st["recovery_s"]
+                / max(1, st["recoveries"]),
+                "pool_reused": pool.stats["reused"],
+                "greedy_bit_identical": identical,
+            }
+        finally:
+            if gossip is not None:
+                gossip.stop()
+            if pool is not None:
+                pool.close()
+            for s in servers.values():
+                s.close()
+
+
 def run_json(smoke: bool = False):
     from repro.configs import CONFIGS
     from repro.models.registry import get_model
@@ -77,6 +159,8 @@ def run_json(smoke: bool = False):
     # equivalence must fail the CI smoke step, not ship green
     assert identical, "wave vs continuous greedy outputs diverged"
 
+    swarm = _run_swarm(cfg, params, trace, cont_out, smoke)
+
     speedup = cont["tokens_per_s"] / wave["tokens_per_s"]
     p95_speedup = wave["latency_p95_s"] / cont["latency_p95_s"]
     payload = {"serve": {
@@ -84,6 +168,7 @@ def run_json(smoke: bool = False):
         "decode_chunk": DECODE_CHUNK, "requests": len(trace),
         "smoke": smoke,
         "wave": wave, "continuous": cont,
+        "swarm": swarm,
         "tokens_per_s_speedup": speedup,
         "p95_latency_speedup": p95_speedup,
         "greedy_bit_identical": identical,
@@ -98,6 +183,12 @@ def run_json(smoke: bool = False):
             f"occ={s['slot_occupancy']:.2f}")
     rows.append(f"serve_speedup,0,{speedup:.2f}x_tok/s "
                 f"{p95_speedup:.2f}x_p95 bit_identical={identical}")
+    rows.append(
+        f"serve_swarm,{swarm['recovery_latency_s'] * 1e6:.1f},"
+        f"tok/s={swarm['tokens_per_s']:.1f} "
+        f"failovers={swarm['failovers']} "
+        f"recovery={swarm['recovery_latency_s'] * 1e3:.0f}ms "
+        f"bit_identical={swarm['greedy_bit_identical']}")
     return rows, payload
 
 

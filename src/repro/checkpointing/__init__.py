@@ -7,8 +7,9 @@ from repro.checkpointing.gossip import (ChunkGossip, socket_transport,
 from repro.checkpointing.p2p import (CheckpointServer, ChecksumError,
                                      EmptyPeerError, FetchError,
                                      PeerClosedError, PeerConn,
-                                     RetryableFetchError,
-                                     fetch_checkpoint)
+                                     PeerConnPool, PeerTimeoutError,
+                                     RetryPolicy, RetryableFetchError,
+                                     fetch_checkpoint, retry_call)
 from repro.checkpointing.snapshot import AsyncSnapshotter
 from repro.checkpointing.store import (ChunkCorruptError,
                                        ChunkMissingError, ChunkStore)
@@ -19,9 +20,10 @@ from repro.checkpointing.swarm import (ChunkPeer, NoPeersError,
 
 __all__ = [
     "save", "save_async", "restore", "latest_step",
-    "CheckpointServer", "fetch_checkpoint", "PeerConn",
+    "CheckpointServer", "fetch_checkpoint", "PeerConn", "PeerConnPool",
     "FetchError", "PeerClosedError", "ChecksumError", "EmptyPeerError",
-    "RetryableFetchError",
+    "RetryableFetchError", "PeerTimeoutError",
+    "RetryPolicy", "retry_call",
     "ChunkStore", "ChunkCorruptError", "ChunkMissingError",
     "DeltaCheckpointer", "DeltaConfig", "DeltaChainError",
     "ChainReplayer",

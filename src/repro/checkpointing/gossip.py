@@ -31,22 +31,40 @@ import threading
 import time
 from typing import Callable, Iterable
 
-from repro.checkpointing.p2p import FetchError, PeerConn
+from repro.checkpointing.p2p import (FetchError, PeerConn, PeerConnPool,
+                                     RetryPolicy, retry_call)
 
 Addr = tuple  # (host, port)
 
 
-def socket_transport(timeout: float = 5.0
+def socket_transport(timeout: float = 5.0, *,
+                     pool: PeerConnPool | None = None,
+                     policy: RetryPolicy | None = None
                      ) -> Callable[[Addr, dict], dict]:
-    """One framed TCP round-trip per request (fresh connection, so a
-    crashed peer costs one refused connect, not a wedged socket)."""
+    """One framed TCP round-trip per request.
 
-    def send(addr: Addr, payload: dict) -> dict:
+    Without a ``pool``: a fresh connection per poll (a crashed peer
+    costs one refused connect, not a wedged socket). With one: the
+    connection is leased from the capped per-peer pool and reused
+    across rounds; a conn that errored is discarded, so a stale pooled
+    socket costs one retry, never a wedged round. ``policy`` wraps the
+    round-trip in the shared retry/backoff schedule (each retry leases
+    a fresh conn — gossip ops are read-only, hence idempotent)."""
+
+    def once(addr: Addr, payload: dict) -> dict:
+        if pool is not None:
+            with pool.lease(addr) as conn:
+                return conn.request_json(payload)
         conn = PeerConn(addr, timeout)
         try:
             return conn.request_json(payload)
         finally:
             conn.close()
+
+    def send(addr: Addr, payload: dict) -> dict:
+        if policy is None:
+            return once(addr, payload)
+        return retry_call(lambda: once(addr, payload), policy=policy)
 
     return send
 
@@ -68,8 +86,11 @@ class ChunkGossip:
 
     def __init__(self, peers: Iterable[Addr], *,
                  transport: Callable[[Addr, dict], dict] | None = None,
-                 timeout: float = 5.0, expire_polls: int = 3):
-        self.transport = transport or socket_transport(timeout)
+                 timeout: float = 5.0, expire_polls: int = 3,
+                 pool: "PeerConnPool | None" = None,
+                 policy: RetryPolicy | None = None):
+        self.transport = transport or socket_transport(
+            timeout, pool=pool, policy=policy)
         self.expire_polls = int(expire_polls)
         self._views: dict[Addr, PeerView] = {}
         self._lock = threading.Lock()

@@ -27,13 +27,18 @@ fetch, see ``repro.checkpointing.swarm``.
 """
 from __future__ import annotations
 
+import collections
+import contextlib
+import dataclasses
 import hashlib
 import io
 import json
 import pathlib
+import random
 import socket
 import struct
 import threading
+import time
 
 
 class FetchError(Exception):
@@ -58,6 +63,60 @@ class RetryableFetchError(FetchError, IOError):
     the fetch is safe to retry immediately."""
 
 
+class PeerTimeoutError(FetchError, TimeoutError):
+    """A framed-TCP op exceeded its deadline (stalled peer or link).
+    Raised instead of the raw ``socket.timeout`` so callers can treat a
+    stall exactly like a crash — typed, catch-and-failover."""
+
+
+# -- retry / backoff ----------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Shared retry/backoff schedule for framed-TCP ops.
+
+    ``attempts`` total tries; between failures sleep
+    ``min(max_delay, base_delay * 2**attempt)`` scaled by a uniform
+    jitter in ``[1, 1 + jitter)`` so a fleet of retriers doesn't
+    thundering-herd a recovering peer. ``retry_on`` lists the exception
+    families worth retrying; ``no_retry`` carves out subclasses that
+    are definitive answers, not transport noise (``EmptyPeerError`` is
+    a FileNotFoundError and therefore an OSError — without the carve-
+    out it would be retried pointlessly)."""
+
+    attempts: int = 3
+    base_delay: float = 0.05
+    max_delay: float = 2.0
+    jitter: float = 0.5
+    retry_on: tuple = (PeerClosedError, ChecksumError,
+                       RetryableFetchError, PeerTimeoutError, OSError)
+    no_retry: tuple = (EmptyPeerError,)
+
+
+def retry_call(fn, *, policy: RetryPolicy | None = None,
+               describe: str = "", sleep=time.sleep, rng=None):
+    """Run ``fn()`` under ``policy``; re-raises the last error once the
+    attempts are exhausted. ``sleep``/``rng`` are injectable for
+    deterministic tests (``rng.random()`` in [0, 1) drives jitter)."""
+    policy = policy or RetryPolicy()
+    roll = rng.random if rng is not None else random.random
+    last: BaseException | None = None
+    for attempt in range(max(1, policy.attempts)):
+        try:
+            return fn()
+        except policy.no_retry:
+            raise
+        except policy.retry_on as e:
+            last = e
+            if attempt + 1 >= max(1, policy.attempts):
+                raise
+            delay = min(policy.max_delay,
+                        policy.base_delay * (2 ** attempt))
+            sleep(delay * (1.0 + policy.jitter * roll()))
+    raise last  # pragma: no cover — loop always returns or raises
+
+
 def _send_frame(sock: socket.socket, payload: bytes) -> None:
     digest = hashlib.sha256(payload).digest()
     sock.sendall(struct.pack("!Q", len(payload)) + digest + payload)
@@ -65,31 +124,130 @@ def _send_frame(sock: socket.socket, payload: bytes) -> None:
 
 class PeerConn:
     """One framed TCP connection to a peer speaking the JSON-op
-    protocol (``ChunkPeer`` and the gossip layer ride on it): send a
-    JSON request frame, read response frames. Shared by ``swarm_fetch``,
-    ``ChunkGossip`` and ``StreamingFetcher`` so every transport-level
-    failure surfaces as the same typed ``FetchError`` family."""
+    protocol (``ChunkPeer``, the gossip layer and the swarm-serve stage
+    RPCs ride on it): send a JSON request frame, read response frames.
+    Shared by ``swarm_fetch``, ``ChunkGossip``, ``StreamingFetcher``
+    and ``StageServer`` clients so every transport-level failure
+    surfaces as the same typed ``FetchError`` family — a deadline blown
+    anywhere becomes ``PeerTimeoutError``, never a raw socket.timeout."""
 
     def __init__(self, addr: tuple, timeout: float):
         self.addr = tuple(addr)
-        self.sock = socket.create_connection(addr, timeout=timeout)
+        with self._timeouts_typed():
+            self.sock = socket.create_connection(addr, timeout=timeout)
         self.sock.settimeout(timeout)
 
+    @contextlib.contextmanager
+    def _timeouts_typed(self):
+        try:
+            yield
+        except socket.timeout as e:
+            raise PeerTimeoutError(
+                f"peer {getattr(self, 'addr', '?')} timed out") from e
+
+    def send(self, payload: dict) -> None:
+        with self._timeouts_typed():
+            _send_frame(self.sock, json.dumps(payload).encode())
+
+    def send_bytes(self, blob: bytes) -> None:
+        with self._timeouts_typed():
+            _send_frame(self.sock, blob)
+
     def request(self, payload: dict) -> bytes:
-        _send_frame(self.sock, json.dumps(payload).encode())
-        return _recv_frame(self.sock)
+        self.send(payload)
+        return self.recv_frame()
 
     def request_json(self, payload: dict) -> dict:
         return json.loads(self.request(payload))
 
     def recv_frame(self) -> bytes:
-        return _recv_frame(self.sock)
+        with self._timeouts_typed():
+            return _recv_frame(self.sock)
+
+    def recv_json(self) -> dict:
+        return json.loads(self.recv_frame())
 
     def close(self) -> None:
         try:
             self.sock.close()
         except OSError:
             pass
+
+
+class PeerConnPool:
+    """Capped per-peer pool of reusable ``PeerConn``s.
+
+    ``swarm_fetch`` rounds, gossip polls and stage RPCs used to open
+    one fresh connection per peer per round — too chatty for 100-peer
+    swarms. The pool keeps up to ``max_idle_per_peer`` healthy
+    connections per address; ``lease`` hands one out (creating on
+    miss) and returns it on clean exit, discarding it if the op
+    raised (a conn that saw a transport error is never reused).
+    Thread-safe; a connection is owned exclusively while leased."""
+
+    def __init__(self, timeout: float = 20.0,
+                 max_idle_per_peer: int = 2):
+        self.timeout = timeout
+        self.max_idle_per_peer = int(max_idle_per_peer)
+        self._idle: dict[tuple, collections.deque] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+        self.stats = {"created": 0, "reused": 0, "discarded": 0}
+
+    def acquire(self, addr: tuple) -> PeerConn:
+        addr = tuple(addr)
+        with self._lock:
+            q = self._idle.get(addr)
+            if q:
+                self.stats["reused"] += 1
+                return q.popleft()
+        conn = PeerConn(addr, self.timeout)
+        with self._lock:
+            self.stats["created"] += 1
+        return conn
+
+    def release(self, conn: PeerConn, *, healthy: bool = True) -> None:
+        with self._lock:
+            q = self._idle.setdefault(conn.addr, collections.deque())
+            if healthy and not self._closed and \
+                    len(q) < self.max_idle_per_peer:
+                q.append(conn)
+                return
+            self.stats["discarded"] += 1
+        conn.close()
+
+    @contextlib.contextmanager
+    def lease(self, addr: tuple):
+        conn = self.acquire(addr)
+        try:
+            yield conn
+        except BaseException:
+            self.release(conn, healthy=False)
+            raise
+        else:
+            self.release(conn)
+
+    def idle_count(self, addr: tuple | None = None) -> int:
+        with self._lock:
+            if addr is not None:
+                return len(self._idle.get(tuple(addr), ()))
+            return sum(len(q) for q in self._idle.values())
+
+    def discard_peer(self, addr: tuple) -> None:
+        """Drop every idle conn to a peer known dead."""
+        with self._lock:
+            q = self._idle.pop(tuple(addr), None)
+        for conn in (q or ()):
+            conn.close()
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            qs = list(self._idle.values())
+            self._idle.clear()
+        for q in qs:
+            for conn in q:
+                conn.close()
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:

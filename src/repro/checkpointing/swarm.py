@@ -43,8 +43,9 @@ import time
 from typing import Callable, Sequence
 
 from repro.checkpointing import delta as _delta
-from repro.checkpointing.p2p import (FetchError, PeerConn, _recv_frame,
-                                     _send_frame)
+from repro.checkpointing.p2p import (FetchError, PeerConn, PeerConnPool,
+                                     RetryPolicy, _recv_frame,
+                                     _send_frame, retry_call)
 from repro.checkpointing.store import ChunkCorruptError, ChunkStore
 
 Addr = tuple  # (host, port)
@@ -148,39 +149,7 @@ class ChunkPeer:
             conn.settimeout(10.0)
             while not self._stop.is_set():
                 req = json.loads(_recv_frame(conn))
-                op = req.get("op")
-                if op == "latest":
-                    _send_frame(conn, json.dumps(
-                        {"step": self.store.latest_step()}).encode())
-                elif op == "manifest":
-                    try:
-                        m = self.store.load_manifest(req["step"])
-                        pins.append(self.store.pin_chain(req["step"]))
-                        _send_frame(conn, json.dumps(m).encode())
-                    except FileNotFoundError:
-                        _send_frame(conn, json.dumps(
-                            {"error": "no-such-step"}).encode())
-                elif op == "chunks":
-                    for digest in req["ids"]:
-                        if self.crash_after is not None and \
-                                self.served_chunks >= self.crash_after:
-                            self.crash()
-                            return
-                        self._send_chunk(conn, digest)
-                elif op == "digest":
-                    n, sha = self.store.inventory_digest()
-                    _send_frame(conn, json.dumps(
-                        {"latest": self.store.latest_step(),
-                         "n_chunks": n, "sha": sha,
-                         "version": self.store.version}).encode())
-                elif op == "inventory":
-                    _send_frame(conn, json.dumps(
-                        {"ids": self.store.inventory()}).encode())
-                elif op == "have":
-                    _send_frame(conn, json.dumps(
-                        {"have": [int(self.store.has(d))
-                                  for d in req["ids"]]}).encode())
-                else:
+                if not self._handle_op(conn, req, pins):
                     return
         except (FetchError, OSError, json.JSONDecodeError):
             pass
@@ -188,6 +157,48 @@ class ChunkPeer:
             for token in pins:
                 self.store.unpin(token)
             conn.close()
+
+    def _handle_op(self, conn: socket.socket, req: dict,
+                   pins: list[dict]) -> bool:
+        """Dispatch one request frame; returns False to end the
+        session (unknown op or injected crash). Subclasses
+        (``serving.swarm_serve.StageServer``) extend the op set by
+        overriding and delegating unmatched ops here."""
+        op = req.get("op")
+        if op == "latest":
+            _send_frame(conn, json.dumps(
+                {"step": self.store.latest_step()}).encode())
+        elif op == "manifest":
+            try:
+                m = self.store.load_manifest(req["step"])
+                pins.append(self.store.pin_chain(req["step"]))
+                _send_frame(conn, json.dumps(m).encode())
+            except FileNotFoundError:
+                _send_frame(conn, json.dumps(
+                    {"error": "no-such-step"}).encode())
+        elif op == "chunks":
+            for digest in req["ids"]:
+                if self.crash_after is not None and \
+                        self.served_chunks >= self.crash_after:
+                    self.crash()
+                    return False
+                self._send_chunk(conn, digest)
+        elif op == "digest":
+            n, sha = self.store.inventory_digest()
+            _send_frame(conn, json.dumps(
+                {"latest": self.store.latest_step(),
+                 "n_chunks": n, "sha": sha,
+                 "version": self.store.version}).encode())
+        elif op == "inventory":
+            _send_frame(conn, json.dumps(
+                {"ids": self.store.inventory()}).encode())
+        elif op == "have":
+            _send_frame(conn, json.dumps(
+                {"have": [int(self.store.has(d))
+                          for d in req["ids"]]}).encode())
+        else:
+            return False
+        return True
 
     def crash(self) -> None:
         """Die silently mid-transfer (fault injection)."""
@@ -356,7 +367,9 @@ def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
                 *, step: int | None = None, range_chunks: int = 8,
                 timeout: float = 20.0,
                 possession: dict | None = None,
-                progress: Callable[[str, int], None] | None = None
+                progress: Callable[[str, int], None] | None = None,
+                pool: PeerConnPool | None = None,
+                retry: RetryPolicy | None = None
                 ) -> dict:
     """Fetch the newest checkpoint (manifest chain + all missing
     chunks) from ``peers`` into ``store``, striping disjoint chunk
@@ -369,6 +382,14 @@ def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
     ``progress(chunk_id, n_bytes)`` fires after each verified chunk
     lands (the streaming assembler's hook).
 
+    ``pool`` (optional ``PeerConnPool``): connections are leased
+    instead of opened fresh and returned healthy at the end, so
+    repeated fetch rounds (streaming retries, multi-step catch-up)
+    stop paying one TCP setup per peer per round. ``retry`` wraps the
+    initial per-peer connect in the shared backoff schedule — the only
+    idempotent spot worth retrying here (a mid-stream failure already
+    reassigns to surviving holders, which IS the retry).
+
     Returns stats: ``{"step", "chunks_fetched", "bytes_fetched",
     "per_peer", "reassigned_ranges", "dead_peers"}``.
     """
@@ -376,10 +397,20 @@ def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
         store = ChunkStore(store)
     failures: dict[Addr, str] = {}
     conns: list[PeerConn] = []
+
+    def _connect(addr: Addr) -> PeerConn:
+        if pool is not None:
+            return pool.acquire(addr)
+        return PeerConn(addr, timeout)
+
     for addr in peers:
         try:
-            conns.append(PeerConn(addr, timeout))
-        except OSError as e:
+            if retry is not None:
+                conns.append(retry_call(
+                    lambda a=addr: _connect(a), policy=retry))
+            else:
+                conns.append(_connect(addr))
+        except (FetchError, OSError) as e:
             failures[tuple(addr)] = f"connect: {e}"
     try:
         # -- pick the newest step any peer holds -------------------------
@@ -387,12 +418,29 @@ def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
         for c in list(conns):
             try:
                 got = json.loads(c.request({"op": "latest"}))["step"]
-                if got is not None:
-                    latest[c.addr] = got
             except (FetchError, OSError) as e:
-                failures[c.addr] = f"latest: {e}"
                 conns.remove(c)
                 c.close()
+                if pool is not None:
+                    # a pooled conn can be stale (peer restarted since
+                    # the last round): one fresh-socket retry before
+                    # declaring the peer dead
+                    try:
+                        c = PeerConn(c.addr, pool.timeout)
+                        conns.append(c)
+                        got = json.loads(
+                            c.request({"op": "latest"}))["step"]
+                    except (FetchError, OSError) as e2:
+                        if c in conns:
+                            conns.remove(c)
+                        c.close()
+                        failures[c.addr] = f"latest: {e2}"
+                        continue
+                else:
+                    failures[c.addr] = f"latest: {e}"
+                    continue
+            if got is not None:
+                latest[c.addr] = got
         if step is None:
             if not latest:
                 raise NoPeersError("no reachable peer holds a "
@@ -512,7 +560,12 @@ def swarm_fetch(peers: Sequence[Addr], store: ChunkStore | str,
         return stats
     finally:
         for c in conns:
-            c.close()
+            if pool is not None:
+                # conns that saw a transport error are in ``failures``
+                # — never put those back in rotation
+                pool.release(c, healthy=c.addr not in failures)
+            else:
+                c.close()
 
 
 def recover(peers: Sequence[Addr], store_root: str | pathlib.Path,

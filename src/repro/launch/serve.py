@@ -7,11 +7,108 @@ engine, with tokens/sec and request-latency percentiles at exit.
 ``--engine wave`` keeps the legacy static batcher for A/B runs;
 ``--attn-impl pallas`` routes decode attention through the Pallas
 flash-decode kernel (interpret mode off-TPU).
+
+``--swarm`` demos fault-tolerant swarm inference instead: it brings up
+an in-process fleet of ``--stages x --replicas`` StageServers (weight
+distribution via the chunk swarm), routes the same requests through a
+``SwarmRouter``, crashes one stage holder mid-run, and checks the
+emitted tokens stay bit-identical to the single-host engine:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+      --reduced --swarm --stages 2 --replicas 2 --requests 4
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+
+
+def _run_swarm(args, cfg, model, params):
+    import tempfile
+    import time
+    from pathlib import Path
+
+    import numpy as np
+
+    from repro.checkpointing import (ChunkGossip, ChunkPeer, ChunkStore,
+                                     PeerConnPool)
+    from repro.serving import (StageServer, SwarmRouter, publish_stages)
+    from repro.serving.engine import ContinuousEngine, Request
+    from repro.models import registry
+
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(2, cfg.vocab,
+                            size=max(1, int(rng.integers(
+                                args.prompt_len // 2,
+                                args.prompt_len + 1)))).tolist()
+               for _ in range(args.requests)]
+
+    # single-host greedy reference
+    engine = ContinuousEngine(model, params, batch_slots=args.slots,
+                              max_len=args.max_len)
+    reqs = [Request(rid=i, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=args.max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    reference = [list(r.out_tokens) for r in reqs]
+
+    stages = registry.make_stages(cfg, args.stages)
+    servers, pool, gossip = {}, None, None
+    with tempfile.TemporaryDirectory() as td:
+        root = Path(td)
+        seed_store = ChunkStore(root / "seed")
+        publish_stages(seed_store, cfg, params, args.stages)
+        seed_peer = ChunkPeer(seed_store)
+        try:
+            for sid in range(args.stages):
+                sp = stages[sid].slice_params(params)
+                for r in range(args.replicas):
+                    srv = StageServer(
+                        cfg, ChunkStore(root / f"srv_{sid}_{r}"),
+                        k_stages=args.stages, max_len=args.max_len)
+                    srv.serve_stage(sid, sp)
+                    servers[(sid, r)] = srv
+            pool = PeerConnPool(timeout=args.timeout)
+            gossip = ChunkGossip([s.addr for s in servers.values()],
+                                 timeout=args.timeout, pool=pool)
+            gossip.poll_once()
+            router = SwarmRouter(args.stages, gossip,
+                                 timeout=args.timeout, pool=pool,
+                                 max_len=args.max_len)
+            if args.replicas > 1 and args.requests > 1:
+                # crash a mid-chain holder a few responses into the
+                # run: the router must fail over and re-prefill
+                victim = servers[(args.stages // 2, 0)]
+                victim.crash_after = victim.served_chunks + 3
+            t0 = time.perf_counter()
+            outs = [router.generate(p, args.max_new, rid=f"req{i}",
+                                    eos_id=engine.eos_id)
+                    for i, p in enumerate(prompts)]
+            wall = time.perf_counter() - t0
+            st = router.stats
+            ntok = sum(len(o) for o in outs)
+            identical = outs == reference
+            print(f"swarm stages={args.stages} replicas={args.replicas} "
+                  f"requests={len(outs)} tokens={ntok} "
+                  f"tok/s={ntok / max(wall, 1e-9):.1f}")
+            print(f"failovers={st['failovers']} "
+                  f"recoveries={st['recoveries']} "
+                  f"replayed_tokens={st['replayed_tokens']} "
+                  f"recovery_s={st['recovery_s']:.3f} "
+                  f"pool_reused={pool.stats['reused']}")
+            print(f"bit_identical_to_engine={identical}")
+            if not identical:
+                raise SystemExit("swarm outputs diverged from engine")
+        finally:
+            if gossip is not None:
+                gossip.stop()
+            if pool is not None:
+                pool.close()
+            for s in servers.values():
+                s.close()
+            seed_peer.close()
 
 
 def main():
@@ -33,6 +130,11 @@ def main():
     ap.add_argument("--no-bucket", action="store_true",
                     help="disable power-of-two prompt pad bucketing")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--swarm", action="store_true",
+                    help="fault-tolerant swarm-inference demo")
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--timeout", type=float, default=5.0)
     args = ap.parse_args()
     if args.engine == "wave" and args.temperature > 0:
         ap.error("--engine wave is greedy-only; use --engine "
@@ -52,6 +154,9 @@ def main():
         cfg = dataclasses.replace(cfg, decode_attn_impl=args.attn_impl)
     model = get_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(args.seed))
+    if args.swarm:
+        _run_swarm(args, cfg, model, params)
+        return
     engine = make_engine(args.engine, model, params,
                          batch_slots=args.slots, max_len=args.max_len,
                          bucket_prompts=not args.no_bucket,

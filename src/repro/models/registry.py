@@ -189,6 +189,91 @@ def _hybrid_def(cfg: ArchConfig) -> ModelDef:
                     functools.partial(_lm_input_specs, cfg))
 
 
+# -- pipeline-stage partition (swarm serving) ---------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StageDef:
+    """One contiguous-layer pipeline stage of a decoder-only LM.
+
+    A stage owns layers ``[lo, hi)`` of the scan stack; the first stage
+    additionally owns the embedding (+ any dense-prefix layers), the
+    last owns the final norm + LM head. ``slice_params`` extracts the
+    stage's parameter subtree from the full tree; ``init_cache``
+    allocates the stage-local KV cache; ``prefill``/``decode`` run the
+    stage forward (tokens in / logits out at the chain ends, (B, S, D)
+    activations in between). Composing all stages in order is
+    bit-identical to the monolithic ``ModelDef.prefill``/``decode`` —
+    both are wrappers over the same ``stage_prefill``/``stage_decode``.
+    """
+    cfg: ArchConfig
+    index: int
+    n_stages: int
+    lo: int
+    hi: int
+    slice_params: Callable[[Any], Any]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., tuple[jnp.ndarray, Any]]
+    decode: Callable[..., tuple[jnp.ndarray, Any]]
+
+    @property
+    def first(self) -> bool:
+        return self.index == 0
+
+    @property
+    def last(self) -> bool:
+        return self.index == self.n_stages - 1
+
+
+def make_stages(cfg: ArchConfig, k_stages: int) -> list[StageDef]:
+    """Partition a decoder-only model into ``k_stages`` pipeline
+    stages. Only the transformer families (dense / moe / vlm) have the
+    stage seam; other families raise a typed error rather than serving
+    garbage."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"stage partition unsupported for family {cfg.family!r} "
+            "(only dense/moe/vlm)")
+    bounds = transformer.stage_bounds(cfg, k_stages)
+    stages = []
+    for i, (lo, hi) in enumerate(bounds):
+        first, last = i == 0, i == k_stages - 1
+
+        def slice_params(params, lo=lo, hi=hi, first=first, last=last):
+            return transformer.slice_stage_params(
+                cfg, params, lo, hi, first=first, last=last)
+
+        def init_cache(batch_size, max_len, lo=lo, hi=hi, first=first):
+            return transformer.init_stage_cache(
+                cfg, batch_size, max_len, lo, hi, first=first)
+
+        def prefill(params, inp, cache, prompt_len=None,
+                    first=first, last=last):
+            return transformer.stage_prefill(
+                cfg, params, inp, cache, first=first, last=last,
+                prompt_len=prompt_len)
+
+        def decode(params, inp, cache, first=first, last=last):
+            return transformer.stage_decode(
+                cfg, params, inp, cache, first=first, last=last)
+
+        stages.append(StageDef(cfg, i, k_stages, lo, hi, slice_params,
+                               init_cache, prefill, decode))
+    return stages
+
+
+def stage_param_specs(cfg: ArchConfig, k_stages: int) -> list:
+    """Abstract (ShapeDtypeStruct) parameter tree per stage — the
+    ``like`` for restoring published stage weights from a chunk store
+    without ever materializing the full model on the restoring host."""
+    model = get_model(cfg)
+    # init returns (params, logical_axes); the axes tree holds strings,
+    # which eval_shape rejects as an output — trace params only
+    specs = jax.eval_shape(lambda k: model.init(k)[0],
+                           jax.random.PRNGKey(0))
+    return [s.slice_params(specs) for s in make_stages(cfg, k_stages)]
+
+
 def get_model(cfg: ArchConfig) -> ModelDef:
     if cfg.family in ("dense", "moe", "vlm"):
         return _lm_def(cfg)

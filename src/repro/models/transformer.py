@@ -194,15 +194,78 @@ def loss_fn(cfg, params, batch, *, remat: bool = False):
 
 
 # -- serving ------------------------------------------------------------------
+#
+# The serving forward is organized around a STAGE-PARTITION seam: the
+# scan-stacked layer block splits into K contiguous-layer stages, each
+# with its own params slice and KV-cache slice, so a model can be
+# served by a chain of machines (see ``serving/swarm_serve.py``). The
+# single-host path is the K=1 specialization — ``prefill`` /
+# ``decode_step`` are thin wrappers over ``stage_prefill`` /
+# ``stage_decode`` with ``first=last=True``, so staged and monolithic
+# serving share every op (bit-identical by construction).
 
 
-def init_cache(cfg, batch_size: int, max_len: int):
-    """Stacked per-layer KV cache (+ unstacked dense-prefix caches)."""
+def n_scan_layers(cfg) -> int:
+    return cfg.n_layers - (cfg.moe.first_dense if cfg.moe else 0)
+
+
+def stage_bounds(cfg, k_stages: int) -> list[tuple[int, int]]:
+    """Contiguous partition of the scan-stacked layers into
+    ``k_stages`` near-equal [lo, hi) ranges (remainder spread over the
+    leading stages). Dense-prefix layers (DeepSeek first-layer-dense)
+    ride with stage 0."""
+    n = n_scan_layers(cfg)
+    if not 1 <= k_stages <= n:
+        raise ValueError(f"k_stages {k_stages} not in [1, {n}]")
+    base, rem = divmod(n, k_stages)
+    bounds, lo = [], 0
+    for i in range(k_stages):
+        hi = lo + base + (1 if i < rem else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def _slice_rows(leaf, lo: int, hi: int):
+    if isinstance(leaf, jax.ShapeDtypeStruct):
+        # abstract trees (jax.eval_shape) slice too, so a stage's
+        # parameter STRUCTURE is available without materializing the
+        # full model (the `like` for restoring published stage weights)
+        return jax.ShapeDtypeStruct((hi - lo,) + tuple(leaf.shape[1:]),
+                                    leaf.dtype)
+    return leaf[lo:hi]
+
+
+def slice_stage_params(cfg, params, lo: int, hi: int, *, first: bool,
+                       last: bool):
+    """The parameter subtree one stage needs: its layer-stack rows,
+    plus the embedding (+ dense prefix) on the first stage and the
+    final norm + head on the last (tied embeddings put the embedding
+    matrix on the last stage too)."""
+    sp = {"layers": jax.tree.map(lambda l: _slice_rows(l, lo, hi),
+                                 params["layers"])}
+    n_dense_prefix = cfg.moe.first_dense if cfg.moe else 0
+    if first:
+        sp["embed"] = params["embed"]
+        for i in range(n_dense_prefix):
+            sp[f"dense{i}"] = params[f"dense{i}"]
+    if last:
+        sp["ln_f"] = params["ln_f"]
+        if cfg.tie_embeddings:
+            sp["embed"] = params["embed"]
+        else:
+            sp["lm_head"] = params["lm_head"]
+    return sp
+
+
+def _init_cache_range(cfg, batch_size: int, max_len: int, lo: int,
+                      hi: int, *, first: bool):
     hd = _head_dim(cfg)
     s_max = min(max_len, cfg.sliding_window) if cfg.sliding_window \
         else max_len
-    n_dense_prefix = cfg.moe.first_dense if cfg.moe else 0
-    n_scan = cfg.n_layers - n_dense_prefix
+    n_dense_prefix = (cfg.moe.first_dense if cfg.moe else 0) if first \
+        else 0
+    n_scan = hi - lo
 
     def one(_):
         return attn.KVCache.init(batch_size, s_max, cfg.n_kv_heads, hd,
@@ -215,21 +278,51 @@ def init_cache(cfg, batch_size: int, max_len: int):
     return {"scan": scan_cache, "prefix": prefix}
 
 
-def prefill(cfg, params, tokens, cache, *, frontend=None,
-            prompt_len=None):
-    """Run the full prompt, fill the cache -> (last-token logits, cache).
+def init_cache(cfg, batch_size: int, max_len: int):
+    """Stacked per-layer KV cache (+ unstacked dense-prefix caches)."""
+    return _init_cache_range(cfg, batch_size, max_len, 0,
+                             n_scan_layers(cfg), first=True)
+
+
+def init_stage_cache(cfg, batch_size: int, max_len: int, lo: int,
+                     hi: int, *, first: bool):
+    """Per-stage cache: KV stack for layers [lo, hi) (+ the dense
+    prefix caches when this is the first stage)."""
+    return _init_cache_range(cfg, batch_size, max_len, lo, hi,
+                             first=first)
+
+
+def _head_logits(cfg, params, x):
+    """Final norm + LM head over (B, 1, D) -> (B, V)."""
+    x = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+
+
+def stage_prefill(cfg, params, inp, cache, *, first: bool, last: bool,
+                  frontend=None, prompt_len=None):
+    """Prefill one stage's layers over the full (right-padded) prompt.
+
+    ``inp``: (B, S) tokens when ``first`` else (B, S, D) activations
+    from the previous stage. Returns ``(out, cache)`` where ``out`` is
+    the (B, V) last-token logits when ``last`` (gathered at each
+    slot's true ``prompt_len - 1``) else the full-width (B, S, D)
+    activations to stream to the next stage.
 
     ``prompt_len``: optional (B,) true per-slot prompt lengths. Prompts
     are then expected RIGHT-padded to the (bucketed) common width —
-    causal attention never lets a real position see the pad tail, and
-    the SSD/conv paths mask it (see ssm.apply_mamba2) — so the returned
-    logits are gathered at each slot's true last token and the cache
-    lengths are set per slot. This is what lets admission pad to
-    power-of-two buckets (capping recompiles) without changing outputs.
+    causal attention never lets a real position see the pad tail — so
+    the cache lengths are set per slot. This is what lets admission pad
+    to power-of-two buckets (capping recompiles) without changing
+    outputs.
     """
-    x = common.embedding_lookup(params["embed"], tokens)
-    if frontend is not None:
-        x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+    if first:
+        x = common.embedding_lookup(params["embed"], inp)
+        if frontend is not None:
+            x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+    else:
+        x = inp
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     is_moe = cfg.moe is not None
@@ -272,9 +365,8 @@ def prefill(cfg, params, tokens, cache, *, frontend=None,
                                         new.length.shape))
         return new
 
-    n_dense_prefix = cfg.moe.first_dense if is_moe else 0
     new_prefix = []
-    for i in range(n_dense_prefix):
+    for i in range(len(cache["prefix"])):
         x, kv, _ = _layer(cfg, params[f"dense{i}"], x,
                           positions=positions, is_moe=False,
                           return_kv=True, serving=True)
@@ -288,35 +380,36 @@ def prefill(cfg, params, tokens, cache, *, frontend=None,
 
     x, new_scan = jax.lax.scan(body, x, (params["layers"],
                                          cache["scan"]))
+    new_cache = {"scan": new_scan, "prefix": new_prefix}
+    if not last:
+        return x, new_cache
     if prompt_len is None:
         x_last = x[:, -1:]
     else:
         idx = (prompt_len.astype(jnp.int32) - 1)[:, None, None]
         x_last = jnp.take_along_axis(x, idx, axis=1)
-    x = common.rms_norm(x_last, params["ln_f"], cfg.norm_eps)
-    head = (params["embed"].T if cfg.tie_embeddings
-            else params["lm_head"])
-    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
-    return logits, {"scan": new_scan, "prefix": new_prefix}
+    return _head_logits(cfg, params, x_last), new_cache
 
 
-def decode_step(cfg, params, token, cache):
-    """One decode step. token: (B, 1) -> (logits (B, V), cache).
+def stage_decode(cfg, params, inp, cache, *, first: bool, last: bool):
+    """One decode step through one stage's layers.
 
-    Positions come from the PER-SLOT cache lengths, so slots at
-    different depths (continuous batching) each get the right RoPE
-    phase."""
-    x = common.embedding_lookup(params["embed"], token)
-    b = x.shape[0]
+    ``inp``: (B, 1) token ids when ``first`` else (B, 1, D) activations.
+    Returns ``(out, cache)``: (B, V) logits when ``last`` else (B, 1, D)
+    activations. Positions come from the PER-SLOT cache lengths, so
+    slots at different depths (continuous batching) each get the right
+    RoPE phase — and every stage derives them independently from its
+    own cache, which stays consistent across a chain because all
+    stages advance in lockstep."""
+    x = common.embedding_lookup(params["embed"], inp) if first else inp
     is_moe = cfg.moe is not None
     rolling = cfg.sliding_window is not None
     length = (cache["scan"].length[0] if cache["scan"] is not None
               else cache["prefix"][0].length)          # (B,)
     positions = length[:, None].astype(jnp.int32)
 
-    n_dense_prefix = cfg.moe.first_dense if is_moe else 0
     new_prefix = []
-    for i in range(n_dense_prefix):
+    for i in range(len(cache["prefix"])):
         x2, c, _ = _layer(cfg, params[f"dense{i}"], x,
                           positions=positions, is_moe=False,
                           layer_cache=cache["prefix"][i], rolling=rolling,
@@ -333,8 +426,23 @@ def decode_step(cfg, params, token, cache):
 
     x, new_scan = jax.lax.scan(body, x, (params["layers"],
                                          cache["scan"]))
-    x = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
-    head = (params["embed"].T if cfg.tie_embeddings
-            else params["lm_head"])
-    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
-    return logits, {"scan": new_scan, "prefix": new_prefix}
+    new_cache = {"scan": new_scan, "prefix": new_prefix}
+    if not last:
+        return x, new_cache
+    return _head_logits(cfg, params, x), new_cache
+
+
+def prefill(cfg, params, tokens, cache, *, frontend=None,
+            prompt_len=None):
+    """Run the full prompt, fill the cache -> (last-token logits,
+    cache). The K=1 stage specialization — see ``stage_prefill``."""
+    return stage_prefill(cfg, params, tokens, cache, first=True,
+                         last=True, frontend=frontend,
+                         prompt_len=prompt_len)
+
+
+def decode_step(cfg, params, token, cache):
+    """One decode step. token: (B, 1) -> (logits (B, V), cache). The
+    K=1 stage specialization — see ``stage_decode``."""
+    return stage_decode(cfg, params, token, cache, first=True,
+                        last=True)

@@ -1,5 +1,13 @@
 from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
                                   WaveEngine, make_engine)
+from repro.serving.swarm_serve import (ReplayBudgetError, StageRPCError,
+                                       StageServer, StageUnservableError,
+                                       SwarmRouter, publish_stages,
+                                       restore_stage_params,
+                                       stage_chunk_id)
 
 __all__ = ["Request", "ServeEngine", "WaveEngine", "ContinuousEngine",
-           "make_engine"]
+           "make_engine",
+           "StageServer", "SwarmRouter", "publish_stages",
+           "restore_stage_params", "stage_chunk_id",
+           "StageUnservableError", "ReplayBudgetError", "StageRPCError"]

@@ -95,6 +95,35 @@ def sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray,
     return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
 
 
+def bucket_batch(n: int) -> int:
+    """Next power of two >= n (floor 1) — admission prefill batch
+    buckets, so batched admission adds O(log slots) compiles, not one
+    per occupancy pattern."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def tree_take_slot(big, like1, idx, batch: int):
+    """Extract row ``idx`` of a B-batch cache pytree as a batch-1
+    pytree (the inverse of ``tree_insert_slot``): per leaf, a
+    dynamic_slice along the batch axis, statically inferred as the
+    unique axis where the big leaf has B and the batch-1 template leaf
+    has 1."""
+    def leaf(bl, ll):
+        if batch == 1 and bl.shape == ll.shape:
+            return bl
+        for a in range(bl.ndim):
+            if (bl.shape[a] == batch and ll.shape[a] == 1
+                    and bl.shape[:a] == ll.shape[:a]
+                    and bl.shape[a + 1:] == ll.shape[a + 1:]):
+                return jax.lax.dynamic_slice_in_dim(bl, idx, 1, axis=a)
+        raise ValueError(
+            f"no batch axis: big {bl.shape} vs template {ll.shape}")
+    return jax.tree.map(leaf, big, like1)
+
+
 def tree_insert_slot(big, sub, slot, batch: int):
     """Insert a batch-1 cache pytree into slot ``slot`` of a B-slot
     cache: per leaf, a dynamic_update_slice along the (statically
@@ -323,12 +352,15 @@ class ContinuousEngine(_EngineBase):
     kind = "continuous"
 
     def __init__(self, model, params, *, decode_chunk: int = 8,
-                 top_k: int = 0, seed: int = 0, **kw):
+                 top_k: int = 0, seed: int = 0, batch_admit: bool = True,
+                 **kw):
         super().__init__(model, params, **kw)
         self.decode_chunk = decode_chunk
         self.top_k = top_k
+        self.batch_admit = batch_admit
         self.cache = model.init_cache(self.slots, self.shape)
         self._pcache0 = model.init_cache(1, self.shape)  # prefill template
+        self._pcaches = {1: self._pcache0}   # per-batch-bucket templates
         self.tokens = jnp.full((self.slots, 1), self.pad_id, jnp.int32)
         self.done = jnp.ones((self.slots,), bool)
         self.remaining = jnp.zeros((self.slots,), jnp.int32)
@@ -346,6 +378,7 @@ class ContinuousEngine(_EngineBase):
                                   static_argnames=("n",))
         self.stats["decode_chunks"] = 0
         self.stats["prefills"] = 0
+        self.stats["admit_batch_max"] = 0
 
     # -- device-side pieces ---------------------------------------------------
 
@@ -403,31 +436,66 @@ class ContinuousEngine(_EngineBase):
 
     # -- host-side scheduler --------------------------------------------------
 
+    def _pcache(self, nb: int):
+        c = self._pcaches.get(nb)
+        if c is None:
+            c = self._pcaches[nb] = self.model.init_cache(
+                nb, self.shape)
+        return c
+
     def _admit(self) -> None:
-        for slot in range(self.slots):
-            if not self.queue or self.active[slot] is not None:
-                continue
-            req = self.queue.popleft()
-            plen = len(req.prompt)
-            assert 1 <= plen <= self.max_len, \
-                f"prompt length {plen} vs max_len {self.max_len}"
-            padded = self._padded_len(plen)
-            tokens = np.full((1, padded), self.pad_id, np.int32)
-            tokens[0, :plen] = req.prompt                # RIGHT-pad
-            self.stats["prefill_widths"].add(padded)
-            self.stats["prefills"] += 1
-            logits, sub = self._prefill(
-                self.params,
-                {"tokens": jnp.asarray(tokens),
-                 "prompt_len": jnp.asarray([plen], jnp.int32)},
-                self._pcache0)
+        """Fill every free slot from the queue. With ``batch_admit``
+        the waiting requests are prefilled in ONE bucketed call
+        (batch padded to a power of two with throwaway rows, prompts
+        right-padded to the longest bucket) and each row's batch-1
+        sub-cache is spliced into its slot — a burst of B admissions
+        costs one prefill instead of B. Per-row outputs are identical
+        to the B=1 path (rows never interact: causal attention +
+        no-drop MoE capacity on serving paths), which the equivalence
+        test asserts bitwise."""
+        free = [s for s in range(self.slots)
+                if self.active[s] is None]
+        n = min(len(free), len(self.queue))
+        if n == 0:
+            return
+        reqs = [self.queue.popleft() for _ in range(n)]
+        groups = [reqs] if self.batch_admit else [[r] for r in reqs]
+        taken = 0
+        for grp in groups:
+            slots = free[taken:taken + len(grp)]
+            taken += len(grp)
+            self._admit_group(grp, slots)
+
+    def _admit_group(self, reqs: list, slots: list) -> None:
+        for req in reqs:
+            assert 1 <= len(req.prompt) <= self.max_len, \
+                f"prompt length {len(req.prompt)} vs {self.max_len}"
+        nb = bucket_batch(len(reqs))
+        padded = self._padded_len(max(len(r.prompt) for r in reqs))
+        tokens = np.full((nb, padded), self.pad_id, np.int32)
+        plen = np.ones((nb,), np.int32)    # dummy rows: 1-token pads
+        for i, r in enumerate(reqs):
+            tokens[i, :len(r.prompt)] = r.prompt         # RIGHT-pad
+            plen[i] = len(r.prompt)
+        self.stats["prefill_widths"].add(padded)
+        self.stats["prefills"] += 1
+        self.stats["admit_batch_max"] = max(
+            self.stats["admit_batch_max"], len(reqs))
+        logits, sub = self._prefill(
+            self.params,
+            {"tokens": jnp.asarray(tokens),
+             "prompt_len": jnp.asarray(plen)},
+            self._pcache(nb))
+        for i, (req, slot) in enumerate(zip(reqs, slots)):
+            sub_i = sub if nb == 1 else tree_take_slot(
+                sub, self._pcache0, i, nb)
             (self.cache, self.tokens, self.done, self.remaining,
              self.temps, self.slot_keys, first) = self._admit_jit(
                 self.cache, self.tokens, self.done, self.remaining,
-                self.temps, self.slot_keys, sub, logits,
+                self.temps, self.slot_keys, sub_i, logits[i:i + 1],
                 jnp.int32(slot), self._budget(req) - 1,
                 float(req.temperature), jnp.int32(req.rid))
-            self._pending_first[slot] = first   # fetched lazily at drain
+            self._pending_first[slot] = first   # fetched at drain
             self.active[slot] = req
             self.stats["admitted"] += 1
 
@@ -490,6 +558,7 @@ def make_engine(kind: str, model, params, **kw):
         kw.pop("decode_chunk", None)
         kw.pop("top_k", None)
         kw.pop("seed", None)
+        kw.pop("batch_admit", None)
         return WaveEngine(model, params, **kw)
     if kind == "continuous":
         return ContinuousEngine(model, params, **kw)

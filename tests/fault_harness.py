@@ -123,6 +123,101 @@ class PeerFleet:
             p.close()
 
 
+class StageFleet:
+    """K-stage x R-replica swarm-serving fleet for deterministic
+    failover tests.
+
+    Publishes each stage's parameter slice into a seed ``ChunkStore``
+    (weight distribution = ``swarm_fetch``), then brings up
+    ``k_stages * replicas`` ``StageServer``s — server ``(sid, r)``
+    serves stage ``sid`` — plus a ``ChunkPeer`` over the seed store so
+    late joiners can adopt. ``kill``/``stall``/``corrupt`` apply the
+    shared peer fault knobs to one stage replica; ``router()`` wires a
+    gossip + pool + ``SwarmRouter`` over the live fleet."""
+
+    def __init__(self, cfg, params, root: pathlib.Path, *,
+                 k_stages: int, replicas: int = 2, max_len: int = 128,
+                 serve_seed_peer: bool = True):
+        from repro.models import registry
+        from repro.serving import swarm_serve as sw
+
+        self.cfg = cfg
+        self.k = k_stages
+        self.replicas = replicas
+        self.max_len = max_len
+        self.seed_store = ChunkStore(root / "seed")
+        sw.publish_stages(self.seed_store, cfg, params, k_stages)
+        self.seed_peer = ChunkPeer(self.seed_store) \
+            if serve_seed_peer else None
+        stages = registry.make_stages(cfg, k_stages)
+        self.servers: dict[tuple, object] = {}   # (sid, r) -> server
+        for sid in range(k_stages):
+            sp = stages[sid].slice_params(params)
+            for r in range(replicas):
+                store = ChunkStore(root / f"srv_{sid}_{r}")
+                srv = sw.StageServer(cfg, store, k_stages=k_stages,
+                                     max_len=max_len)
+                srv.serve_stage(sid, sp)
+                self.servers[(sid, r)] = srv
+        self._pools: list = []
+        self._gossips: list = []
+
+    def server(self, sid: int, r: int = 0):
+        return self.servers[(sid, r)]
+
+    def addr_of(self, sid: int, r: int = 0) -> tuple:
+        return self.servers[(sid, r)].addr
+
+    @property
+    def addrs(self) -> list[tuple]:
+        return [s.addr for s in self.servers.values()]
+
+    def kill(self, sid: int, r: int = 0, after_ops: int = 0) -> None:
+        """Crash one stage replica ``after_ops`` more served
+        responses (0 = immediately)."""
+        s = self.servers[(sid, r)]
+        if after_ops <= 0:
+            s.crash()
+        else:
+            s.crash_after = s.served_chunks + after_ops
+
+    def stall(self, sid: int, r: int = 0, seconds: float = 30.0,
+              after_ops: int = 0) -> None:
+        s = self.servers[(sid, r)]
+        s.stall_chunks = s.served_chunks + after_ops
+        s.stall_s = seconds
+
+    def corrupt(self, sid: int, r: int = 0, after_ops: int = 0) -> None:
+        s = self.servers[(sid, r)]
+        s.corrupt_after = s.served_chunks + after_ops
+
+    def router(self, *, timeout: float = 3.0, max_replays: int = 8,
+               pooled: bool = True):
+        from repro.checkpointing import ChunkGossip, PeerConnPool
+        from repro.serving.swarm_serve import SwarmRouter
+
+        pool = PeerConnPool(timeout=timeout) if pooled else None
+        gossip = ChunkGossip(self.addrs, timeout=timeout, pool=pool)
+        gossip.poll_once()
+        router = SwarmRouter(self.k, gossip, timeout=timeout,
+                             pool=pool, max_replays=max_replays,
+                             max_len=self.max_len)
+        self._pools.append(pool)
+        self._gossips.append(gossip)
+        return router
+
+    def close(self) -> None:
+        for g in self._gossips:
+            g.stop()
+        for p in self._pools:
+            if p is not None:
+                p.close()
+        for s in self.servers.values():
+            s.close()
+        if self.seed_peer is not None:
+            self.seed_peer.close()
+
+
 class FakeStore:
     """In-memory gossip surface (what ``store_transport`` needs):
     chunk-id set + latest step, no disk, no sockets."""

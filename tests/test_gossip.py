@@ -189,3 +189,164 @@ def test_snapshotter_on_persist_fires_in_order():
     assert done.wait(5)
     snap.close()
     assert seen == [(1, 1), (2, 2), (3, 3)]
+
+
+# -- retry / backoff / timeout ------------------------------------------------
+
+
+def test_retry_call_backoff_is_deterministic_with_injected_rng():
+    from repro.checkpointing import (PeerClosedError, RetryPolicy,
+                                     retry_call)
+
+    calls, delays = [], []
+
+    class Roll:
+        def random(self):
+            return 0.5                  # fixed jitter roll
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise PeerClosedError("boom")
+        return "ok"
+
+    pol = RetryPolicy(attempts=4, base_delay=0.1, max_delay=2.0,
+                      jitter=0.5)
+    out = retry_call(flaky, policy=pol, sleep=delays.append, rng=Roll())
+    assert out == "ok" and len(calls) == 3
+    # sleep = base * 2**attempt * (1 + jitter * roll)
+    assert delays == pytest.approx([0.1 * 1.25, 0.2 * 1.25])
+
+
+def test_retry_call_no_retry_carveout_and_exhaustion():
+    from repro.checkpointing import (EmptyPeerError, PeerTimeoutError,
+                                     RetryPolicy, retry_call)
+
+    # EmptyPeerError is an OSError, but it is a definitive answer —
+    # the carve-out must pass it through on the FIRST call
+    calls = []
+
+    def empty():
+        calls.append(1)
+        raise EmptyPeerError("nothing here")
+
+    pol = RetryPolicy(attempts=5, base_delay=0.0)
+    with pytest.raises(EmptyPeerError):
+        retry_call(empty, policy=pol, sleep=lambda s: None)
+    assert len(calls) == 1
+
+    # exhaustion re-raises the LAST error after exactly `attempts`
+    calls.clear()
+
+    def stalled():
+        calls.append(1)
+        raise PeerTimeoutError("deadline")
+
+    with pytest.raises(PeerTimeoutError):
+        retry_call(stalled, policy=pol, sleep=lambda s: None)
+    assert len(calls) == pol.attempts
+
+
+def test_gossip_miss_expiry_under_stalled_transport():
+    """A peer that accepts but never answers inside the deadline
+    (PeerTimeoutError, not a dead socket) must burn misses and expire
+    exactly like a crashed one — and recover once it answers again."""
+    from repro.checkpointing import PeerTimeoutError
+
+    s = FakeStore(["aa"], latest=0)
+    world = {("n", 1): s}
+    g = ChunkGossip([("n", 1)], expire_polls=2,
+                    transport=store_transport(world))
+    g.poll_once()
+    assert g.live_peers() == [("n", 1)]
+
+    def stalled():
+        raise PeerTimeoutError("stalled past deadline")
+
+    world[("n", 1)] = stalled
+    g.poll_once()
+    assert g.live_peers() == [("n", 1)]   # one miss: grace period
+    g.poll_once()
+    assert g.live_peers() == []           # expired
+    assert g.possession == {}
+    world[("n", 1)] = s                   # transport unwedges
+    g.poll_once()
+    assert g.possession[("n", 1)] == frozenset({"aa"})
+
+
+# -- connection pool ----------------------------------------------------------
+
+
+def test_pool_reuses_and_discards(tmp_path, rng):
+    from repro.checkpointing import FetchError, PeerConnPool
+
+    store = ChunkStore(tmp_path, chunk_bytes=1 << 12)
+    digest, _ = store.put(b"x" * 16)
+    peer = ChunkPeer(store)
+    pool = PeerConnPool(timeout=5.0)
+    try:
+        with pool.lease(peer.addr) as c1:
+            first = c1
+            c1.request_json({"op": "digest"})
+        assert pool.idle_count(peer.addr) == 1
+        with pool.lease(peer.addr) as c2:
+            assert c2 is first          # same socket, reused
+            c2.request_json({"op": "inventory"})
+        assert pool.stats["created"] == 1
+        assert pool.stats["reused"] == 1
+        # an erroring lease discards the conn instead of re-pooling it
+        with pytest.raises(RuntimeError):
+            with pool.lease(peer.addr):
+                raise RuntimeError("op failed")
+        assert pool.idle_count(peer.addr) == 0
+        assert pool.stats["discarded"] == 1
+        # discard_peer drops idle conns for a peer known dead
+        with pool.lease(peer.addr):
+            pass
+        assert pool.idle_count(peer.addr) == 1
+        pool.discard_peer(peer.addr)
+        assert pool.idle_count(peer.addr) == 0
+    finally:
+        pool.close()
+        peer.close()
+    assert isinstance(FetchError("x"), Exception)
+
+
+def test_pool_caps_idle_conns_per_peer(tmp_path):
+    from repro.checkpointing import PeerConnPool
+
+    store = ChunkStore(tmp_path, chunk_bytes=1 << 12)
+    peer = ChunkPeer(store)
+    pool = PeerConnPool(timeout=5.0, max_idle_per_peer=2)
+    try:
+        conns = [pool.acquire(peer.addr) for _ in range(4)]
+        for c in conns:
+            pool.release(c)
+        assert pool.idle_count(peer.addr) == 2      # cap holds
+        assert pool.stats["discarded"] == 2
+    finally:
+        pool.close()
+        peer.close()
+
+
+def test_socket_transport_pooled_with_policy(tmp_path, rng):
+    """Gossip over real sockets through the shared pool + retry
+    policy: polls reuse the pooled conn, and possession matches the
+    served store."""
+    from repro.checkpointing import PeerConnPool, RetryPolicy
+
+    store = ChunkStore(tmp_path, chunk_bytes=1 << 12)
+    digest, _ = store.put(b"y" * 32)
+    peer = ChunkPeer(store)
+    pool = PeerConnPool(timeout=5.0)
+    g = ChunkGossip([peer.addr], pool=pool,
+                    policy=RetryPolicy(attempts=2, base_delay=0.0))
+    try:
+        g.poll_once()
+        g.poll_once()
+        assert g.possession[peer.addr] == frozenset({digest})
+        assert pool.stats["reused"] >= 1
+    finally:
+        g.stop()
+        pool.close()
+        peer.close()

@@ -1,0 +1,292 @@
+"""Fault-tolerant swarm inference tests: stage partition bit-identity,
+router-vs-single-host greedy equivalence, deterministic kill / stall /
+corrupt failover with re-prefill recovery, typed no-holder failure,
+adopt-via-swarm_fetch weight distribution, connection-pool reuse, and
+batched admission equivalence in the continuous engine."""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import ChunkStore, PeerConn
+from repro.configs import get_config
+from repro.models import registry
+from repro.models import transformer as tf
+from repro.serving import swarm_serve as sw
+from repro.serving.engine import ContinuousEngine, Request
+
+from tests.fault_harness import StageFleet
+
+MAX_NEW = 8
+MAX_LEN = 128
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = dataclasses.replace(get_config("internlm2-1.8b").reduced(),
+                              n_layers=4)
+    model = registry.get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(2, cfg.vocab, size=n).tolist()
+               for n in (5, 9, 12)]
+    # single-host greedy baseline: the acceptance reference every
+    # failover scenario must reproduce bit for bit
+    eng = ContinuousEngine(model, params, batch_slots=2,
+                           max_len=MAX_LEN)
+    reqs = [Request(rid=i, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return types.SimpleNamespace(
+        cfg=cfg, model=model, params=params, prompts=prompts,
+        baseline=[list(r.out_tokens) for r in reqs])
+
+
+def _victim(fleet, router, sid):
+    """The (sid, r) key of the replica the router would pick first."""
+    addr = router._pick(sid)
+    return next(k for k, s in fleet.servers.items() if s.addr == addr)
+
+
+# -- stage partition seam -----------------------------------------------------
+
+
+def test_stage_partition_matches_monolithic(world):
+    cfg, params = world.cfg, world.params
+    B, S = 2, 8
+    toks = jnp.asarray(np.asarray([world.prompts[0] + [3, 4, 5],
+                                   world.prompts[1][:S]], np.int32))
+    plen = jnp.asarray([5, 8], jnp.int32)
+    cache = tf.init_cache(cfg, B, MAX_LEN)
+    logits_m, cache_m = tf.prefill(cfg, params, toks, cache,
+                                   prompt_len=plen)
+    tok = jnp.argmax(logits_m, -1)[:, None].astype(jnp.int32)
+    dec_m, _ = tf.decode_step(cfg, params, tok, cache_m)
+    for k in (2, 4):
+        stages = registry.make_stages(cfg, k)
+        sp = [s.slice_params(params) for s in stages]
+        sc = [s.init_cache(B, MAX_LEN) for s in stages]
+        x = toks
+        for i, s in enumerate(stages):
+            x, sc[i] = s.prefill(sp[i], x, sc[i], prompt_len=plen)
+        assert jnp.array_equal(logits_m, x), f"prefill diverged k={k}"
+        x = tok
+        for i, s in enumerate(stages):
+            x, sc[i] = s.decode(sp[i], x, sc[i])
+        assert jnp.array_equal(dec_m, x), f"decode diverged k={k}"
+
+
+def test_stage_bounds_and_unsupported_family(world):
+    assert tf.stage_bounds(world.cfg, 3) == [(0, 2), (2, 3), (3, 4)]
+    with pytest.raises(ValueError):
+        tf.stage_bounds(world.cfg, 5)     # more stages than layers
+    ssm = get_config("mamba2-130m").reduced()
+    with pytest.raises(ValueError):
+        registry.make_stages(ssm, 2)      # no stage seam for SSMs
+
+
+# -- healthy chain == single host ---------------------------------------------
+
+
+def test_router_matches_continuous_engine(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=3,
+                       replicas=1, max_len=MAX_LEN)
+    try:
+        router = fleet.router()
+        for p, base in zip(world.prompts, world.baseline):
+            out = router.generate(p, MAX_NEW, eos_id=1)
+            assert out == base
+        assert router.stats["failovers"] == 0
+    finally:
+        fleet.close()
+
+
+# -- failover scenarios -------------------------------------------------------
+
+
+def test_kill_mid_decode_failover_bit_identical(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=3,
+                       replicas=2, max_len=MAX_LEN)
+    try:
+        router = fleet.router()
+        sid, r = _victim(fleet, router, 1)
+        # dies on its 4th stage response: 1 prefill + 2 decodes land,
+        # the 3rd decode hits a dead peer mid-request
+        fleet.kill(sid, r, after_ops=3)
+        out = router.generate(world.prompts[1], MAX_NEW, eos_id=1)
+        assert out == world.baseline[1]
+        assert router.stats["failovers"] >= 1
+        assert router.stats["recoveries"] >= 1
+        assert router.stats["replayed_tokens"] > 0
+    finally:
+        fleet.close()
+
+
+def test_stall_past_timeout_failover_bit_identical(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=2,
+                       replicas=2, max_len=MAX_LEN)
+    try:
+        router = fleet.router(timeout=1.5)
+        sid, r = _victim(fleet, router, 1)
+        fleet.stall(sid, r, seconds=30.0, after_ops=2)
+        out = router.generate(world.prompts[0], MAX_NEW, eos_id=1)
+        assert out == world.baseline[0]
+        assert router.stats["failovers"] >= 1
+    finally:
+        fleet.close()
+
+
+def test_corrupt_frames_failover_bit_identical(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=2,
+                       replicas=2, max_len=MAX_LEN)
+    try:
+        router = fleet.router()
+        sid, r = _victim(fleet, router, 0)
+        fleet.corrupt(sid, r, after_ops=2)
+        out = router.generate(world.prompts[2], MAX_NEW, eos_id=1)
+        assert out == world.baseline[2]
+        assert router.stats["failovers"] >= 1
+    finally:
+        fleet.close()
+
+
+def test_no_surviving_holder_fails_typed(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=3,
+                       replicas=1, max_len=MAX_LEN)
+    try:
+        router = fleet.router(timeout=1.5)
+        fleet.kill(1, 0, after_ops=3)       # the ONLY stage-1 holder
+        with pytest.raises(sw.StageUnservableError):
+            router.generate(world.prompts[0], MAX_NEW, eos_id=1)
+    finally:
+        fleet.close()
+
+
+def test_replay_budget_fails_typed(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=2,
+                       replicas=2, max_len=MAX_LEN)
+    try:
+        router = fleet.router(max_replays=0)
+        sid, r = _victim(fleet, router, 1)
+        fleet.kill(sid, r, after_ops=2)
+        with pytest.raises(sw.ReplayBudgetError):
+            router.generate(world.prompts[0], MAX_NEW, eos_id=1)
+    finally:
+        fleet.close()
+
+
+# -- weight distribution / adoption -------------------------------------------
+
+
+def test_adopt_stage_via_swarm_fetch(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=2,
+                       replicas=1, max_len=MAX_LEN)
+    joiner = None
+    try:
+        # a joining server with an EMPTY store pulls stage 1's
+        # published weights from the seed peer over the chunk swarm
+        joiner = sw.StageServer(world.cfg,
+                                ChunkStore(tmp_path / "joiner"),
+                                k_stages=2, max_len=MAX_LEN)
+        stats = joiner.adopt_stage(1, [fleet.seed_peer.addr])
+        assert stats["chunks_fetched"] > 0
+        assert joiner.stage_ids() == [1]
+        # restored params are bit-identical to the published slice
+        stage1 = registry.make_stages(world.cfg, 2)[1]
+        want = stage1.slice_params(world.params)
+        got = joiner._stages[1]
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # kill the original stage-1 holder: the router fails over to
+        # the adopted joiner and still matches the single-host run
+        fleet.servers[(1, 99)] = joiner     # join the fleet
+        router = fleet.router()
+        fleet.kill(1, 0, after_ops=3)
+        out = router.generate(world.prompts[0], MAX_NEW, eos_id=1)
+        assert out == world.baseline[0]
+        assert router.stats["failovers"] >= 1
+    finally:
+        fleet.close()       # closes the joiner too (it's in .servers)
+
+
+def test_adopt_stage_rpc(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=2,
+                       replicas=1, max_len=MAX_LEN)
+    joiner = None
+    try:
+        joiner = sw.StageServer(world.cfg,
+                                ChunkStore(tmp_path / "joiner2"),
+                                k_stages=2, max_len=MAX_LEN)
+        c = PeerConn(joiner.addr, 10.0)
+        resp = c.request_json({"op": "adopt_stage", "sid": 0,
+                               "peers": [list(fleet.seed_peer.addr)]})
+        c.close()
+        assert resp["ok"] and resp["stage"] == 0
+        assert joiner.stage_ids() == [0]
+    finally:
+        if joiner is not None:
+            joiner.close()
+        fleet.close()
+
+
+def test_stage_possession_rides_gossip(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=2,
+                       replicas=2, max_len=MAX_LEN)
+    try:
+        router = fleet.router()
+        for sid in range(2):
+            holders = router.holders(sid)
+            want = {fleet.addr_of(sid, r) for r in range(2)}
+            assert set(holders) == want
+        # dropping a stage moves the digest sha -> gossip re-pulls
+        fleet.server(1, 0).drop_stage(1)
+        router.refresh()
+        assert set(router.holders(1)) == {fleet.addr_of(1, 1)}
+    finally:
+        fleet.close()
+
+
+# -- connection pooling across the serve path ---------------------------------
+
+
+def test_router_pool_reuses_connections(tmp_path, world):
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=2,
+                       replicas=1, max_len=MAX_LEN)
+    try:
+        router = fleet.router()
+        router.generate(world.prompts[0], MAX_NEW, eos_id=1)
+        assert router.pool.stats["reused"] > 0
+        created_after_one = router.pool.stats["created"]
+        router.generate(world.prompts[1], MAX_NEW, eos_id=1)
+        # steady state: no new connections for the second request
+        assert router.pool.stats["created"] == created_after_one
+    finally:
+        fleet.close()
+
+
+# -- batched admission (continuous engine satellite) --------------------------
+
+
+def test_batched_admission_bit_identical(world):
+    outs, prefills = {}, {}
+    for ba in (False, True):
+        eng = ContinuousEngine(world.model, world.params,
+                               batch_slots=4, max_len=MAX_LEN,
+                               batch_admit=ba, seed=3)
+        reqs = [Request(rid=i, prompt=np.asarray(p, np.int32),
+                        max_new_tokens=MAX_NEW,
+                        temperature=0.0 if i % 2 == 0 else 0.8)
+                for i, p in enumerate(world.prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        outs[ba] = [list(r.out_tokens) for r in reqs]
+        prefills[ba] = eng.stats["prefills"]
+    assert outs[True] == outs[False]
+    assert prefills[True] < prefills[False]   # 1 grouped call vs 3
