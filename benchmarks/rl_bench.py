@@ -1,0 +1,105 @@
+"""Asynchronous RL tier benchmark (INTELLECT-2-style rollout loop).
+
+Runs the full fleet — DiLoCo trainer + PolicyPublisher + staggered
+rollout workers with one mid-run crash/rejoin — on the toy
+verifiable-reward task and records:
+
+  * rollout throughput (tok/s through the logprob-capturing engine),
+  * policy propagation (adoption latency, bytes over the delta chain,
+    mean accepted staleness in outer steps),
+  * the staleness ledger (drop fraction under max_policy_lag),
+  * the reward trend, asserted improving in full mode.
+
+``python -m benchmarks.run rl --json`` writes ``BENCH_rl.json``;
+``--smoke`` shrinks the run for CI. Bit-exact adoption (every adopted
+policy sha == the published anchor's) is an acceptance guardrail in
+BOTH modes — a divergence fails the run, it never ships green.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+JSON_PATH = "BENCH_rl.json"
+
+
+def _config(smoke: bool):
+    from repro.rl import RLConfig
+    if smoke:
+        return RLConfig(outer_steps=5, inner_steps=2, n_groups=4,
+                        group_size=4, max_new=8, inner_lr=2e-2,
+                        max_policy_lag=1, adopt_strides=(1, 3),
+                        kill_at=1, rejoin_at=2)
+    return RLConfig(outer_steps=10, inner_steps=3, n_groups=8,
+                    group_size=4, max_new=12, inner_lr=2e-2,
+                    max_policy_lag=1, adopt_strides=(1, 3),
+                    kill_at=3, rejoin_at=5)
+
+
+def run_json(smoke: bool = False):
+    from repro.rl import RLDriver
+
+    cfg = _config(smoke)
+    with tempfile.TemporaryDirectory() as td:
+        drv = RLDriver(cfg, td)
+        try:
+            s = drv.run()
+        finally:
+            drv.close()
+
+    led = s["ledger"]
+    # exact accounting: every generated rollout is accounted for
+    assert led["generated"] == led["accepted"] + led["dropped_stale"] \
+        + led["evicted_capacity"] + len(drv.buffer), led
+    assert led["max_accepted_lag"] <= cfg.max_policy_lag, led
+    # acceptance guardrails, not just recorded fields: broken
+    # bit-exactness or a non-learning loop must fail the CI step
+    assert s["bit_exact"], "adopted policy diverged from published"
+    if not smoke:
+        r = s["reward_trend"]
+        early, late = np.mean(r[:3]), np.mean(r[-3:])
+        assert late > early + 0.02, \
+            f"reward not improving: {early:.3f} -> {late:.3f} ({r})"
+
+    payload = {"rl": {
+        "smoke": smoke,
+        "outer_steps": cfg.outer_steps,
+        "workers": cfg.n_workers,
+        "max_policy_lag": cfg.max_policy_lag,
+        "adopt_strides": list(cfg.adopt_strides),
+        "kill_at": cfg.kill_at, "rejoin_at": cfg.rejoin_at,
+        **{k: s[k] for k in (
+            "reward_trend", "reward_first", "reward_last",
+            "rollout_tok_s", "rollout_tokens", "ledger",
+            "stale_drop_fraction", "mean_accepted_lag", "adoptions",
+            "mean_adopt_s", "adopt_bytes", "bit_exact",
+            "versions_published", "live_versions")},
+    }}
+    us_per_tok = 1e6 / max(s["rollout_tok_s"], 1e-9)
+    rows = [
+        f"rl_rollout,{us_per_tok:.1f},"
+        f"tok/s={s['rollout_tok_s']:.1f} "
+        f"reward={s['reward_first']:.3f}->{s['reward_last']:.3f} "
+        f"bit_exact={s['bit_exact']}",
+        f"rl_staleness,0,"
+        f"drop_frac={s['stale_drop_fraction']:.2f} "
+        f"mean_lag={s['mean_accepted_lag']:.2f} "
+        f"max_lag={led['max_accepted_lag']} "
+        f"accepted={led['accepted']}/{led['generated']}",
+        f"rl_propagation,{s['mean_adopt_s'] * 1e6:.1f},"
+        f"adoptions={s['adoptions']} "
+        f"bytes={s['adopt_bytes']} "
+        f"versions={s['versions_published']}",
+    ]
+    return rows, payload
+
+
+def run(smoke: bool = False):
+    rows, _ = run_json(smoke=smoke)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

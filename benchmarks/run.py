@@ -30,6 +30,7 @@ MODULES = [
     ("sync", "benchmarks.sync_bench"),
     ("recovery", "benchmarks.recovery_bench"),
     ("serve", "benchmarks.serve_bench"),
+    ("rl", "benchmarks.rl_bench"),
 ]
 
 JSON_PATH = "BENCH_sync.json"

@@ -15,8 +15,8 @@ from repro.checkpointing.store import (ChunkCorruptError,
                                        ChunkMissingError, ChunkStore)
 from repro.checkpointing.streaming import StreamingFetcher
 from repro.checkpointing.swarm import (ChunkPeer, NoPeersError,
-                                       SwarmFetchError, recover,
-                                       swarm_fetch)
+                                       StepRetiredError, SwarmFetchError,
+                                       recover, swarm_fetch)
 
 __all__ = [
     "save", "save_async", "restore", "latest_step",
@@ -28,7 +28,7 @@ __all__ = [
     "DeltaCheckpointer", "DeltaConfig", "DeltaChainError",
     "ChainReplayer",
     "ChunkPeer", "swarm_fetch", "recover", "SwarmFetchError",
-    "NoPeersError",
+    "NoPeersError", "StepRetiredError",
     "ChunkGossip", "socket_transport", "store_transport",
     "StreamingFetcher",
     "AsyncSnapshotter",

@@ -243,6 +243,38 @@ class ChunkStore:
     def load_manifest(self, step: int) -> dict:
         return json.loads(self._manifest_path(step).read_text())
 
+    # -- tombstones ----------------------------------------------------------
+    # A retired step was removed ON PURPOSE (e.g. a policy version the
+    # publisher force-expired). The tombstone lets the serving side
+    # distinguish "deliberately gone" (typed StepRetiredError at the
+    # fetcher) from "not written yet / wrong peer" (retryable), so a
+    # lagging consumer fails fast instead of spinning on retries.
+
+    def _retired_path(self) -> pathlib.Path:
+        return self.root / "manifests" / "retired.json"
+
+    def retired_steps(self) -> set[int]:
+        p = self._retired_path()
+        if not p.exists():
+            return set()
+        return set(json.loads(p.read_text()))
+
+    def is_retired(self, step: int) -> bool:
+        return int(step) in self.retired_steps()
+
+    def retire_step(self, step: int) -> None:
+        """Persist a tombstone for ``step`` (atomic, idempotent). Does
+        not delete anything itself — run :meth:`gc` afterwards; the
+        tombstone is what makes the deletion announceable."""
+        steps = self.retired_steps()
+        steps.add(int(step))
+        p = self._retired_path()
+        tmp = p.with_name("." + p.name)
+        tmp.write_text(json.dumps(sorted(steps)))
+        tmp.rename(p)
+        with self._lock:
+            self.version += 1
+
     def steps(self) -> list[int]:
         return sorted(int(p.stem.split("_")[1])
                       for p in (self.root / "manifests").iterdir()

@@ -67,6 +67,13 @@ class NoPeersError(SwarmFetchError):
     """No reachable peer holds a checkpoint."""
 
 
+class StepRetiredError(SwarmFetchError):
+    """The requested step was DELIBERATELY removed at the source
+    (``ChunkStore.retire_step`` tombstone — e.g. a policy version the
+    publisher force-expired). Unlike a missing step this is terminal:
+    the consumer should move to a newer version, not retry."""
+
+
 class ChunkPeer:
     """Serves a ``ChunkStore`` to joining peers.
 
@@ -169,6 +176,13 @@ class ChunkPeer:
             _send_frame(conn, json.dumps(
                 {"step": self.store.latest_step()}).encode())
         elif op == "manifest":
+            # tombstone check FIRST: a retired step must answer
+            # "retired" even while its manifest still exists on disk
+            # (retire is announced before gc physically removes it)
+            if self.store.is_retired(req["step"]):
+                _send_frame(conn, json.dumps(
+                    {"error": "retired", "step": req["step"]}).encode())
+                return True
             try:
                 m = self.store.load_manifest(req["step"])
                 pins.append(self.store.pin_chain(req["step"]))
@@ -221,6 +235,9 @@ def _manifest_chain(conn: PeerConn, step: int) -> list[dict]:
     s = step
     while True:
         m = json.loads(conn.request({"op": "manifest", "step": s}))
+        if m.get("error") == "retired":
+            raise StepRetiredError(
+                f"peer {conn.addr} retired step {s}")
         if "error" in m:
             raise SwarmFetchError(
                 f"peer {conn.addr} lost step {s} mid-chain")
@@ -247,6 +264,10 @@ def _manifest_chain_any(holders: list[PeerConn], step: int,
             holders.remove(c)
             c.close()
             last = e
+    if isinstance(last, StepRetiredError):
+        # the step isn't lost, it was withdrawn — surface the typed
+        # terminal error instead of a retryable-looking fetch failure
+        raise StepRetiredError(str(last), failures)
     raise SwarmFetchError(f"no peer could serve the manifest chain "
                           f"for step {step}: {last}", failures)
 

@@ -89,8 +89,14 @@ def init_outer_state(params, cfg: DiLoCoConfig) -> OuterState:
     anchor = jax.tree.map(lambda p: p.astype(jnp.float32), params)
     eng = SyncEngine.for_tree(anchor)
     opt = cfg.outer_opt.init(anchor)
-    residual = jnp.zeros(
-        (eng.numel if cfg.error_feedback else 0,), jnp.float32)
+    n = eng.numel if cfg.error_feedback else 0
+    if cfg.error_feedback and cfg.overlap == "delayed":
+        # two-slot residual: the delayed overlap interleaves two anchor
+        # lineages (see finish_outer_sync_sim), so EF keeps one residual
+        # per lineage — boundary t reads/writes slot t % 2 only
+        residual = jnp.zeros((2, n), jnp.float32)
+    else:
+        residual = jnp.zeros((n,), jnp.float32)
     return OuterState(anchor, opt, residual, jnp.zeros((), jnp.int32),
                       eng.flatten(anchor))
 
@@ -98,9 +104,12 @@ def init_outer_state(params, cfg: DiLoCoConfig) -> OuterState:
 def init_outer_state_sim(params_one_worker, cfg: DiLoCoConfig,
                          k: int) -> OuterState:
     """Outer state for the stacked single-process simulator: shared
-    anchor/momentum, per-worker EF residuals."""
+    anchor/momentum, per-worker EF residuals ((2, k, n) under the
+    delayed overlap — one slot per interleaved lineage)."""
     st = init_outer_state(params_one_worker, cfg)
-    n = st.residual.shape[0]
+    n = st.residual.shape[-1]
+    if st.residual.ndim == 2:
+        return st._replace(residual=jnp.zeros((2, k, n), jnp.float32))
     return st._replace(residual=jnp.zeros((k, n), jnp.float32))
 
 
@@ -123,10 +132,24 @@ def _pseudograd(params, state: OuterState, cfg: DiLoCoConfig):
     pg = a_flat - p_flat
     new_residual = state.residual
     if cfg.error_feedback:
-        pg = pg + state.residual
-        deq = _ef_roundtrip(pg, cfg)
-        new_residual = pg - deq
-        pg = deq
+        if state.residual.ndim == 2:
+            # two-slot (delayed cfg on the synchronous distributed
+            # path): outer_step advances once per sync, so its parity
+            # alternates slots — each lineage's residual round-trips
+            # through its own slot
+            slot = jnp.mod(state.outer_step, 2)
+            res = jax.lax.dynamic_index_in_dim(
+                state.residual, slot, 0, keepdims=False)
+            pg = pg + res
+            deq = _ef_roundtrip(pg, cfg)
+            new_residual = jax.lax.dynamic_update_index_in_dim(
+                state.residual, pg - deq, slot, 0)
+            pg = deq
+        else:
+            pg = pg + state.residual
+            deq = _ef_roundtrip(pg, cfg)
+            new_residual = pg - deq
+            pg = deq
     return pg, new_residual, p_flat, a_flat
 
 
@@ -172,10 +195,15 @@ def outer_sync(params, state: OuterState, cfg: DiLoCoConfig,
 
 
 def _sim_pseudograds(stacked_params, state: OuterState,
-                     cfg: DiLoCoConfig):
+                     cfg: DiLoCoConfig, ef_slot: int = 0):
     """Shared boundary front half of the sim outer step: stacked flat
     pseudo-gradients (+EF rewrite) off the persistent anchor buffer.
     Returns (k, any_params, a_flat, pgs, new_residuals, fused_src).
+
+    With a two-slot residual buffer ((2, k, n): EF + delayed overlap)
+    only row ``ef_slot`` is read, and ``new_residuals`` is that slot's
+    (k, n) replacement — the caller commits it via
+    :func:`_commit_residual` so the write lands on the CURRENT state.
 
     The anchor flatten is hoisted out of the worker dimension (the seed
     re-flattened the full anchor pytree once per worker inside a vmap);
@@ -191,7 +219,9 @@ def _sim_pseudograds(stacked_params, state: OuterState,
     pgs = a_flat[None, :] - p_flats
     new_residuals = state.residual
     if cfg.error_feedback:
-        pgs = pgs + state.residual
+        two_slot = state.residual.ndim == 3
+        res = state.residual[ef_slot] if two_slot else state.residual
+        pgs = pgs + res
         deqs = jax.vmap(lambda pg: _ef_roundtrip(pg, cfg))(pgs)
         new_residuals = pgs - deqs
         pgs = deqs
@@ -200,20 +230,34 @@ def _sim_pseudograds(stacked_params, state: OuterState,
     return k, any_params, a_flat, pgs, new_residuals, fused_src
 
 
+def _commit_residual(state: OuterState, new_residuals, ef_slot: int):
+    """Merge a boundary's EF residual into the state's buffer. In
+    two-slot mode only the boundary's OWN slot is written — and it is
+    written against the residual buffer as it stands at commit time,
+    not the begin-time snapshot, so an interleaved commit of the other
+    lineage is never clobbered (this is what makes EF safe under the
+    delayed overlap)."""
+    if state.residual.ndim == 3:
+        return state.residual.at[ef_slot].set(new_residuals)
+    return new_residuals
+
+
 def outer_sync_sim(stacked_params, state: OuterState, cfg: DiLoCoConfig,
                    ring_order: Sequence[int] | None = None,
-                   weights: jnp.ndarray | None = None):
+                   weights: jnp.ndarray | None = None,
+                   ef_slot: int = 0):
     """Mirror of ``outer_sync`` over stacked (k, ...) worker params with a
     SHARED outer state. Residuals are per-worker when EF is on."""
     k, any_params, a_flat, pgs, new_residuals, fused_src = \
-        _sim_pseudograds(stacked_params, state, cfg)
+        _sim_pseudograds(stacked_params, state, cfg, ef_slot=ef_slot)
     reduced = simulate_ring_all_reduce(pgs, ring_order=ring_order,
                                        cfg=cfg.ring, weights=weights,
                                        fused_src=fused_src)
+    res = _commit_residual(state, new_residuals, ef_slot)
     # every worker's reduced copy is identical -> apply outer once
     new_params, new_state = _apply_outer(
-        reduced[0], any_params, state._replace(residual=new_residuals),
-        cfg, new_residuals, a_flat)
+        reduced[0], any_params, state._replace(residual=res),
+        cfg, res, a_flat)
     stacked_new = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (k,) + p.shape), new_params)
     return stacked_new, new_state
@@ -242,7 +286,7 @@ class OuterSyncHandle:
     """
 
     def __init__(self, op: RingSyncOp, cfg: DiLoCoConfig, a_flat,
-                 new_residuals, weights, k: int):
+                 new_residuals, weights, k: int, ef_slot: int = 0):
         self.op = op
         self.cfg = cfg
         # the anchor SNAPSHOT the pseudo-gradients are rooted at: the
@@ -250,7 +294,13 @@ class OuterSyncHandle:
         # finish_outer_sync_sim for why), so the handle must carry it
         # across the interleaved apply of the previous boundary
         self.a_flat = a_flat
+        # EF residual produced at begin time. Two-slot mode: the (k, n)
+        # replacement for residual slot ``ef_slot`` only — committed
+        # into the commit-time state by _commit_residual, never as a
+        # whole-buffer overwrite (a begin-time snapshot of the buffer
+        # would resurrect the other lineage's stale residual)
         self.new_residuals = new_residuals
+        self.ef_slot = ef_slot
         self.weights = weights
         self.k = k
 
@@ -270,31 +320,34 @@ class OuterSyncHandle:
 def begin_outer_sync_sim(stacked_params, state: OuterState,
                          cfg: DiLoCoConfig,
                          ring_order: Sequence[int] | None = None,
-                         weights: jnp.ndarray | None = None
-                         ) -> OuterSyncHandle:
+                         weights: jnp.ndarray | None = None,
+                         ef_slot: int = 0) -> OuterSyncHandle:
     """Boundary front half: compute + quantize the pseudo-gradients and
-    stage the ring as a steppable op. Nothing is applied yet."""
-    if cfg.error_feedback and cfg.overlap != "none":
-        raise NotImplementedError(
-            "error feedback commits its residual at begin time; under "
-            "delayed application the next begin would read a residual "
-            "whose sync has not landed — use overlap='none' with EF")
+    stage the ring as a steppable op. Nothing is applied yet.
+
+    ``ef_slot`` (two-slot EF under the delayed overlap): the residual
+    lineage this boundary belongs to. The trainer alternates 0/1 per
+    begin, so boundary t reads the residual written by boundary t-2 —
+    whose sync has, with at most one handle in flight, always landed by
+    then. (``state.outer_step`` parity is NOT usable as the slot: the
+    first two begins both observe outer_step == 0.)"""
     k, _, a_flat, pgs, new_residuals, fused_src = _sim_pseudograds(
-        stacked_params, state, cfg)
+        stacked_params, state, cfg, ef_slot=ef_slot)
     if weights is None:
         weights = jnp.ones((k,), jnp.float32)
     op = RingSyncOp(pgs, ring_order=ring_order, cfg=cfg.ring,
                     weights=weights, fused_src=fused_src)
-    return OuterSyncHandle(op, cfg, a_flat, new_residuals, weights, k)
+    return OuterSyncHandle(op, cfg, a_flat, new_residuals, weights, k,
+                           ef_slot=ef_slot)
 
 
 def _finish_apply(handle: OuterSyncHandle, reduced, stacked_params,
                   state: OuterState):
     any_params = jax.tree.map(lambda p: p[0], stacked_params)
+    res = _commit_residual(state, handle.new_residuals, handle.ef_slot)
     new_params, new_state = _apply_outer(
-        reduced[0], any_params,
-        state._replace(residual=handle.new_residuals), handle.cfg,
-        handle.new_residuals, handle.a_flat)
+        reduced[0], any_params, state._replace(residual=res),
+        handle.cfg, res, handle.a_flat)
     stacked_new = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (handle.k,) + p.shape),
         new_params)

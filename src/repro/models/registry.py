@@ -36,6 +36,11 @@ class ModelDef:
     prefill: Callable[..., tuple[jnp.ndarray, Any]]
     decode: Callable[..., tuple[jnp.ndarray, Any]]
     input_specs: Callable[[ShapeConfig], dict]
+    # logits(params, tokens) -> (B, S, V): the bare training-mode
+    # forward, for losses that need per-token log-probs instead of the
+    # packaged cross-entropy (the RL/GRPO tier). None for families
+    # whose forward needs more than tokens (enc-dec).
+    logits: Callable[..., jnp.ndarray] | None = None
 
     def cache_pspecs(self, cache_shapes, plan, mesh_axes):
         """PartitionSpec tree for a cache pytree (path-aware: KV caches
@@ -121,9 +126,13 @@ def _lm_def(cfg: ArchConfig) -> ModelDef:
     def decode(params, token, cache):
         return transformer.decode_step(cfg, params, token, cache)
 
+    def logits(params, tokens, remat=False):
+        return transformer.forward(cfg, params, tokens, remat=remat)[0]
+
     return ModelDef(cfg, functools.partial(transformer.init_lm, cfg),
                     loss, init_cache, prefill, decode,
-                    functools.partial(_lm_input_specs, cfg))
+                    functools.partial(_lm_input_specs, cfg),
+                    logits=logits)
 
 
 # -- encoder-decoder -----------------------------------------------------------
@@ -184,9 +193,13 @@ def _hybrid_def(cfg: ArchConfig) -> ModelDef:
     def decode(params, token, cache):
         return hybrid.decode_step(cfg, params, token, cache)
 
+    def logits(params, tokens, remat=False):
+        return hybrid.forward(cfg, params, tokens, remat=remat)[0]
+
     return ModelDef(cfg, functools.partial(hybrid.init_hybrid, cfg),
                     loss, init_cache, prefill, decode,
-                    functools.partial(_lm_input_specs, cfg))
+                    functools.partial(_lm_input_specs, cfg),
+                    logits=logits)
 
 
 # -- pipeline-stage partition (swarm serving) ---------------------------------

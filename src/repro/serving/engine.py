@@ -50,6 +50,11 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0      # 0 = greedy (wave engine is greedy-only)
     out_tokens: list = dataclasses.field(default_factory=list)
+    # log-prob of each emitted token under the SAMPLING distribution
+    # (logits/temperature, pre-top-k; temp==0 scores the unscaled
+    # softmax). Aligned 1:1 with out_tokens; filled only when the
+    # engine runs with capture_logprobs=True (the RL rollout path).
+    out_logprobs: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float | None = None
     t_first: float | None = None  # first token available
@@ -93,6 +98,19 @@ def sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray,
     else:
         sampled = jax.random.categorical(key, lg / safe)
     return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+
+
+def chosen_logprob(logits: jnp.ndarray, toks: jnp.ndarray,
+                   temps: jnp.ndarray) -> jnp.ndarray:
+    """Log-prob of ``toks`` (B,) under softmax(logits/temp) per slot —
+    the behavior-policy score an RL trainer needs next to each sampled
+    token. temp==0 slots score the unscaled distribution (greedy picks
+    the argmax, so this is its actual, finite log-mass)."""
+    lg = logits.astype(jnp.float32)
+    safe = jnp.where(temps > 0, temps, 1.0)[:, None]
+    logp = jax.nn.log_softmax(lg / safe, axis=-1)
+    return jnp.take_along_axis(
+        logp, toks[:, None].astype(jnp.int32), axis=-1)[:, 0]
 
 
 def bucket_batch(n: int) -> int:
@@ -353,11 +371,16 @@ class ContinuousEngine(_EngineBase):
 
     def __init__(self, model, params, *, decode_chunk: int = 8,
                  top_k: int = 0, seed: int = 0, batch_admit: bool = True,
-                 **kw):
+                 capture_logprobs: bool = False, **kw):
         super().__init__(model, params, **kw)
         self.decode_chunk = decode_chunk
         self.top_k = top_k
         self.batch_admit = batch_admit
+        # RL rollout mode: the decode scan additionally emits each
+        # sampled token's log-prob (one extra (N, B) row in the same
+        # host transfer). Off by default — the serving path's compiled
+        # program is unchanged when disabled.
+        self.capture_logprobs = capture_logprobs
         self.cache = model.init_cache(self.slots, self.shape)
         self._pcache0 = model.init_cache(1, self.shape)  # prefill template
         self._pcaches = {1: self._pcache0}   # per-batch-bucket templates
@@ -407,7 +430,14 @@ class ContinuousEngine(_EngineBase):
         slot_keys = jax.lax.dynamic_update_slice(
             slot_keys, k_stream[None, :].astype(slot_keys.dtype),
             (slot, 0))
-        return cache, tokens, done, remaining, temps, slot_keys, first[0]
+        out = (cache, tokens, done, remaining, temps, slot_keys,
+               first[0])
+        if self.capture_logprobs:
+            lp = chosen_logprob(
+                logits, first,
+                jnp.reshape(temp, (1,)).astype(jnp.float32))
+            out = out + (lp[0],)
+        return out
 
     def _chunk_fn(self, params, cache, tokens, done, remaining, temps,
                   slot_keys, *, n: int):
@@ -425,6 +455,9 @@ class ContinuousEngine(_EngineBase):
             remaining = remaining - jnp.where(done, 0, 1)
             newly = (~done) & ((nxt == self.eos_id) | (remaining <= 0))
             emit = jnp.where(done, -1, nxt)
+            if self.capture_logprobs:
+                lp = chosen_logprob(logits, nxt, temps)
+                emit = (emit, jnp.where(done, 0.0, lp))
             done = done | newly
             return (nxt[:, None].astype(jnp.int32), cache, done,
                     remaining, keys), emit
@@ -489,17 +522,21 @@ class ContinuousEngine(_EngineBase):
         for i, (req, slot) in enumerate(zip(reqs, slots)):
             sub_i = sub if nb == 1 else tree_take_slot(
                 sub, self._pcache0, i, nb)
-            (self.cache, self.tokens, self.done, self.remaining,
-             self.temps, self.slot_keys, first) = self._admit_jit(
+            out = self._admit_jit(
                 self.cache, self.tokens, self.done, self.remaining,
                 self.temps, self.slot_keys, sub_i, logits[i:i + 1],
                 jnp.int32(slot), self._budget(req) - 1,
                 float(req.temperature), jnp.int32(req.rid))
-            self._pending_first[slot] = first   # fetched at drain
+            (self.cache, self.tokens, self.done, self.remaining,
+             self.temps, self.slot_keys) = out[:6]
+            # (first token, logprob-or-None): fetched at drain
+            self._pending_first[slot] = (
+                out[6], out[7] if self.capture_logprobs else None)
             self.active[slot] = req
             self.stats["admitted"] += 1
 
-    def _drain(self, toks_np: np.ndarray) -> None:
+    def _drain(self, toks_np: np.ndarray,
+               lps_np: np.ndarray | None = None) -> None:
         n = toks_np.shape[0]
         now = time.perf_counter()
         for slot, req in enumerate(self.active):
@@ -507,9 +544,12 @@ class ContinuousEngine(_EngineBase):
                 continue
             budget = self._budget(req)
             if self._pending_first[slot] is not None:
-                first = int(np.asarray(self._pending_first[slot]))
+                first_dev, lp_dev = self._pending_first[slot]
+                first = int(np.asarray(first_dev))
                 self._pending_first[slot] = None
                 req.out_tokens.append(first)
+                if lp_dev is not None:
+                    req.out_logprobs.append(float(np.asarray(lp_dev)))
                 req.t_first = now
                 self.stats["tokens_out"] += 1
                 if first == self.eos_id or len(req.out_tokens) >= budget:
@@ -521,6 +561,8 @@ class ContinuousEngine(_EngineBase):
                 if tok < 0:      # slot was done before this step
                     break
                 req.out_tokens.append(tok)
+                if lps_np is not None:
+                    req.out_logprobs.append(float(lps_np[t, slot]))
                 self.stats["tokens_out"] += 1
                 if tok == self.eos_id or len(req.out_tokens) >= budget:
                     self._retire(req)
@@ -539,13 +581,17 @@ class ContinuousEngine(_EngineBase):
          self.slot_keys, toks) = self._chunk_jit(
             self.params, self.cache, self.tokens, self.done,
             self.remaining, self.temps, self.slot_keys, n=n)
+        lps_np = None
+        if self.capture_logprobs:
+            toks, lps = toks
+            lps_np = np.asarray(lps)   # same chunk-granular sync point
         toks_np = np.asarray(toks)              # ONE host sync per chunk
         self.stats["host_syncs"] += 1
         self.stats["decode_chunks"] += 1
         self.stats["decode_steps"] += n
         self.stats["total_slot_steps"] += n * self.slots
         self.stats["busy_slot_steps"] += int((toks_np >= 0).sum())
-        self._drain(toks_np)
+        self._drain(toks_np, lps_np)
         return sum(r is not None for r in self.active)
 
 

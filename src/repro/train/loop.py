@@ -71,11 +71,20 @@ class TrainerConfig:
 
 class ElasticTrainer:
     def __init__(self, model, cfg: TrainerConfig, data_cfg: DataConfig,
-                 init_params, sim: ClusterSimulator):
+                 init_params, sim: ClusterSimulator, *,
+                 batch_provider: Callable | None = None,
+                 boundary_hook: Callable | None = None):
         self.model = model
         self.cfg = cfg
         self.data_cfg = data_cfg
         self.sim = sim
+        # batch_provider(global_step, h, k) -> stacked (H, k, ...) batch
+        # pytree: replaces the TokenPipeline feed (the RL tier's
+        # rollout-buffer batcher plugs in here); boundary_hook(t, self)
+        # runs after each outer boundary's sync + bookkeeping — the RL
+        # PolicyPublisher ships the fresh anchor from it
+        self.batch_provider = batch_provider
+        self.boundary_hook = boundary_hook
         self.optimizer = AdamW(lr=cfg.inner_lr)
         self.retry = RetryPolicy()
         live = sim.hb.live_ids()
@@ -109,6 +118,10 @@ class ElasticTrainer:
                 f"2*(k-1)+1 = {2 * (cfg.max_workers - 1) + 1} to hide "
                 "the whole ring.", stacklevel=2)
         self._inflight: dl.OuterSyncHandle | None = None
+        # two-slot EF lineage counter: alternates 0/1 per begin so each
+        # overlapped boundary reads/writes its own residual slot (see
+        # diloco.begin_outer_sync_sim; persists across run() calls)
+        self._ef_begins = 0
         self.comm_ledger = CommOverlapLedger()
         self.history: list[dict] = []
         self._pipelines = {}
@@ -240,9 +253,12 @@ class ElasticTrainer:
             active = jnp.asarray(
                 self.slots.live_mask(plan["live"]), jnp.float32)
 
-            batches = jax.tree.map(
-                lambda *xs: jnp.stack(xs),
-                *[self._batches(global_step + i) for i in range(h)])
+            if self.batch_provider is not None:
+                batches = self.batch_provider(global_step, h, self.k)
+            else:
+                batches = jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[self._batches(global_step + i) for i in range(h)])
             losses = self._run_inner_phase(batches, active)
             global_step += h
 
@@ -295,6 +311,10 @@ class ElasticTrainer:
             join_rec = self.poll_stream_join()
             if join_rec is not None:
                 rec["stream_join"] = join_rec
+            if self.boundary_hook is not None:
+                hook_rec = self.boundary_hook(t, self)
+                if hook_rec:
+                    rec["boundary_hook"] = hook_rec
             self.history.append(rec)
 
             if self.cfg.ckpt_dir and \
@@ -463,7 +483,9 @@ class ElasticTrainer:
         w = jnp.asarray(np.asarray(weights), jnp.float32)
         h_new = dl.begin_outer_sync_sim(
             self.params, self.outer, self.cfg.diloco,
-            ring_order=self.ring_order[: self.k], weights=w)
+            ring_order=self.ring_order[: self.k], weights=w,
+            ef_slot=self._ef_begins % 2)
+        self._ef_begins += 1
         rec: dict = {"hops": h_new.hops_total}
         prev = self._inflight
         if prev is not None:

@@ -182,20 +182,94 @@ def test_delayed_apply_roots_at_begin_time_snapshot(rng):
         np.asarray(eng.flatten(st2.anchor)))
 
 
-def test_delayed_overlap_rejects_error_feedback(rng):
-    p0, stacked = _stacked(rng)
+def test_delayed_ef_two_slot_shapes(rng):
+    """EF + delayed overlap allocates one residual slot per interleaved
+    anchor lineage: (2, n) distributed, (2, k, n) sim."""
+    p0, _ = _stacked(rng)
     cfg = dl.DiLoCoConfig(quant="int8", error_feedback=True,
                           overlap="delayed")
-    st = dl.init_outer_state_sim(p0, cfg, 4)
-    with pytest.raises(NotImplementedError):
-        dl.begin_outer_sync_sim(stacked, st, cfg)
+    n = sum(l.size for l in jax.tree.leaves(p0))
+    assert dl.init_outer_state(p0, cfg).residual.shape == (2, n)
+    assert dl.init_outer_state_sim(p0, cfg, 4).residual.shape == \
+        (2, 4, n)
+    # overlap='none' keeps the single-slot layout bit-for-bit
+    cfg0 = dl.DiLoCoConfig(quant="int8", error_feedback=True)
+    assert dl.init_outer_state_sim(p0, cfg0, 4).residual.shape == (4, n)
+
+
+def test_delayed_ef_commits_in_order(rng):
+    """The PR-5 rejection, now the acceptance test: under the trainer's
+    begin-new -> finish-old boundary order, every begin must read the
+    residual committed by the SAME lineage's previous boundary (t-2) —
+    and a finish must never clobber the other lineage's residual with
+    its begin-time snapshot."""
+    from repro.core.sync_engine import SyncEngine
+
+    p0, stacked_a = _stacked(rng, k=3)
+    stacked_b = jax.tree.map(lambda x: x * 1.03, stacked_a)
+    stacked_c = jax.tree.map(lambda x: x * 0.97, stacked_a)
+    stacked_d = jax.tree.map(lambda x: x * 1.01, stacked_a)
+    cfg = dl.DiLoCoConfig(quant="int8", error_feedback=True,
+                          overlap="delayed")
+    st0 = dl.init_outer_state_sim(p0, cfg, 3)
+    eng = SyncEngine.for_tree(p0)
+    raw = lambda st, stacked: st.anchor_flat[None, :] - \
+        jax.vmap(eng.flatten)(stacked)
+    rt = jax.vmap(lambda x: dl._ef_roundtrip(x, cfg))
+
+    def expect(raw_pgs, read_res):
+        pre = raw_pgs + read_res
+        return pre - rt(pre)
+
+    # boundary 0: begin against zero residual
+    h0 = dl.begin_outer_sync_sim(stacked_a, st0, cfg, ef_slot=0)
+    r0 = expect(raw(st0, stacked_a), 0.0)
+    np.testing.assert_array_equal(np.asarray(h0.new_residuals),
+                                  np.asarray(r0))
+    # boundary 1: begin BEFORE finish_0 lands (trainer order) — its
+    # lineage (slot 1) is still zero
+    h1 = dl.begin_outer_sync_sim(stacked_b, st0, cfg, ef_slot=1)
+    r1 = expect(raw(st0, stacked_b), 0.0)
+    _, st1 = dl.finish_outer_sync_sim(h0, stacked_b, st0)
+    np.testing.assert_array_equal(np.asarray(st1.residual[0]),
+                                  np.asarray(r0))
+    # boundary 2: slot 0 must read r0 (committed by finish_0)
+    h2 = dl.begin_outer_sync_sim(stacked_c, st1, cfg, ef_slot=0)
+    r2 = expect(raw(st1, stacked_c), r0)
+    np.testing.assert_array_equal(np.asarray(h2.new_residuals),
+                                  np.asarray(r2))
+    _, st2 = dl.finish_outer_sync_sim(h1, stacked_c, st1)
+    # the in-order-commit property: finish_1 (whose begin snapshotted
+    # st0, where slot 0 was zero) must NOT wipe slot 0's r0
+    np.testing.assert_array_equal(np.asarray(st2.residual[0]),
+                                  np.asarray(r0))
+    np.testing.assert_array_equal(np.asarray(st2.residual[1]),
+                                  np.asarray(r1))
+    # boundary 3: slot 1 reads r1
+    h3 = dl.begin_outer_sync_sim(stacked_d, st2, cfg, ef_slot=1)
+    r3 = expect(raw(st2, stacked_d), r1)
+    np.testing.assert_array_equal(np.asarray(h3.new_residuals),
+                                  np.asarray(r3))
+    _, st3 = dl.finish_outer_sync_sim(h2, stacked_d, st2)
+    np.testing.assert_array_equal(np.asarray(st3.residual[0]),
+                                  np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(st3.residual[1]),
+                                  np.asarray(r1))
+    # torn-overlap fallback commits through the same slot merge: the
+    # resync of a slot-0 handle must preserve slot 1's fresh r3
+    h4 = dl.begin_outer_sync_sim(stacked_a, st3, cfg, ef_slot=0)
+    _, st4 = dl.finish_outer_sync_sim(h3, stacked_a, st3)
+    w = jnp.asarray([1.0, 0.0, 1.0], jnp.float32)
+    _, st5 = dl.resync_outer_sim(h4, stacked_a, st4, w)
+    np.testing.assert_array_equal(np.asarray(st5.residual[1]),
+                                  np.asarray(r3))
 
 
 # -- elastic trainer: chunked inner phase + delayed application ---------------
 
 
 def _trainer(overlap, chunks, events=(), inner=3, workers=3,
-             max_workers=4):
+             max_workers=4, ef=False):
     from repro.configs import CONFIGS
     from repro.data.pipeline import DataConfig
     from repro.models.registry import get_model
@@ -208,7 +282,7 @@ def _trainer(overlap, chunks, events=(), inner=3, workers=3,
                       total_steps=inner * 16)
     tcfg = TrainerConfig(
         diloco=dl.DiLoCoConfig(inner_steps=inner, quant="int8",
-                               overlap=overlap),
+                               overlap=overlap, error_feedback=ef),
         inner_lr=3e-3, max_workers=max_workers, inner_chunks=chunks)
     return ElasticTrainer(model, tcfg, dcfg, params,
                           ClusterSimulator(list(range(workers)),
@@ -253,6 +327,34 @@ def test_delayed_trains_and_hides_comm():
     assert steady and all(r["hidden_frac"] > 0.99 for r in steady)
     assert tr.comm_ledger.records[-1]["hidden_frac"] < 0.01
     assert all(h["overlap"]["hops"] == 2 * (tr.k - 1) for h in hist)
+
+
+def test_delayed_ef_trainer_first_step_equals_sync_ef():
+    """With zero initial residuals, one delayed outer step (+drain)
+    reduces the same EF-rewritten phase-0 pseudo-gradients the
+    synchronous EF schedule does — anchors match bit-for-bit."""
+    a = _trainer("none", 1, ef=True)
+    b = _trainer("delayed", 3, ef=True)
+    a.run(1)
+    b.run(1)
+    np.testing.assert_array_equal(np.asarray(a.outer.anchor_flat),
+                                  np.asarray(b.outer.anchor_flat))
+
+
+def test_delayed_ef_trainer_alternates_slots_across_runs():
+    """EF + delayed overlap trains end-to-end: the two residual
+    lineages both accumulate, and the begin counter keeps alternating
+    across run() calls (a second run must not re-read slot 0 twice)."""
+    tr = _trainer("delayed", 4, ef=True, inner=4)
+    hist = tr.run(3)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    res = np.asarray(tr.outer.residual)
+    assert res.shape[0] == 2
+    assert np.abs(res[0]).max() > 0 and np.abs(res[1]).max() > 0
+    assert tr._ef_begins == 3
+    hist = tr.run(2)
+    assert tr._ef_begins == 5
+    assert all(np.isfinite(h["loss"]) for h in hist)
 
 
 def test_worker_death_mid_overlap_falls_back_bit_consistently():

@@ -1,0 +1,358 @@
+"""Async RL tier: staleness window + exact ledger accounting, GRPO
+advantages/loss/batching, policy publish -> pin -> adopt -> retire
+lifecycle (bit-exact over int8 AND int4 delta chains, typed
+retired-version errors), logprob-capturing engine, and the end-to-end
+driver with mid-run worker churn."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CONFIGS
+from repro.rl.buffer import Rollout, RolloutBuffer
+from repro.rl import grpo as G
+from repro.rl.policy_pub import (PolicyPublisher, PolicyRetiredError,
+                                 tree_sha)
+
+
+def _ro(rid, version, group=0, toks=(3, 4, 5), prompt=(5, 6)):
+    toks = list(toks)
+    return Rollout(rid=rid, prompt=np.asarray(prompt, np.int32),
+                   tokens=toks, logprobs=[-1.0] * len(toks),
+                   version=version, group=group)
+
+
+# -- staleness window ---------------------------------------------------------
+
+
+def test_staleness_accepts_iff_within_window():
+    """A rollout k versions behind enters a batch iff
+    k <= max_policy_lag — for every k, both modes."""
+    for mode in ("drop", "downweight"):
+        for k in range(5):
+            buf = RolloutBuffer()
+            buf.add([_ro(1, version=10 - k)])
+            out = buf.drain(10, max_policy_lag=2, mode=mode)
+            assert (len(out) == 1) == (k <= 2), (mode, k)
+            led = buf.ledger
+            assert led.generated == 1
+            assert led.accepted + led.dropped_stale == 1
+            assert led.dropped_stale == (0 if k <= 2 else 1)
+
+
+def test_staleness_exact_accounting_with_leftovers():
+    buf = RolloutBuffer(capacity=8)
+    buf.add([_ro(i, version=0) for i in range(10)])   # 2 evicted
+    out = buf.drain(3, max_policy_lag=2)              # lag 3: all stale
+    assert out == []
+    buf.add([_ro(i, version=3) for i in range(3)])
+    out = buf.drain(3, max_policy_lag=2)
+    buf.add([_ro(99, version=3)])                     # left buffered
+    led = buf.ledger
+    assert led.generated == 14
+    assert led.generated == led.accepted + led.dropped_stale \
+        + led.evicted_capacity + len(buf)
+    assert (led.accepted, led.dropped_stale,
+            led.evicted_capacity, len(buf)) == (3, 8, 2, 1)
+
+
+def test_downweight_mode_weights_by_lag_inside_window():
+    buf = RolloutBuffer()
+    buf.add([_ro(i, version=5 - k) for i, k in enumerate(range(4))])
+    out = buf.drain(5, max_policy_lag=2, mode="downweight",
+                    stale_gamma=0.5)
+    assert [w for _, w in out] == [1.0, 0.5, 0.25]    # lag 0,1,2
+    assert buf.ledger.dropped_stale == 1              # lag 3: hard drop
+    assert buf.ledger.downweighted == 2
+
+
+def test_future_version_rollout_is_a_bug_not_a_drop():
+    buf = RolloutBuffer()
+    buf.add([_ro(1, version=7)])
+    with pytest.raises(ValueError, match="FUTURE"):
+        buf.drain(5, max_policy_lag=2)
+
+
+# -- GRPO ---------------------------------------------------------------------
+
+
+def test_group_advantages_normalize_within_group():
+    adv = G.group_advantages([1.0, 2.0, 3.0, 5.0, 5.0],
+                             [0, 0, 0, 1, 1])
+    np.testing.assert_allclose(adv[:3].mean(), 0.0, atol=1e-6)
+    np.testing.assert_allclose(adv[:3].std(), 1.0, atol=1e-6)
+    # zero-variance group: filtered to zero, not divided by zero
+    np.testing.assert_array_equal(adv[3:], [0.0, 0.0])
+
+
+def test_toy_reward_excludes_pad_and_eos():
+    vocab = 512
+    assert G.toy_low_token_reward([0, 1], vocab) == 0.0
+    assert G.toy_low_token_reward([2, 127], vocab) == 1.0
+    assert G.toy_low_token_reward([2, 128], vocab) == 0.5
+    assert G.toy_low_token_reward([], vocab) == 0.0
+
+
+def test_render_example_masks_completion_span_only():
+    r = _ro(1, 0, toks=[10, 11, 12], prompt=[5, 6, 7])
+    ex = G.render_example(r, advantage=2.0, weight=0.5, seq_len=8)
+    # full = [5 6 7 10 11 12]; inp = full[:-1], tgt = full[1:]
+    np.testing.assert_array_equal(ex.inp, [5, 6, 7, 10, 11, 0, 0, 0])
+    np.testing.assert_array_equal(ex.tgt, [6, 7, 10, 11, 12, 0, 0, 0])
+    np.testing.assert_array_equal(ex.mask, [0, 0, 1, 1, 1, 0, 0, 0])
+    np.testing.assert_array_equal(ex.adv, np.asarray(
+        [0, 0, 1, 1, 1, 0, 0, 0], np.float32) * 1.0)
+
+
+def test_grpo_model_rejects_families_without_logits():
+    from repro.models.registry import get_model
+    encdec = get_model(CONFIGS["seamless-m4t-medium"].reduced())
+    with pytest.raises(TypeError, match="logits"):
+        G.GRPOModel(encdec)
+
+
+def test_grpo_loss_gradient_raises_positive_advantage_logprob():
+    """One SGD step on the GRPO loss must raise the log-prob of
+    positively-advantaged completion tokens."""
+    from repro.models.registry import get_model
+    model = get_model(CONFIGS["internlm2-1.8b"].reduced())
+    gm = G.GRPOModel(model)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(2, 100, (2, 12)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(2, 100, (2, 12)), jnp.int32),
+        "mask": jnp.ones((2, 12), jnp.float32),
+        "adv": jnp.ones((2, 12), jnp.float32),
+    }
+
+    def logp(p):
+        _, m = gm.loss(p, batch)
+        return m["mean_logp"]
+
+    (loss, metrics), g = jax.value_and_grad(gm.loss, has_aux=True)(
+        params, batch)
+    stepped = jax.tree.map(lambda p, gr: p - 0.05 * gr, params, g)
+    assert float(logp(stepped)) > float(logp(params))
+
+
+def test_grpo_batcher_cycles_pool_and_reports_starvation():
+    b = G.GRPOBatcher(seq_len=8, batch_per_worker=2)
+    out = b(0, h=2, k=2)                       # starved: zero fallback
+    assert b.starved_phases == 1
+    assert out["tokens"].shape == (2, 2, 2, 8)
+    assert float(out["adv"].sum()) == 0.0      # zero gradient
+    rs = [_ro(i, 0, toks=[10 + i]) for i in range(3)]
+    b.ingest([(r, 1.0, 1.0) for r in rs])
+    out = b(1, h=1, k=2)
+    assert b.starved_phases == 1
+    # deterministic cycling: 4 draws over a 3-pool wrap around
+    toks = np.asarray(out["tokens"]).reshape(4, 8)
+    np.testing.assert_array_equal(toks[0], toks[3])
+
+
+# -- publish -> pin -> adopt -> retire lifecycle ------------------------------
+
+
+def _tree(rng, scale=1.0):
+    return {"w": rng.normal(size=(64,)).astype(np.float32) * scale,
+            "b": rng.normal(size=(7,)).astype(np.float32)}
+
+
+@pytest.mark.parametrize("codec", ["int8", "int4"])
+def test_published_chain_restores_bit_exact(tmp_path, codec):
+    """Every version of the delta chain restores bit-for-bit to the
+    publisher's recorded reconstruction — int8 and int4."""
+    from repro.checkpointing import ChunkStore, delta
+    pub = PolicyPublisher(str(tmp_path / "pub"), codec=codec,
+                          base_every=4, keep_live=16)
+    rng = np.random.default_rng(0)
+    trees, refs = [], []
+    for v in range(6):
+        t = _tree(rng)
+        pub.publish(v, t)
+        trees.append(t)
+        refs.append(pub.writer.reference(t))
+    like = trees[0]
+    for v in range(6):
+        got, meta = delta.restore(pub.store, like, step=v)
+        assert tree_sha(got) == pub.shas[v], (codec, v)
+        for k in like:
+            np.testing.assert_array_equal(got[k], refs[v][k])
+        assert meta["policy_version"] == v
+    # base versions ARE the raw tree, exactly
+    for k in like:
+        np.testing.assert_array_equal(refs[0][k], trees[0][k])
+        np.testing.assert_array_equal(refs[4][k], trees[4][k])
+
+
+def test_publisher_retention_respects_consumer_pins(tmp_path):
+    """The lagging-consumer race: a version retired while a consumer
+    session holds its chain pin must survive gc until the pin drops."""
+    pub = PolicyPublisher(str(tmp_path / "pub"), base_every=1,
+                          keep_live=32)
+    rng = np.random.default_rng(1)
+    for v in range(4):
+        pub.publish(v, _tree(rng))
+    token = pub.store.pin_chain(0)          # consumer mid-stream on v0
+    pub.retire(0)
+    assert pub.store.load_manifest(0)["step"] == 0   # pinned: survives
+    pub.store.unpin(token)
+    pub.store.gc(keep_steps=tuple(pub.live_versions))
+    with pytest.raises(FileNotFoundError):
+        pub.store.load_manifest(0)          # pin gone: collected
+
+
+def test_force_retire_refuses_to_sever_live_chains(tmp_path):
+    pub = PolicyPublisher(str(tmp_path / "pub"), base_every=8,
+                          keep_live=32)
+    rng = np.random.default_rng(2)
+    for v in range(3):
+        pub.publish(v, _tree(rng))          # v0 base, v1/v2 deltas
+    with pytest.raises(ValueError, match="chain link"):
+        pub.retire(0, force=True)
+    assert pub.safe_to_retire(2)            # chain tip: safe
+
+
+def test_keep_live_auto_retires_old_versions(tmp_path):
+    pub = PolicyPublisher(str(tmp_path / "pub"), base_every=1,
+                          keep_live=2)
+    rng = np.random.default_rng(3)
+    for v in range(5):
+        pub.publish(v, _tree(rng))
+    assert pub.live_versions == [3, 4]
+    assert pub.retired == [0, 1, 2]
+
+
+# -- worker adoption over the wire --------------------------------------------
+
+
+def _small_model():
+    from repro.models.registry import get_model
+    cfg = CONFIGS["internlm2-1.8b"].reduced()
+    return cfg, get_model(cfg)
+
+
+@pytest.mark.parametrize("codec", ["int8", "int4"])
+def test_worker_adoption_bit_exact_over_wire(tmp_path, codec):
+    """Full adopt path: swarm fetch of the delta chain + replay +
+    sha verification against the publisher's policy_sha op. The
+    adopted params must EQUAL the published reconstruction."""
+    from repro.rl.rollout import RolloutWorker
+    cfg, model = _small_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    pub = PolicyPublisher(str(tmp_path / "pub"), codec=codec,
+                          base_every=2, keep_live=8)
+    peer = pub.serve()
+    try:
+        pub.publish(0, {"params": params})
+        bumped = jax.tree.map(lambda p: p + 1e-3, params)
+        pub.publish(1, {"params": bumped})
+        w = RolloutWorker(0, model, params, str(tmp_path / "w0"),
+                          max_len=32)
+        rec = w.adopt([peer.addr])
+        assert rec["version"] == 1 and rec["sha_verified"]
+        assert w.adopted_sha == pub.shas[1]
+        want = pub.writer.reference({"params": bumped})["params"]
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)),
+            w.engine.params, want)
+        # rollouts are tagged with the adopted version
+        ros, _ = w.generate([np.asarray([5, 6, 7], np.int32)],
+                            max_new=4)
+        assert ros[0].version == 1
+        assert len(ros[0].logprobs) == len(ros[0].tokens)
+    finally:
+        peer.close()
+
+
+def test_adopting_force_retired_version_raises_typed(tmp_path):
+    from repro.rl.rollout import RolloutWorker
+    cfg, model = _small_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    pub = PolicyPublisher(str(tmp_path / "pub"), base_every=1,
+                          keep_live=8)
+    peer = pub.serve()
+    try:
+        pub.publish(0, {"params": params})
+        pub.publish(1, {"params": params})
+        pub.retire(0, force=True)
+        w = RolloutWorker(0, model, params, str(tmp_path / "w0"),
+                          max_len=32)
+        with pytest.raises(PolicyRetiredError):
+            w.adopt([peer.addr], version=0)
+        assert w.adopt([peer.addr])["version"] == 1   # latest still fine
+    finally:
+        peer.close()
+
+
+# -- logprob capture ----------------------------------------------------------
+
+
+def test_engine_logprob_capture_matches_uncaptured_tokens():
+    """capture_logprobs must not change the sampled stream, and every
+    captured logprob is finite, <= 0, and 1:1 with out_tokens."""
+    from repro.serving.engine import ContinuousEngine, Request
+    cfg, model = _small_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab, size=n).astype(np.int32)
+               for n in (3, 5, 4)]
+
+    def run(capture):
+        eng = ContinuousEngine(model, params, batch_slots=2,
+                               max_len=32, capture_logprobs=capture,
+                               seed=7)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=6,
+                        temperature=1.0)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        return reqs
+
+    plain = run(False)
+    cap = run(True)
+    for a, b in zip(plain, cap):
+        assert a.out_tokens == b.out_tokens
+        assert a.out_logprobs == []
+        assert len(b.out_logprobs) == len(b.out_tokens)
+        assert all(np.isfinite(lp) and lp <= 0.0
+                   for lp in b.out_logprobs)
+
+
+# -- end-to-end driver --------------------------------------------------------
+
+
+def test_driver_end_to_end_with_churn(tmp_path):
+    """Trainer + 2 staggered workers, one killed and rejoined mid-run,
+    one old version force-retired: every adoption bit-exact, ledger
+    exact, nothing outside the staleness window trains."""
+    from repro.rl import RLConfig, RLDriver
+    cfg = RLConfig(outer_steps=4, inner_steps=2, n_groups=4,
+                   group_size=4, max_new=6, max_policy_lag=1,
+                   adopt_strides=(1, 3), base_every=1,
+                   kill_at=1, rejoin_at=2, force_retire_at=3)
+    drv = RLDriver(cfg, tmp_path)
+    try:
+        s = drv.run()
+    finally:
+        drv.close()
+    led = s["ledger"]
+    assert s["bit_exact"]
+    assert led["max_accepted_lag"] <= cfg.max_policy_lag
+    assert led["generated"] == led["accepted"] + led["dropped_stale"] \
+        + led["evicted_capacity"] + len(drv.buffer)
+    assert s["versions_published"] == cfg.outer_steps + 1
+    assert s["retired_fallbacks"] == 1
+    assert len(s["reward_trend"]) == cfg.outer_steps
+    assert all(np.isfinite(r) for r in s["reward_trend"])
+    # the killed worker produced nothing at t=1, everything again at 2+
+    churned = [r["churn"] for r in drv.step_recs]
+    assert churned[1].get("killed") == cfg.kill_worker
+    assert churned[2].get("rejoined") == cfg.kill_worker
+    w1 = [st for r in drv.step_recs for st in r["rollout"]["workers"]
+          if st["worker"] == cfg.kill_worker]
+    assert len(w1) == cfg.outer_steps - 1
