@@ -149,6 +149,136 @@ def _flash_decode_call(qg, k, v, length, *, window: int | None,
     return out[:, :, :g, :dh]
 
 
+def _paged_body(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                m_ref, l_ref, *, blk: int, s_max: int,
+                window: int | None, scale: float):
+    """Same online-softmax math as `_body`, but the KV block streamed
+    this grid step is whichever PHYSICAL pool block the slot's table
+    maps for virtual block s — the gather happens in the BlockSpec
+    index map (scalar-prefetched table), so the kernel body only ever
+    sees contiguous (blk, dh) tiles. Virtual cell indices (for length /
+    SWA-ring masking) are reconstructed from the grid position, which
+    also masks trash-block reads (unmapped entries clamp to block 0 but
+    their virtual cells are always >= the slot's length)."""
+    b = pl.program_id(0)
+    s_i = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(s_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0, 0]              # (G_p, dh_p)
+    k = k_ref[0, :, 0, :]        # (blk, dh_p)
+    v = v_ref[0, :, 0, :]
+    length = len_ref[b]
+
+    cell = s_i * blk + jax.lax.broadcasted_iota(
+        jnp.int32, (1, blk), 1)
+    if window is None:
+        valid = (cell < length) & (cell < s_max)
+    else:
+        rem = length % s_max
+        abs_pos = jnp.where(
+            length > s_max,
+            jnp.where(cell < rem, length - rem + cell,
+                      length - rem - s_max + cell),
+            cell)
+        valid = ((abs_pos < length) & (abs_pos >= length - window)
+                 & (cell < s_max))
+
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (G_p, blk)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1,
+                                              keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o_ref[0, 0] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(s_i == ns - 1)
+    def _finalize():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _flash_decode_paged_call(qg, k, v, table, length, *,
+                             window: int | None, interpret: bool):
+    """qg: (B, Hk, G, dh); k/v: (N_blocks, blk, Hk, dh) physical pool;
+    table: (B, nb) int32 (-1 = unmapped); length: (B,)."""
+    b, hk, g, dh = qg.shape
+    blk = k.shape[1]
+    nb = table.shape[1]
+    s_max = nb * blk
+    g_p = _pad_to(g, SUBLANE)
+    dh_p = _pad_to(dh, LANE)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_p - g), (0, dh_p - dh)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, dh_p - dh)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dh_p - dh)))
+    tbl = jnp.maximum(table, 0).astype(jnp.int32)   # clamp to trash blk
+
+    kernel = functools.partial(_paged_body, blk=blk, s_max=s_max,
+                               window=window, scale=dh ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hk, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_p, dh_p),
+                         lambda b, h, s, tbl, ln: (b, h, 0, 0)),
+            # the block-gather stage: virtual block s of slot b streams
+            # physical pool block tbl[b, s] through VMEM
+            pl.BlockSpec((1, blk, 1, dh_p),
+                         lambda b, h, s, tbl, ln: (tbl[b, s], 0, h, 0)),
+            pl.BlockSpec((1, blk, 1, dh_p),
+                         lambda b, h, s, tbl, ln: (tbl[b, s], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_p, dh_p),
+                               lambda b, h, s, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g_p, 1), jnp.float32),
+            pltpu.VMEM((g_p, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hk, g_p, dh_p), jnp.float32),
+        interpret=interpret,
+    )(tbl, length.astype(jnp.int32), qg, k, v)
+    return out[:, :, :g, :dh]
+
+
+def flash_decode_paged(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       table: jnp.ndarray, length: jnp.ndarray, *,
+                       window: int | None = None,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Flash-decode against a paged (block-table) KV pool.
+
+    q: (B, 1, Hq, dh); k/v: (N_blocks, blk, Hk, dh); table: (B, nb)
+    block ids; length: (B,) per-slot lengths. Bitwise-equivalent to
+    `flash_decode` with ``s_blk = blk`` on the dense gathered view
+    (identical per-block accumulation order)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, t, hq, dh = q.shape
+    hk = k.shape[2]
+    qg = q.reshape(b, hk, hq // hk, dh)
+    out = _flash_decode_paged_call(qg, k, v, table, length,
+                                   window=window, interpret=interpret)
+    return out.reshape(b, t, hq, dh).astype(q.dtype)
+
+
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  length: jnp.ndarray, *, window: int | None = None,
                  s_blk: int = S_BLOCK,

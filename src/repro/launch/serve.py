@@ -116,7 +116,14 @@ def main():
     ap.add_argument("--arch", default="mamba2-130m")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--engine", default="continuous",
-                    choices=["wave", "continuous"])
+                    choices=["wave", "continuous", "paged"])
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged engine: KV cells per physical block")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="paged engine: physical pool size (default "
+                         "matches the dense per-slot budget)")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling threshold (0 = off)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -157,11 +164,15 @@ def main():
     if args.swarm:
         _run_swarm(args, cfg, model, params)
         return
-    engine = make_engine(args.engine, model, params,
-                         batch_slots=args.slots, max_len=args.max_len,
-                         bucket_prompts=not args.no_bucket,
-                         decode_chunk=args.decode_chunk,
-                         top_k=args.top_k, seed=args.seed)
+    engine_kw = dict(batch_slots=args.slots, max_len=args.max_len,
+                     bucket_prompts=not args.no_bucket,
+                     decode_chunk=args.decode_chunk,
+                     top_k=args.top_k, top_p=args.top_p,
+                     seed=args.seed)
+    if args.engine == "paged":
+        engine_kw.update(block_size=args.block_size,
+                         pool_blocks=args.pool_blocks)
+    engine = make_engine(args.engine, model, params, **engine_kw)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = max(1, int(rng.integers(args.prompt_len // 2,
@@ -182,6 +193,12 @@ def main():
           f"occupancy={s['slot_occupancy']:.2f} "
           f"host_syncs={s['host_syncs']} "
           f"prefill_widths={s['prefill_widths']}")
+    if args.engine == "paged":
+        print(f"block_size={s['block_size']} "
+              f"blocks_peak={s['blocks_peak']}/{s['pool_blocks']} "
+              f"prefix_hit_rate={s['prefix_hit_rate']:.2f} "
+              f"cow_forks={s['cow_forks']} "
+              f"paged_extends={s['paged_extends']}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,86 @@ class KVCache(NamedTuple):
         return cls(z, jnp.copy(z), jnp.zeros((batch,), jnp.int32))
 
 
+class PagedKVCache(NamedTuple):
+    """Block-table KV cache: a global physical block pool shared by all
+    slots, indexed per slot through a block table.
+
+    Virtual cell ``c`` of slot ``b`` lives at physical cell
+    ``(table[b, c // blk], c % blk)``. Physical block 0 is a reserved
+    TRASH block — never mapped by any table — so writes past a slot's
+    allocation (done slots padding out a decode chunk, pad tails of a
+    bucketed prefill) land harmlessly instead of corrupting a neighbor;
+    ``-1`` table entries mean "unmapped" and clamp to the trash block.
+    Block allocation/refcounting is host-side (serving.paging.BlockPool);
+    the device only ever sees the materialized table."""
+    k: jnp.ndarray        # (N_blocks, blk, Hk, dh) physical pool
+    v: jnp.ndarray        # (N_blocks, blk, Hk, dh)
+    table: jnp.ndarray    # (B, nb) int32 block ids, -1 = unmapped
+    length: jnp.ndarray   # (B,) int32 — tokens written PER SLOT (absolute)
+
+    @classmethod
+    def init(cls, n_blocks: int, block: int, n_kv: int, head_dim: int,
+             batch: int, max_blocks: int,
+             dtype=jnp.bfloat16) -> "PagedKVCache":
+        z = jnp.zeros((n_blocks, block, n_kv, head_dim), dtype)
+        return cls(z, jnp.copy(z),
+                   jnp.full((batch, max_blocks), -1, jnp.int32),
+                   jnp.zeros((batch,), jnp.int32))
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[-3]
+
+    @property
+    def s_max(self) -> int:
+        """Virtual per-slot capacity in cells."""
+        return self.table.shape[-1] * self.k.shape[-3]
+
+
+def paged_view(cache: PagedKVCache) -> KVCache:
+    """Gather the pool through the table into a dense per-slot view.
+
+    Cell-for-cell identical to the dense cache a `KVCache` of the same
+    virtual capacity would hold (unmapped blocks read the trash block;
+    those cells are masked by ``length`` everywhere downstream), so any
+    dense consumer is bitwise-correct on the view."""
+    tbl = jnp.maximum(cache.table, 0)                 # (B, nb)
+    b = tbl.shape[0]
+    k = cache.k[tbl].reshape(b, -1, *cache.k.shape[2:])
+    v = cache.v[tbl].reshape(b, -1, *cache.v.shape[2:])
+    return KVCache(k, v, cache.length)
+
+
+def paged_cache_update(cache: PagedKVCache, k_new: jnp.ndarray,
+                       v_new: jnp.ndarray, *,
+                       rolling: bool = False) -> PagedKVCache:
+    """Append S_new tokens through the block table.
+
+    Same per-slot write-cursor semantics as the dense `cache_update`
+    (start at ``length``, SWA wraps mod the virtual ring size); the
+    scatter routes each (slot, cell) to (table[slot, cell // blk],
+    cell % blk). Cells past the virtual capacity or landing on an
+    unmapped (-1) entry are redirected to the trash block — duplicate
+    trash indices are the only scatter collisions, and their values are
+    never read."""
+    blk = cache.block_size
+    nb = cache.table.shape[1]
+    s_max = nb * blk
+    s_new = k_new.shape[1]
+    start = cache.length % s_max if rolling else cache.length    # (B,)
+    cells = start[:, None] + jnp.arange(s_new)[None, :]          # (B, S)
+    if rolling:
+        cells = cells % s_max
+    live = cells < s_max
+    bi = jnp.clip(cells // blk, 0, nb - 1)
+    phys = jnp.take_along_axis(cache.table, bi, axis=1)          # (B, S)
+    phys = jnp.where(live & (phys >= 0), phys, 0)
+    off = jnp.where(live, cells % blk, 0)
+    k = cache.k.at[phys, off].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[phys, off].set(v_new.astype(cache.v.dtype))
+    return PagedKVCache(k, v, cache.table, cache.length + s_new)
+
+
 def _grouped(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
     """(B, T, Hq, dh) -> (B, T, Hk, G, dh)."""
     b, t, hq, dh = q.shape
@@ -170,7 +250,18 @@ def decode_attention(q: jnp.ndarray, cache: KVCache, *,
     contractions reduce locally per shard and XLA merges partials
     (flash-decoding). For SWA the cache is a rolling buffer of size >=
     window. ``impl="pallas"`` selects the fused flash-decode TPU kernel
-    (interpret mode off-TPU)."""
+    (interpret mode off-TPU). Paged caches attend through the block
+    table: the Pallas path gathers blocks inside the kernel via
+    scalar-prefetched table lookups, the jnp path through a dense
+    gathered view (bitwise identical to the dense cache by
+    construction)."""
+    if isinstance(cache, PagedKVCache):
+        if impl == "pallas":
+            from repro.kernels import flash_decode
+            return flash_decode.flash_decode_paged(
+                q, cache.k, cache.v, cache.table, cache.length,
+                window=window)
+        cache = paged_view(cache)
     if impl == "pallas":
         from repro.kernels import flash_decode
         return flash_decode.flash_decode(q, cache.k, cache.v,
@@ -204,7 +295,10 @@ def cache_update(cache: KVCache, k_new: jnp.ndarray,
     freshly prefilled slot can sit next to slots deep into decode.
     Rolling mode wraps into a window-sized ring buffer; for prefill
     writes larger than the buffer, slice to the last s_max tokens and
-    bump ``length`` before calling (see transformer.prefill)."""
+    bump ``length`` before calling (see transformer.prefill). Paged
+    caches dispatch to the block-table scatter."""
+    if isinstance(cache, PagedKVCache):
+        return paged_cache_update(cache, k_new, v_new, rolling=rolling)
     s_max = cache.k.shape[1]
     s_new = k_new.shape[1]
     start = cache.length % s_max if rolling else cache.length   # (B,)

@@ -41,6 +41,12 @@ class ModelDef:
     # packaged cross-entropy (the RL/GRPO tier). None for families
     # whose forward needs more than tokens (enc-dec).
     logits: Callable[..., jnp.ndarray] | None = None
+    # prefill_extend(params, batch, cache) -> (logits, cache): resume
+    # prefill at batch["start"] with segment batch["tokens"] /
+    # batch["seg_len"] — chunked/paged prefill and shared-prefix
+    # resume. None for families without a stable resume offset
+    # (SSM/hybrid state folds, enc-dec).
+    prefill_extend: Callable[..., tuple[jnp.ndarray, Any]] | None = None
 
     def cache_pspecs(self, cache_shapes, plan, mesh_axes):
         """PartitionSpec tree for a cache pytree (path-aware: KV caches
@@ -129,10 +135,17 @@ def _lm_def(cfg: ArchConfig) -> ModelDef:
     def logits(params, tokens, remat=False):
         return transformer.forward(cfg, params, tokens, remat=remat)[0]
 
+    def prefill_extend(params, batch, cache):
+        return transformer.prefill_extend(
+            cfg, params, batch["tokens"], cache,
+            start=batch["start"], seg_len=batch["seg_len"])
+
     return ModelDef(cfg, functools.partial(transformer.init_lm, cfg),
                     loss, init_cache, prefill, decode,
                     functools.partial(_lm_input_specs, cfg),
-                    logits=logits)
+                    logits=logits,
+                    prefill_extend=(None if cfg.sliding_window
+                                    else prefill_extend))
 
 
 # -- encoder-decoder -----------------------------------------------------------

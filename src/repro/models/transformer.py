@@ -327,7 +327,17 @@ def stage_prefill(cfg, params, inp, cache, *, first: bool, last: bool,
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     is_moe = cfg.moe is not None
     rolling = cfg.sliding_window is not None
-    s_max = cache["scan"].k.shape[2] if cache["scan"] is not None else 0
+    scan_c = cache["scan"]
+    if scan_c is None:
+        s_max = 0
+    elif isinstance(scan_c, attn.PagedKVCache):
+        if rolling:
+            raise ValueError(
+                "direct paged SWA prefill unsupported — prefill dense "
+                "scratch and paginate (serving.paging)")
+        s_max = scan_c.s_max
+    else:
+        s_max = scan_c.k.shape[2]
 
     def write(cache_layer, kv):
         k, v = kv
@@ -430,6 +440,87 @@ def stage_decode(cfg, params, inp, cache, *, first: bool, last: bool):
     if not last:
         return x, new_cache
     return _head_logits(cfg, params, x), new_cache
+
+
+def prefill_extend(cfg, params, tokens, cache, *, start, seg_len):
+    """Chunked prefill: run one (right-padded) prompt SEGMENT at
+    absolute offset ``start`` against an already-partial cache.
+
+    ``tokens``: (B, S) segment, right-padded; ``start``: scalar int32,
+    absolute position of tokens[:, 0] — must equal the cache's current
+    per-slot ``length`` (the write cursor); ``seg_len``: scalar int32,
+    true segment length (<= S). Returns (last-token logits (B, V),
+    cache with ``length = start + seg_len``).
+
+    Every query row recomputes its FULL softmax over the whole live
+    prefix (earlier segments read back from the cache + this segment's
+    fresh K/V) — no online-softmax splitting — so chaining segments
+    reproduces the single-shot ``prefill`` exactly, which is what lets
+    prompts exceed one dense prefill bucket (paged caches: exceed
+    ``max_len`` entirely) and lets shared-prefix admission resume after
+    a content-addressed prefix hit. Full-causal only: an SWA ring has
+    no stable absolute cells to resume into."""
+    if cfg.sliding_window is not None:
+        raise ValueError("prefill_extend is full-causal only (SWA "
+                         "rings roll; resume offsets are undefined)")
+    x = common.embedding_lookup(params["embed"], tokens)
+    b, s, _ = x.shape
+    start = jnp.asarray(start, jnp.int32)
+    seg_len = jnp.asarray(seg_len, jnp.int32)
+    positions = jnp.broadcast_to(start + jnp.arange(s)[None], (b, s))
+    is_moe = cfg.moe is not None
+    hd = _head_dim(cfg)
+
+    def ext_layer(p, x, layer_cache, moe_layer: bool):
+        x = hint_residual(x)
+        h = common.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", h, p["wq"]).reshape(
+            b, s, cfg.n_heads, hd)
+        k = jnp.einsum("bsd,dh->bsh", h, p["wk"]).reshape(
+            b, s, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bsd,dh->bsh", h, p["wv"]).reshape(
+            b, s, cfg.n_kv_heads, hd)
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+        new = attn.cache_update(layer_cache, k, v)   # writes at length
+        view = attn.paged_view(new) \
+            if isinstance(new, attn.PagedKVCache) else new
+        o = attn.attention(q, view.k, view.v, causal=True,
+                           q_offset=start, block_q=cfg.block_q)
+        a = jnp.einsum("bsh,hd->bsd",
+                       o.reshape(b, s, cfg.n_heads * hd), p["wo"])
+        x = hint_residual(x + a)
+        f, _ = _ffn_block(cfg, p, x, moe_layer, serving=True)
+        return hint_residual(x + f), new
+
+    new_prefix = []
+    for i in range(len(cache["prefix"])):
+        x, c = ext_layer(params[f"dense{i}"], x, cache["prefix"][i],
+                         False)
+        new_prefix.append(c)
+
+    def body(x, pc):
+        p, c = pc
+        y, new_c = ext_layer(p, x, c, is_moe)
+        return y, new_c
+
+    x, new_scan = jax.lax.scan(body, x, (params["layers"],
+                                         cache["scan"]))
+
+    def fix_len(c):
+        # cache_update advanced length by the PADDED width; the true
+        # cursor is start + seg_len
+        return c._replace(length=jnp.broadcast_to(
+            (start + seg_len).astype(jnp.int32), c.length.shape))
+
+    is_cache = lambda c: isinstance(c, (attn.KVCache, attn.PagedKVCache))
+    new_cache = jax.tree.map(fix_len,
+                             {"scan": new_scan, "prefix": new_prefix},
+                             is_leaf=is_cache)
+    idx = jnp.broadcast_to(jnp.reshape(seg_len, (1, 1, 1)) - 1,
+                           (b, 1, 1))
+    x_last = jnp.take_along_axis(x, idx, axis=1)
+    return _head_logits(cfg, params, x_last), new_cache
 
 
 def prefill(cfg, params, tokens, cache, *, frontend=None,

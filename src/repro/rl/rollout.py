@@ -52,14 +52,20 @@ class RolloutWorker:
 
     def __init__(self, wid: int, model, like, store_root, *,
                  batch_slots: int = 4, max_len: int = 256,
-                 decode_chunk: int = 8, seed: int = 0, eos_id: int = 1):
+                 decode_chunk: int = 8, seed: int = 0, eos_id: int = 1,
+                 engine: str = "continuous", **engine_kw):
         self.wid = int(wid)
         self.model = model
         self.like = like
         self.store = ChunkStore(store_root)
+        # engine="paged" serves GRPO groups off the paged KV tier: the
+        # k samples of a group share their question prompt, so the
+        # content-addressed prefix index maps all k to the same
+        # physical blocks and k-1 prefills are skipped outright
+        self.engine_kind = engine
         self.engine_kw = dict(batch_slots=batch_slots, max_len=max_len,
                               decode_chunk=decode_chunk, eos_id=eos_id,
-                              seed=seed * 1009 + wid)
+                              seed=seed * 1009 + wid, **engine_kw)
         self.engine: ContinuousEngine | None = None
         self.version: int | None = None     # adopted policy version
         self.adopted_sha: str | None = None
@@ -99,11 +105,22 @@ class RolloutWorker:
                 f"published {pub_sha[:12]}")
         params = jax.tree.map(jax.numpy.asarray, tree["params"])
         if self.engine is None:
-            self.engine = ContinuousEngine(
-                self.model, params, capture_logprobs=True,
-                **self.engine_kw)
+            if self.engine_kind == "paged":
+                from repro.serving.paging import PagedEngine
+                self.engine = PagedEngine(
+                    self.model, params, capture_logprobs=True,
+                    **self.engine_kw)
+            else:
+                self.engine = ContinuousEngine(
+                    self.model, params, capture_logprobs=True,
+                    **self.engine_kw)
         else:
             self.engine.params = params
+            # cached prefix KV / logits were computed under the OLD
+            # policy — a params swap must invalidate the sharing index
+            flush = getattr(self.engine, "flush_prefix_cache", None)
+            if flush is not None:
+                flush()
         prev = self.version
         self.version = int(meta.get("policy_version", v))
         self.adopted_sha = sha

@@ -1,5 +1,8 @@
 from repro.serving.engine import (ContinuousEngine, Request, ServeEngine,
                                   WaveEngine, make_engine)
+from repro.serving.paging import (BlockPool, BlockPoolExhaustedError,
+                                  PagedEngine, PrefixIndex,
+                                  build_paged_cache, chain_digests)
 from repro.serving.swarm_serve import (ReplayBudgetError, StageRPCError,
                                        StageServer, StageUnservableError,
                                        SwarmRouter, publish_stages,
@@ -8,6 +11,8 @@ from repro.serving.swarm_serve import (ReplayBudgetError, StageRPCError,
 
 __all__ = ["Request", "ServeEngine", "WaveEngine", "ContinuousEngine",
            "make_engine",
+           "PagedEngine", "BlockPool", "BlockPoolExhaustedError",
+           "PrefixIndex", "build_paged_cache", "chain_digests",
            "StageServer", "SwarmRouter", "publish_stages",
            "restore_stage_params", "stage_chunk_id",
            "StageUnservableError", "ReplayBudgetError", "StageRPCError"]

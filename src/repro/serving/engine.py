@@ -41,6 +41,7 @@ import numpy as np
 from repro.configs.base import ShapeConfig
 
 MIN_BUCKET = 8        # smallest prompt pad bucket
+NEG_INF = -1e30
 
 
 @dataclasses.dataclass
@@ -69,12 +70,32 @@ def bucket_len(n: int) -> int:
     return b
 
 
+def nucleus_mask(scaled: jnp.ndarray, top_p: float) -> jnp.ndarray:
+    """(B, V) temperature-scaled logits -> bool keep-mask of the
+    smallest token set whose probability mass reaches ``top_p``.
+
+    On-device sorted-cumsum: sort descending, softmax, keep tokens
+    while the mass BEFORE them is < top_p (so the top-1 token always
+    survives and the set is minimal); the kept set maps back to vocab
+    order via a per-row logit threshold (ties at the threshold are all
+    kept)."""
+    srt = jnp.sort(scaled, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(srt, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < top_p
+    thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                     keepdims=True)
+    return scaled >= thresh
+
+
 def sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray,
-                  top_k: int = 0) -> jnp.ndarray:
+                  top_k: int = 0, top_p: float = 0.0) -> jnp.ndarray:
     """On-device per-slot sampling. logits (B, V), temps (B,).
 
     temp == 0 -> greedy (bitwise argmax, matching the wave engine);
-    temp > 0 -> categorical over logits/temp, optionally top-k-masked.
+    temp > 0 -> categorical over logits/temp, optionally top-k- and/or
+    nucleus (top-p)-masked (nucleus applies first, on the scaled
+    distribution; top-k then picks from the surviving set).
     ``key`` is either one key for the whole batch (legacy: categorical
     draws independent gumbels per row, but the draw depends on the
     slot's NEIGHBORS) or a (B, 2) stack of PER-SLOT keys — each slot
@@ -84,6 +105,8 @@ def sample_tokens(logits: jnp.ndarray, key, temps: jnp.ndarray,
     lg = logits.astype(jnp.float32)
     greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
     safe = jnp.where(temps > 0, temps, 1.0)[:, None]
+    if top_p and top_p > 0.0:
+        lg = jnp.where(nucleus_mask(lg / safe, top_p), lg, NEG_INF)
     per_slot = key.ndim == 2
     if top_k and top_k > 0:
         vals, idx = jax.lax.top_k(lg, top_k)
@@ -370,12 +393,23 @@ class ContinuousEngine(_EngineBase):
     kind = "continuous"
 
     def __init__(self, model, params, *, decode_chunk: int = 8,
-                 top_k: int = 0, seed: int = 0, batch_admit: bool = True,
+                 top_k: int = 0, top_p: float = 0.0, seed: int = 0,
+                 batch_admit: bool = True, overlap_admission: bool = False,
                  capture_logprobs: bool = False, **kw):
         super().__init__(model, params, **kw)
         self.decode_chunk = decode_chunk
         self.top_k = top_k
+        self.top_p = top_p
         self.batch_admit = batch_admit
+        # overlap admission prefill with the in-flight decode chunk:
+        # after the chunk is DISPATCHED (before its blocking host
+        # read), queued requests prefill into B=1 sub-caches the device
+        # can overlap with the running scan; they splice at the next
+        # chunk boundary. Bit-identical to serial admission — per-rid
+        # PRNG streams and exact right-padded prefill are placement-
+        # and timing-independent.
+        self.overlap_admission = overlap_admission
+        self._prepped: deque = deque()
         # RL rollout mode: the decode scan additionally emits each
         # sampled token's log-prob (one extra (N, B) row in the same
         # host transfer). Off by default — the serving path's compiled
@@ -413,11 +447,20 @@ class ContinuousEngine(_EngineBase):
         The request's PRNG stream is derived from (engine seed, rid) —
         slot placement never enters the key chain."""
         cache = tree_insert_slot(cache, sub_cache, slot, self.slots)
+        return self._admit_state(cache, tokens, done, remaining, temps,
+                                 slot_keys, logits, slot, budget, temp,
+                                 rid)
+
+    def _admit_state(self, cache, tokens, done, remaining, temps,
+                     slot_keys, logits, slot, budget, temp, rid):
+        """Post-splice half of admission: first-token sample + per-slot
+        scheduler state reset (shared by the dense splice and the paged
+        engine's block-table paths)."""
         req_key = jax.random.fold_in(self.base_key, rid)
         k_first, k_stream = jax.random.split(req_key)
         first = sample_tokens(logits, k_first[None, :],
                               jnp.reshape(temp, (1,)).astype(jnp.float32),
-                              self.top_k)                 # (1,)
+                              self.top_k, self.top_p)     # (1,)
         tokens = jax.lax.dynamic_update_slice(
             tokens, first.reshape(1, 1).astype(jnp.int32), (slot, 0))
         budget = jnp.reshape(budget, (1,)).astype(jnp.int32)
@@ -451,7 +494,8 @@ class ContinuousEngine(_EngineBase):
             logits, cache = self.model.decode(params, tokens, cache)
             nk = jax.vmap(jax.random.split)(keys)        # (B, 2, 2)
             step_keys, keys = nk[:, 0], nk[:, 1]
-            nxt = sample_tokens(logits, step_keys, temps, self.top_k)
+            nxt = sample_tokens(logits, step_keys, temps, self.top_k,
+                                self.top_p)
             remaining = remaining - jnp.where(done, 0, 1)
             newly = (~done) & ((nxt == self.eos_id) | (remaining <= 0))
             emit = jnp.where(done, -1, nxt)
@@ -488,6 +532,9 @@ class ContinuousEngine(_EngineBase):
         test asserts bitwise."""
         free = [s for s in range(self.slots)
                 if self.active[s] is None]
+        while free and self._prepped:       # overlap-prefilled splice
+            req, sub, logits = self._prepped.popleft()
+            self._install(req, free.pop(0), sub, logits)
         n = min(len(free), len(self.queue))
         if n == 0:
             return
@@ -498,6 +545,27 @@ class ContinuousEngine(_EngineBase):
             slots = free[taken:taken + len(grp)]
             taken += len(grp)
             self._admit_group(grp, slots)
+
+    def _prep_admissions(self) -> None:
+        """Dispatch B=1 admission prefills for queued requests while
+        the decode chunk is still running on device (called between
+        chunk dispatch and its blocking host read). The results wait in
+        ``_prepped`` and splice at the next chunk boundary."""
+        while self.queue and len(self._prepped) < self.slots:
+            req = self.queue.popleft()
+            assert 1 <= len(req.prompt) <= self.max_len, \
+                f"prompt length {len(req.prompt)} vs {self.max_len}"
+            padded = self._padded_len(len(req.prompt))
+            tokens = np.full((1, padded), self.pad_id, np.int32)
+            tokens[0, :len(req.prompt)] = req.prompt
+            self.stats["prefill_widths"].add(padded)
+            self.stats["prefills"] += 1
+            logits, sub = self._prefill(
+                self.params,
+                {"tokens": jnp.asarray(tokens),
+                 "prompt_len": jnp.asarray([len(req.prompt)], np.int32)},
+                self._pcache0)
+            self._prepped.append((req, sub, logits))
 
     def _admit_group(self, reqs: list, slots: list) -> None:
         for req in reqs:
@@ -522,18 +590,27 @@ class ContinuousEngine(_EngineBase):
         for i, (req, slot) in enumerate(zip(reqs, slots)):
             sub_i = sub if nb == 1 else tree_take_slot(
                 sub, self._pcache0, i, nb)
-            out = self._admit_jit(
-                self.cache, self.tokens, self.done, self.remaining,
-                self.temps, self.slot_keys, sub_i, logits[i:i + 1],
-                jnp.int32(slot), self._budget(req) - 1,
-                float(req.temperature), jnp.int32(req.rid))
-            (self.cache, self.tokens, self.done, self.remaining,
-             self.temps, self.slot_keys) = out[:6]
-            # (first token, logprob-or-None): fetched at drain
-            self._pending_first[slot] = (
-                out[6], out[7] if self.capture_logprobs else None)
-            self.active[slot] = req
-            self.stats["admitted"] += 1
+            self._install(req, slot, sub_i, logits[i:i + 1])
+
+    def _install(self, req: Request, slot: int, sub_cache,
+                 logits) -> None:
+        """Splice one prefilled request (batch-1 sub-cache + last-token
+        logits row) into ``slot`` via the jitted admit step."""
+        out = self._admit_jit(
+            self.cache, self.tokens, self.done, self.remaining,
+            self.temps, self.slot_keys, sub_cache, logits,
+            jnp.int32(slot), self._budget(req) - 1,
+            float(req.temperature), jnp.int32(req.rid))
+        self._finish_install(req, slot, out)
+
+    def _finish_install(self, req: Request, slot: int, out) -> None:
+        (self.cache, self.tokens, self.done, self.remaining,
+         self.temps, self.slot_keys) = out[:6]
+        # (first token, logprob-or-None): fetched at drain
+        self._pending_first[slot] = (
+            out[6], out[7] if self.capture_logprobs else None)
+        self.active[slot] = req
+        self.stats["admitted"] += 1
 
     def _drain(self, toks_np: np.ndarray,
                lps_np: np.ndarray | None = None) -> None:
@@ -555,6 +632,7 @@ class ContinuousEngine(_EngineBase):
                 if first == self.eos_id or len(req.out_tokens) >= budget:
                     self._retire(req)
                     self.active[slot] = None
+                    self._release_slot(slot)
                     continue
             for t in range(n):
                 tok = int(toks_np[t, slot])
@@ -567,7 +645,23 @@ class ContinuousEngine(_EngineBase):
                 if tok == self.eos_id or len(req.out_tokens) >= budget:
                     self._retire(req)
                     self.active[slot] = None
+                    self._release_slot(slot)
                     break
+
+    # -- scheduler seams (paged engine overrides) -----------------------------
+
+    def _release_slot(self, slot: int) -> None:
+        """Called when ``slot`` retires — the paged engine releases its
+        block refs here."""
+
+    def _before_chunk(self) -> None:
+        """Called after admission, before the decode chunk is
+        dispatched — the paged engine's copy-on-write fork point."""
+
+    def _after_chunk(self, n: int) -> None:
+        """Called after the chunk's host read — bookkeeping that must
+        mirror the device write cursors (every slot's cache length
+        advanced by ``n``)."""
 
     def step(self) -> int:
         """One scheduling quantum: admit into free slots, run one
@@ -576,11 +670,16 @@ class ContinuousEngine(_EngineBase):
         self._admit()
         if not any(r is not None for r in self.active):
             return 0
+        self._before_chunk()
         n = self.decode_chunk
         (self.cache, self.tokens, self.done, self.remaining,
          self.slot_keys, toks) = self._chunk_jit(
             self.params, self.cache, self.tokens, self.done,
             self.remaining, self.temps, self.slot_keys, n=n)
+        if self.overlap_admission:
+            # the chunk above is dispatched but not yet read back:
+            # admission prefills ride the gap
+            self._prep_admissions()
         lps_np = None
         if self.capture_logprobs:
             toks, lps = toks
@@ -591,6 +690,7 @@ class ContinuousEngine(_EngineBase):
         self.stats["decode_steps"] += n
         self.stats["total_slot_steps"] += n * self.slots
         self.stats["busy_slot_steps"] += int((toks_np >= 0).sum())
+        self._after_chunk(n)
         self._drain(toks_np, lps_np)
         return sum(r is not None for r in self.active)
 
@@ -601,11 +701,13 @@ ServeEngine = WaveEngine
 
 def make_engine(kind: str, model, params, **kw):
     if kind == "wave":
-        kw.pop("decode_chunk", None)
-        kw.pop("top_k", None)
-        kw.pop("seed", None)
-        kw.pop("batch_admit", None)
+        for k in ("decode_chunk", "top_k", "top_p", "seed",
+                  "batch_admit", "overlap_admission"):
+            kw.pop(k, None)
         return WaveEngine(model, params, **kw)
     if kind == "continuous":
         return ContinuousEngine(model, params, **kw)
+    if kind == "paged":
+        from repro.serving.paging import PagedEngine
+        return PagedEngine(model, params, **kw)
     raise ValueError(f"unknown engine kind {kind!r}")

@@ -84,6 +84,7 @@ import time
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpointing import checkpoint as _ckpt
@@ -92,6 +93,7 @@ from repro.checkpointing.p2p import (FetchError, PeerConn, PeerConnPool,
                                      _recv_frame, _send_frame)
 from repro.checkpointing.store import ChunkStore
 from repro.checkpointing.swarm import ChunkPeer, swarm_fetch
+from repro.models import attention as attn
 from repro.models import registry
 from repro.serving.engine import bucket_len
 
@@ -138,6 +140,51 @@ def _decode_arr(blob: bytes, meta: dict) -> np.ndarray:
                                  tuple(meta["shape"]))
 
 
+# -- paged stage KV ------------------------------------------------------------
+
+
+def _is_paged(x) -> bool:
+    return isinstance(x, attn.PagedKVCache)
+
+
+def _paged_view(pool_c, row, ln):
+    """Assemble the B=1 paged cache one request sees: the stage's
+    shared pool arrays plus the request's own table row / length."""
+    if pool_c.k.ndim == 5:
+        nl = pool_c.k.shape[0]
+        table = jnp.broadcast_to(row[None, None], (nl, 1, row.shape[0]))
+        length = jnp.broadcast_to(jnp.reshape(ln, (1, 1)), (nl, 1))
+    else:
+        table = row[None]
+        length = jnp.reshape(ln, (1,))
+    return pool_c._replace(table=table.astype(jnp.int32),
+                           length=length.astype(jnp.int32))
+
+
+def _paged_scatter(pool_c, dense_c, row, blk):
+    """Copy a freshly prefilled dense B=1 stage cache leaf into the
+    pool blocks ``row`` maps (cells past the allocation hit the trash
+    block — they are pad positions beyond ``plen``)."""
+    nb = row.shape[0]
+    s = dense_c.k.shape[-3]
+    w = min(s, nb * blk)
+    cells = jnp.arange(w)
+    phys = row[cells // blk]
+    phys = jnp.where(phys >= 0, phys, 0)
+    off = cells % blk
+    if pool_c.k.ndim == 5:
+        k = pool_c.k.at[:, phys, off].set(
+            dense_c.k[:, 0, :w].astype(pool_c.k.dtype))
+        v = pool_c.v.at[:, phys, off].set(
+            dense_c.v[:, 0, :w].astype(pool_c.v.dtype))
+    else:
+        k = pool_c.k.at[phys, off].set(
+            dense_c.k[0, :w].astype(pool_c.k.dtype))
+        v = pool_c.v.at[phys, off].set(
+            dense_c.v[0, :w].astype(pool_c.v.dtype))
+    return pool_c._replace(k=k, v=v)
+
+
 # -- weight distribution -------------------------------------------------------
 
 
@@ -179,15 +226,32 @@ class StageServer(ChunkPeer):
 
     def __init__(self, cfg, store: ChunkStore, *, k_stages: int,
                  host: str = "127.0.0.1", port: int = 0,
-                 max_len: int = 256, **fault_knobs):
+                 max_len: int = 256, kv_layout: str = "dense",
+                 block_size: int = 16, pool_blocks: int | None = None,
+                 **fault_knobs):
         self.cfg = cfg
         self.k_stages = int(k_stages)
         self.max_len = int(max_len)
+        # kv_layout="paged": ONE physical block pool per served stage
+        # instead of a max_len-wide cache per request — concurrent
+        # requests share the pool, each holding only ceil(len/blk)
+        # blocks (+1 lazily at each block boundary during decode).
+        # Exhaustion is a typed "kv-exhausted" RPC error the router
+        # treats like any peer failure: fail over to another holder.
+        self.kv_layout = kv_layout
+        self.block_size = int(block_size)
+        self.pool_blocks = pool_blocks
+        if kv_layout == "paged" and \
+                getattr(cfg, "sliding_window", None) is not None:
+            raise ValueError("paged kv_layout does not support SWA "
+                             "ring caches in the stage tier")
         self._stage_defs = registry.make_stages(cfg, k_stages)
         self._stages: dict[int, object] = {}      # sid -> params
         self._reqs: dict[tuple, dict] = {}        # (rid, sid) -> state
         self._jits: dict[tuple, object] = {}
+        self._pools: dict[int, dict] = {}         # sid -> paged pool
         self._slock = threading.Lock()
+        self._plock = threading.Lock()   # serializes pool read-mod-write
         super().__init__(store, host, port, **fault_knobs)
 
     # -- stage lifecycle -----------------------------------------------------
@@ -269,6 +333,111 @@ class StageServer(ChunkPeer):
         _send_frame(conn, json.dumps(payload).encode())
         return True
 
+    def _paged_pool(self, sid: int) -> dict:
+        """Lazily build stage ``sid``'s shared block pool (pool arrays
+        + host allocator). Caller holds ``_plock``."""
+        ent = self._pools.get(sid)
+        if ent is None:
+            from repro.serving.paging import (BlockPool,
+                                              paged_cache_from_template)
+            stage = self._stage_defs[sid]
+            template = jax.eval_shape(
+                lambda: stage.init_cache(1, self.max_len))
+            # default: 4 requests' worth of blocks — the pool exists
+            # to hold several concurrent requests, not one
+            want = self.pool_blocks or \
+                4 * (self.max_len // self.block_size) + 1
+            cache, nb, n_blocks = paged_cache_from_template(
+                template, slots=1, block_size=self.block_size,
+                n_blocks=want)
+            ent = {"cache": cache, "pool": BlockPool(n_blocks),
+                   "nb": nb}
+            self._pools[sid] = ent
+        return ent
+
+    def _row_arr(self, ent: dict, row: list) -> jnp.ndarray:
+        r = np.full((ent["nb"],), -1, np.int32)
+        r[:len(row)] = row
+        return jnp.asarray(r)
+
+    def _paged_install(self, conn, sid: int, rid, plen: int,
+                       new_cache) -> bool:
+        """Move a fresh dense stage prefill into pool blocks and record
+        the request's (row, length). Returns False on pool exhaustion
+        (error already sent)."""
+        from repro.serving.paging import BlockPoolExhaustedError
+        with self._plock:
+            ent = self._paged_pool(sid)
+            with self._slock:
+                old = self._reqs.get((rid, sid))
+            if old is not None:
+                for b in old.get("row", ()):
+                    ent["pool"].decref(b)
+            try:
+                row = ent["pool"].alloc(
+                    max(1, -(-plen // self.block_size)))
+            except BlockPoolExhaustedError as e:
+                with self._slock:
+                    self._reqs.pop((rid, sid), None)
+                self._err(conn, error="kv-exhausted", sid=sid,
+                          detail=str(e))
+                return False
+            rowd = self._row_arr(ent, row)
+            ent["cache"] = jax.tree.map(
+                lambda c, nc: _paged_scatter(c, nc, rowd,
+                                             self.block_size),
+                ent["cache"], new_cache, is_leaf=_is_paged)
+            with self._slock:
+                self._reqs[(rid, sid)] = {"row": row, "len": plen,
+                                          "last_out": None}
+        return True
+
+    def _paged_decode(self, conn, params, sid: int, rid, x,
+                      req: dict) -> bool:
+        from repro.serving.paging import BlockPoolExhaustedError
+        with self._plock:
+            with self._slock:
+                state = self._reqs.get((rid, sid))
+            if state is None:
+                return self._err(conn, error="no-such-request",
+                                 rid=rid, sid=sid)
+            seq = int(req.get("seq", state["len"]))
+            if seq == state["len"] - 1 and \
+                    state["last_out"] is not None:
+                self._respond_tensor(conn, state["last_out"])
+                return True
+            if seq != state["len"]:
+                return self._err(conn, error="seq-mismatch", rid=rid,
+                                 sid=sid, expect=state["len"], got=seq)
+            ent = self._paged_pool(sid)
+            ln = state["len"]
+            bi = ln // self.block_size
+            if bi >= ent["nb"]:
+                return self._err(conn, error="kv-exhausted", sid=sid,
+                                 detail=f"request at capacity "
+                                        f"{ent['nb'] * self.block_size}")
+            if bi >= len(state["row"]):     # lazy growth at boundary
+                try:
+                    state["row"] += ent["pool"].alloc(1)
+                except BlockPoolExhaustedError as e:
+                    return self._err(conn, error="kv-exhausted",
+                                     sid=sid, detail=str(e))
+            rowd = self._row_arr(ent, state["row"])
+            view = jax.tree.map(
+                lambda c: _paged_view(c, rowd, jnp.int32(ln)),
+                ent["cache"], is_leaf=_is_paged)
+            out, new_view = self._jit("decode", sid)(params, x, view)
+            ent["cache"] = jax.tree.map(
+                lambda c, nc: c._replace(k=nc.k, v=nc.v),
+                ent["cache"], new_view, is_leaf=_is_paged)
+            out_np = np.asarray(out)
+            with self._slock:
+                self._reqs[(rid, sid)] = {"row": state["row"],
+                                          "len": ln + 1,
+                                          "last_out": out_np}
+        self._respond_tensor(conn, out_np)
+        return True
+
     def _handle_stage_op(self, conn, req: dict) -> bool:
         blob = _recv_frame(conn)
         sid, rid = int(req["sid"]), req["rid"]
@@ -277,6 +446,8 @@ class StageServer(ChunkPeer):
         if params is None:
             return self._err(conn, error="no-such-stage", sid=sid)
         x = jax.numpy.asarray(_decode_arr(blob, req["meta"]))
+        if req["op"] == "decode_stage" and self.kv_layout == "paged":
+            return self._paged_decode(conn, params, sid, rid, x, req)
         if req["op"] == "prefill_stage":
             stage = self._stage_defs[sid]
             cache = stage.init_cache(1, self.max_len)
@@ -285,10 +456,17 @@ class StageServer(ChunkPeer):
                 params, x, cache,
                 jax.numpy.asarray([plen], jax.numpy.int32))
             if req.get("install", True):
-                with self._slock:
-                    self._reqs[(rid, sid)] = {
-                        "cache": new_cache, "len": plen,
-                        "last_out": None}
+                if self.kv_layout == "paged":
+                    # same dense prefill (bit-identical logits), then
+                    # the KV moves into pool blocks
+                    if not self._paged_install(conn, sid, rid, plen,
+                                               new_cache):
+                        return True         # kv-exhausted already sent
+                else:
+                    with self._slock:
+                        self._reqs[(rid, sid)] = {
+                            "cache": new_cache, "len": plen,
+                            "last_out": None}
         else:                                       # decode_stage
             with self._slock:
                 state = self._reqs.get((rid, sid))
@@ -317,10 +495,16 @@ class StageServer(ChunkPeer):
         return True
 
     def release(self, rid: str) -> int:
-        with self._slock:
-            gone = [k for k in self._reqs if k[0] == rid]
-            for k in gone:
-                del self._reqs[k]
+        with self._plock:
+            with self._slock:
+                gone = [k for k in self._reqs if k[0] == rid]
+                states = [self._reqs.pop(k) for k in gone]
+            if self.kv_layout == "paged":
+                for (_, sid), st in zip(gone, states):
+                    ent = self._pools.get(sid)
+                    if ent is not None:
+                        for b in st.get("row", ()):
+                            ent["pool"].decref(b)
         return len(gone)
 
     # -- op dispatch ---------------------------------------------------------

@@ -137,7 +137,7 @@ class StageFleet:
 
     def __init__(self, cfg, params, root: pathlib.Path, *,
                  k_stages: int, replicas: int = 2, max_len: int = 128,
-                 serve_seed_peer: bool = True):
+                 serve_seed_peer: bool = True, **server_kw):
         from repro.models import registry
         from repro.serving import swarm_serve as sw
 
@@ -156,7 +156,7 @@ class StageFleet:
             for r in range(replicas):
                 store = ChunkStore(root / f"srv_{sid}_{r}")
                 srv = sw.StageServer(cfg, store, k_stages=k_stages,
-                                     max_len=max_len)
+                                     max_len=max_len, **server_kw)
                 srv.serve_stage(sid, sp)
                 self.servers[(sid, r)] = srv
         self._pools: list = []

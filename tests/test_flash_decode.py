@@ -90,6 +90,87 @@ def test_empty_slots_zero_output():
                                   np.zeros_like(np.asarray(out)))
 
 
+def _page(cache, blk, rng):
+    """Scatter a dense cache into a block pool with a PERMUTED physical
+    layout (block 0 reserved as the trash block) — the paged kernel
+    must be insensitive to where blocks physically live."""
+    kd, vd = np.asarray(cache.k), np.asarray(cache.v)
+    b, s, hk, dh = kd.shape
+    nb = s // blk
+    n_blocks = b * nb + 1
+    table = rng.permutation(np.arange(1, n_blocks)).reshape(
+        b, nb).astype(np.int32)
+    kp = np.zeros((n_blocks, blk, hk, dh), kd.dtype)
+    vp = np.zeros_like(kp)
+    for bi in range(b):
+        for i in range(nb):
+            kp[table[bi, i]] = kd[bi, i * blk:(i + 1) * blk]
+            vp[table[bi, i]] = vd[bi, i * blk:(i + 1) * blk]
+    return (jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(table),
+            cache.length)
+
+
+@pytest.mark.parametrize("case,blk", [((3, 64, 2, 4, 16), 16),
+                                      ((2, 40, 1, 1, 32), 8),
+                                      ((1, 128, 4, 3, 64), 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_matches_dense_kernel_bitwise(case, blk, dtype):
+    """flash_decode_paged over a permuted block pool is BITWISE equal
+    to flash_decode with s_blk == blk on the dense view (identical
+    per-block accumulation order) — the property the paged engine's
+    dense-foil identity rests on."""
+    from repro.kernels import flash_decode
+    b, s, hk, g, dh = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    q = jnp.asarray(rng.normal(size=(b, 1, hk * g, dh)), dtype)
+    length = rng.integers(0, s + 1, size=b)
+    length[0] = s
+    cache = _rand_cache(rng, b, s, hk, dh, dtype, length)
+    kp, vp, table, ln = _page(cache, blk, rng)
+    ref = flash_decode.flash_decode(q, cache.k, cache.v, cache.length,
+                                    s_blk=blk)
+    out = flash_decode.flash_decode_paged(q, kp, vp, table, ln)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(ref, np.float32))
+
+
+def test_paged_swa_ring_bitwise():
+    """Rolling (SWA) slots: the paged ring stores the same mod-S_max
+    cell layout as the dense ring, lengths beyond the ring width."""
+    from repro.kernels import flash_decode
+    b, s, hk, g, dh, window, blk = 2, 32, 2, 2, 16, 24, 16
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(b, 1, hk * g, dh)), jnp.float32)
+    cache = _rand_cache(rng, b, s, hk, dh, jnp.float32, [33, 41])
+    kp, vp, table, ln = _page(cache, blk, rng)
+    ref = flash_decode.flash_decode(q, cache.k, cache.v, cache.length,
+                                    window=window, s_blk=blk)
+    out = flash_decode.flash_decode_paged(q, kp, vp, table, ln,
+                                          window=window)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_paged_unmapped_table_entries_are_masked():
+    """Table entries past the live prefix are -1 (unmapped); the
+    length mask must make whatever those rows gather irrelevant —
+    the engine pads every slot's table row with -1."""
+    from repro.kernels import flash_decode
+    b, s, hk, g, dh, blk = 2, 64, 2, 2, 16, 16
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(size=(b, 1, hk * g, dh)), jnp.float32)
+    length = np.asarray([20, 33])          # 2 and 3 live blocks of 4
+    cache = _rand_cache(rng, b, s, hk, dh, jnp.float32, length)
+    kp, vp, table, ln = _page(cache, blk, rng)
+    tbl = np.asarray(table).copy()
+    for bi in range(b):
+        tbl[bi, (length[bi] + blk - 1) // blk:] = -1
+    ref = flash_decode.flash_decode(q, cache.k, cache.v, cache.length,
+                                    s_blk=blk)
+    out = flash_decode.flash_decode_paged(q, kp, vp,
+                                          jnp.asarray(tbl), ln)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
 @pytest.mark.parametrize("arch", ["internlm2-1.8b", "h2o-danube-1.8b"])
 def test_model_decode_step_pallas_matches_jnp(arch):
     """cfg.decode_attn_impl='pallas' must reproduce the jnp decode path

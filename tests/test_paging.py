@@ -1,0 +1,349 @@
+"""Paged KV serving tier: block-pool allocation/refcounts, paged-vs-
+dense greedy bit-identity across the model zoo, copy-on-write prefix
+sharing (GRPO dedup, fork isolation, refcount-zero-at-retire), chunked
+long-prompt prefill, typed pool exhaustion, nucleus (top-p) sampling,
+and overlapped admission equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS
+from repro.models.registry import get_model
+from repro.serving.engine import (ContinuousEngine, Request,
+                                  nucleus_mask, sample_tokens)
+from repro.serving.paging import (BlockPool, BlockPoolExhaustedError,
+                                  PagedEngine, chain_digests)
+
+MAX_LEN = 64
+CHUNK = 4
+
+
+@pytest.fixture(scope="module")
+def dense_world():
+    cfg = CONFIGS["internlm2-1.8b"].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mixed(cfg, n, seed=0, long_new=12):
+    rng = np.random.default_rng(seed)
+    spec = []
+    for i in range(n):
+        plen = int(rng.integers(20, 45)) if i % 3 == 2 else \
+            int(rng.integers(3, 20))
+        spec.append((i, rng.integers(2, cfg.vocab,
+                                     size=plen).astype(np.int32),
+                     long_new if i % 3 == 2 else 4))
+    return spec
+
+
+def _drain(engine, spec, **req_kw):
+    reqs = [Request(i, p, max_new_tokens=mn, **req_kw)
+            for i, p, mn in spec]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs]
+
+
+# -- block pool unit ----------------------------------------------------------
+
+
+def test_block_pool_alloc_release_refcount():
+    freed = []
+    pool = BlockPool(6, on_free=lambda bid, tags: freed.append(bid))
+    a = pool.alloc(3)
+    assert a == [1, 2, 3] and pool.used == 3
+    assert 0 not in pool.alloc(2)          # trash block never leaves
+    pool.incref(a[0])
+    assert pool.decref(a[0]) is False      # still one ref: not freed
+    assert pool.decref(a[0]) is True and freed == [1]
+    assert pool.used == 4
+    with pytest.raises(BlockPoolExhaustedError):
+        pool.alloc(2)                      # only block 1 came back
+    assert pool.stats["exhausted"] == 1
+    assert pool.stats["peak_used"] == 5
+
+
+def test_block_pool_pressure_hook_can_rescue():
+    pool = BlockPool(4)
+    held = pool.alloc(3)
+    pool.on_pressure = lambda p, short: p.decref(held[0])
+    assert pool.alloc(1) == [1]            # hook freed exactly enough
+
+
+def test_chain_digests_commit_to_prefix():
+    p1 = np.arange(2, 42, dtype=np.int32)            # 40 tokens
+    p2 = np.concatenate([p1[:32], p1[32:] + 7])      # diverges in tail
+    d1, t1 = chain_digests(p1, 16)
+    d2, t2 = chain_digests(p2, 16)
+    assert len(d1) == 2 and d1 == d2       # shared full blocks match
+    assert t1 != t2                        # tails commit to suffix
+    d3, _ = chain_digests(np.concatenate([p1[:16], p1[16:32] + 1]), 16)
+    assert d3[0] == d1[0] and d3[1] != d1[1]   # chain, not per-block
+
+
+# -- paged == dense greedy across the zoo -------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "h2o-danube-1.8b",
+                                  "zamba2-2.7b", "mamba2-130m"])
+def test_paged_matches_dense_greedy_zoo(arch):
+    """Dense GQA, SWA ring, attn/SSM hybrid, and pure SSM (where
+    paging degenerates to the dense path) — all bitwise identical."""
+    cfg = CONFIGS[arch].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    spec = _mixed(cfg, 6)
+    outs = {}
+    for kind, eng_cls in (("dense", ContinuousEngine),
+                          ("paged", PagedEngine)):
+        eng = eng_cls(model, params, batch_slots=3, max_len=MAX_LEN,
+                      decode_chunk=CHUNK)
+        outs[kind] = _drain(eng, spec)
+    assert outs["paged"] == outs["dense"]
+
+
+def test_paged_matches_dense_pallas_kernel_path(dense_world):
+    cfg, _, params = dense_world
+    cfg = dataclasses.replace(cfg, decode_attn_impl="pallas")
+    model = get_model(cfg)
+    spec = _mixed(cfg, 4)
+    dense = _drain(ContinuousEngine(model, params, batch_slots=2,
+                                    max_len=MAX_LEN,
+                                    decode_chunk=CHUNK), spec)
+    paged = _drain(PagedEngine(model, params, batch_slots=2,
+                               max_len=MAX_LEN, decode_chunk=CHUNK),
+                   spec)
+    assert paged == dense
+
+
+# -- copy-on-write prefix sharing ---------------------------------------------
+
+
+def test_grpo_group_prefix_dedup(dense_world):
+    """k samples over one shared question prompt: one prefill for the
+    co-resident group, the rest admit off shared blocks — and the
+    sampled outputs still match the dense engine bit for bit."""
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(11)
+    q = rng.integers(2, cfg.vocab, size=37).astype(np.int32)
+    spec = [(i, q.copy(), 6) for i in range(8)]
+    dense = _drain(ContinuousEngine(model, params, batch_slots=4,
+                                    max_len=MAX_LEN, decode_chunk=CHUNK,
+                                    seed=5), spec, temperature=0.8)
+    eng = PagedEngine(model, params, batch_slots=4, max_len=MAX_LEN,
+                      decode_chunk=CHUNK, seed=5)
+    paged = _drain(eng, spec, temperature=0.8)
+    assert paged == dense
+    s = eng.perf_summary()
+    assert s["prefix_hits"] >= 3           # co-resident group deduped
+    assert s["prefix_hit_rate"] > 0
+    assert eng.stats["prefills"] < len(spec)
+    assert eng.pool.used == 0              # everything released
+
+
+def test_full_prefix_hit_skips_prefill_entirely(dense_world):
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(13)
+    q = rng.integers(2, cfg.vocab, size=32).astype(np.int32)  # %blk==0
+    eng = PagedEngine(model, params, batch_slots=2, max_len=MAX_LEN,
+                      decode_chunk=CHUNK)
+    _drain(eng, [(0, q.copy(), 4), (1, q.copy(), 4)])
+    assert eng.stats["prefills"] == 1      # second: cached logits
+    assert eng.stats["prefix_hit_tokens"] >= len(q)
+
+
+def test_cow_fork_leaves_sibling_untouched(dense_world):
+    """Staggered admissions sharing a partial tail block: the second
+    request forks before its first write, so the first request's
+    decode continues on untouched KV — outputs equal the dense engine
+    for BOTH (and for a third request sharing only full blocks)."""
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(17)
+    pre = rng.integers(2, cfg.vocab, size=21).astype(np.int32)
+    spec = [(0, pre.copy(), 10), (1, pre.copy(), 10),
+            (2, np.concatenate(
+                [pre, rng.integers(2, cfg.vocab,
+                                   size=9).astype(np.int32)]), 10)]
+
+    def staggered(eng):
+        reqs = [Request(i, p, max_new_tokens=mn) for i, p, mn in spec]
+        eng.submit(reqs[0])
+        eng.step(); eng.step()             # req0 decodes alone first
+        eng.submit(reqs[1]); eng.submit(reqs[2])
+        eng.run_until_drained()
+        return [r.out_tokens for r in reqs]
+
+    dense = staggered(ContinuousEngine(model, params, batch_slots=2,
+                                       max_len=MAX_LEN,
+                                       decode_chunk=CHUNK))
+    eng = PagedEngine(model, params, batch_slots=2, max_len=MAX_LEN,
+                      decode_chunk=CHUNK)
+    assert staggered(eng) == dense
+    assert eng.stats["cow_forks"] >= 1
+
+
+def test_refcount_zero_exactly_at_retire(dense_world):
+    """Shared blocks stay referenced while ANY user is active and free
+    exactly when the last one retires (the prefix index holds no
+    refs)."""
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(19)
+    q = rng.integers(2, cfg.vocab, size=37).astype(np.int32)
+    eng = PagedEngine(model, params, batch_slots=3, max_len=MAX_LEN,
+                      decode_chunk=CHUNK)
+    reqs = [Request(i, q.copy(), max_new_tokens=4 + 6 * i)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    while eng.step() or eng.queue:
+        for slot, req in enumerate(eng.active):
+            if req is not None:            # live slots pin their blocks
+                assert all(eng.pool.ref[b] > 0
+                           for b in eng._slot_blocks[slot])
+    assert eng.pool.used == 0
+    assert not eng.prefix.blocks and not eng.prefix.tails
+
+
+def test_flush_prefix_cache_forces_reprefill(dense_world):
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(23)
+    q = rng.integers(2, cfg.vocab, size=32).astype(np.int32)
+    eng = PagedEngine(model, params, batch_slots=2, max_len=MAX_LEN,
+                      decode_chunk=CHUNK)
+    _drain(eng, [(0, q.copy(), 4)])
+    assert eng.prefix.tails                # registered
+    eng.flush_prefix_cache()               # e.g. policy re-adoption
+    assert not eng.prefix.blocks and not eng.prefix.tails
+    _drain(eng, [(1, q.copy(), 4)])
+    assert eng.stats["prefills"] == 2      # no stale-policy hit
+
+
+# -- capacity: exhaustion, deferral, chunked long prompts ---------------------
+
+
+def test_pool_exhaustion_defers_then_raises_typed(dense_world):
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(29)
+    # pool holds ONE request's worth: later requests defer, run after
+    # the earlier retire, and outputs match a 1-slot dense engine
+    eng = PagedEngine(model, params, batch_slots=4, max_len=MAX_LEN,
+                      decode_chunk=CHUNK, pool_blocks=5)
+    spec = [(i, rng.integers(2, cfg.vocab, size=40).astype(np.int32),
+             10) for i in range(3)]
+    paged = _drain(eng, spec)
+    assert eng.stats["admit_deferred"] > 0 and eng.pool.used == 0
+    dense = _drain(ContinuousEngine(model, params, batch_slots=1,
+                                    max_len=MAX_LEN,
+                                    decode_chunk=CHUNK), spec)
+    assert paged == dense
+    # a request that cannot fit an EMPTY pool raises typed, queue kept
+    small = PagedEngine(model, params, batch_slots=2, max_len=MAX_LEN,
+                        decode_chunk=CHUNK, pool_blocks=3)
+    small.submit(Request(0, rng.integers(
+        2, cfg.vocab, size=50).astype(np.int32), max_new_tokens=30))
+    with pytest.raises(BlockPoolExhaustedError):
+        small.run_until_drained()
+    assert len(small.queue) == 1
+
+
+def test_long_prompt_chunked_prefill(dense_world):
+    """capacity_blocks widens tables past max_len: a 100-token prompt
+    admits through one bucketed prefill + prefill_extend segments and
+    matches a dense engine wide enough to hold it in one shot."""
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(31)
+    p = rng.integers(2, cfg.vocab, size=100).astype(np.int32)
+    ref = _drain(ContinuousEngine(model, params, batch_slots=1,
+                                  max_len=128, decode_chunk=CHUNK),
+                 [(0, p, 6)])
+    eng = PagedEngine(model, params, batch_slots=1, max_len=MAX_LEN,
+                      decode_chunk=CHUNK, capacity_blocks=8,
+                      prefill_chunk=32)
+    assert _drain(eng, [(0, p, 6)]) == ref
+    assert eng.stats["paged_extends"] >= 2
+
+
+def test_paged_rejects_encdec():
+    cfg = CONFIGS["seamless-m4t-medium"].reduced()
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="encdec"):
+        PagedEngine(model, params, batch_slots=2, max_len=MAX_LEN)
+
+
+# -- nucleus (top-p) sampling -------------------------------------------------
+
+
+def test_nucleus_mask_keeps_smallest_covering_set():
+    probs = np.array([[0.5, 0.3, 0.15, 0.05]])
+    scaled = jnp.asarray(np.log(probs))
+    m = np.asarray(nucleus_mask(scaled, 0.6))
+    assert m.tolist() == [[True, True, False, False]]
+    m = np.asarray(nucleus_mask(scaled, 0.01))   # top-1 always kept
+    assert m.tolist() == [[True, False, False, False]]
+    m = np.asarray(nucleus_mask(scaled, 1.0))    # keeps everything
+    assert m.all()
+    # order independence: same set survives a permuted vocab
+    perm = np.array([2, 0, 3, 1])
+    mp = np.asarray(nucleus_mask(jnp.asarray(
+        np.asarray(scaled)[:, perm]), 0.6))
+    assert (mp == np.asarray(nucleus_mask(scaled, 0.6))[:, perm]).all()
+
+
+def test_top_p_tiny_equals_greedy_and_is_reproducible(dense_world):
+    cfg, model, params = dense_world
+    spec = _mixed(cfg, 5, seed=37)
+    greedy = _drain(ContinuousEngine(model, params, batch_slots=2,
+                                     max_len=MAX_LEN,
+                                     decode_chunk=CHUNK), spec)
+    # top_p -> 0 keeps only the argmax: sampling == greedy
+    tiny = _drain(ContinuousEngine(model, params, batch_slots=2,
+                                   max_len=MAX_LEN, decode_chunk=CHUNK,
+                                   top_p=1e-6, seed=3), spec,
+                  temperature=1.0)
+    assert tiny == greedy
+    runs = [_drain(ContinuousEngine(model, params, batch_slots=2,
+                                    max_len=MAX_LEN,
+                                    decode_chunk=CHUNK, top_p=0.9,
+                                    seed=3), spec, temperature=0.9)
+            for _ in range(2)]
+    assert runs[0] == runs[1]              # per-rid streams: same draw
+
+
+def test_sample_tokens_top_p_restricts_support():
+    rng = np.random.default_rng(41)
+    logits = jnp.asarray(rng.normal(size=(4, 32)) * 3)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    temps = jnp.ones((4,), jnp.float32)
+    allowed = np.asarray(nucleus_mask(logits, 0.5))
+    for i in range(20):
+        toks = np.asarray(sample_tokens(
+            logits, jax.vmap(lambda k: jax.random.fold_in(k, i))(keys),
+            temps, 0, 0.5))
+        assert all(allowed[b, toks[b]] for b in range(4))
+
+
+# -- overlapped admission -----------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_overlap_admission_bit_identical(dense_world, temperature):
+    """Prefills dispatched under the in-flight decode chunk splice at
+    the next boundary with outputs identical to serial admission."""
+    cfg, model, params = dense_world
+    spec = _mixed(cfg, 8, seed=43)
+    serial = _drain(ContinuousEngine(model, params, batch_slots=2,
+                                     max_len=MAX_LEN,
+                                     decode_chunk=CHUNK, seed=7),
+                    spec, temperature=temperature)
+    eng = ContinuousEngine(model, params, batch_slots=2,
+                           max_len=MAX_LEN, decode_chunk=CHUNK, seed=7,
+                           overlap_admission=True)
+    assert _drain(eng, spec, temperature=temperature) == serial

@@ -291,6 +291,41 @@ def test_adopting_force_retired_version_raises_typed(tmp_path):
 # -- logprob capture ----------------------------------------------------------
 
 
+def test_rollout_paged_engine_grpo_dedup(tmp_path):
+    """engine='paged' worker: a GRPO group's k shared-prompt samples
+    hit the content-addressed prefix index (k-1 prefills skipped),
+    and a policy re-adoption flushes the now-stale prefix cache."""
+    from repro.rl.rollout import RolloutWorker
+    cfg, model = _small_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    pub = PolicyPublisher(str(tmp_path / "pub"), codec="int8",
+                          base_every=2, keep_live=8)
+    peer = pub.serve()
+    try:
+        pub.publish(0, {"params": params})
+        w = RolloutWorker(0, model, params, str(tmp_path / "w0"),
+                          max_len=64, engine="paged", block_size=8)
+        w.adopt([peer.addr])
+        rng = np.random.default_rng(3)
+        q = rng.integers(2, cfg.vocab, size=37).astype(np.int32)
+        ros, _ = w.generate([q.copy() for _ in range(4)],
+                            groups=[0] * 4, max_new=4)
+        assert len(ros) == 4
+        assert all(len(r.logprobs) == len(r.tokens) for r in ros)
+        assert w.engine.perf_summary()["prefix_hits"] >= 3
+        assert w.engine.stats["prefills"] == 1   # one per group
+        assert w.engine.pool.used == 0
+        # new policy -> the cached prefix KV/logits are stale: adopt
+        # must flush the index so the next group re-prefills
+        pub.publish(1, {"params": jax.tree.map(
+            lambda p: p + 1e-3, params)})
+        w.adopt([peer.addr])
+        assert not w.engine.prefix.blocks
+        assert not w.engine.prefix.tails
+    finally:
+        peer.close()
+
+
 def test_engine_logprob_capture_matches_uncaptured_tokens():
     """capture_logprobs must not change the sampled stream, and every
     captured logprob is finite, <= 0, and 1:1 with out_tokens."""

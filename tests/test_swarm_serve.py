@@ -203,11 +203,14 @@ def test_adopt_stage_via_swarm_fetch(tmp_path, world):
         got = joiner._stages[1]
         for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-        # kill the original stage-1 holder: the router fails over to
-        # the adopted joiner and still matches the single-host run
+        # kill whichever stage-1 holder the router picks first (port
+        # order decides between the original and the joiner): the
+        # router fails over to the other and still matches the
+        # single-host run — so the adopted weights really serve
         fleet.servers[(1, 99)] = joiner     # join the fleet
         router = fleet.router()
-        fleet.kill(1, 0, after_ops=3)
+        sid, r = _victim(fleet, router, 1)
+        fleet.kill(sid, r, after_ops=3)
         out = router.generate(world.prompts[0], MAX_NEW, eos_id=1)
         assert out == world.baseline[0]
         assert router.stats["failovers"] >= 1
@@ -271,6 +274,41 @@ def test_router_pool_reuses_connections(tmp_path, world):
 
 
 # -- batched admission (continuous engine satellite) --------------------------
+
+
+def test_swarm_paged_kv_bit_identical(tmp_path, world):
+    """kv_layout='paged' stages: dense prefill scattered into block
+    pools, decode through B=1 paged views — greedy outputs must stay
+    bit-identical and every pool must drain after release."""
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=3,
+                       replicas=1, max_len=MAX_LEN, kv_layout="paged")
+    try:
+        router = fleet.router()
+        for p, base in zip(world.prompts, world.baseline):
+            assert router.generate(p, MAX_NEW, eos_id=1) == base
+        for srv in fleet.servers.values():
+            assert srv._pools                 # paged path actually ran
+            for ent in srv._pools.values():
+                assert ent["pool"].used == 0  # released at retire
+    finally:
+        fleet.close()
+
+
+def test_swarm_paged_failover_bit_identical(tmp_path, world):
+    """A mid-chain kill during paged decode: the re-prefill install on
+    the surviving replica re-allocates blocks (decref'ing any stale
+    row) and replay stays bit-identical."""
+    fleet = StageFleet(world.cfg, world.params, tmp_path, k_stages=3,
+                       replicas=2, max_len=MAX_LEN, kv_layout="paged")
+    try:
+        router = fleet.router()
+        sid, r = _victim(fleet, router, 1)
+        fleet.kill(sid, r, after_ops=3)
+        out = router.generate(world.prompts[1], MAX_NEW, eos_id=1)
+        assert out == world.baseline[1]
+        assert router.stats["failovers"] >= 1
+    finally:
+        fleet.close()
 
 
 def test_batched_admission_bit_identical(world):
