@@ -61,6 +61,13 @@ class DiLoCoConfig:
     overlap: str = "none"
     error_feedback: bool = False    # beyond-paper (see core.compression)
     host_offload_outer: bool = False  # TPU-only placement flag
+    # hierarchical reduce (paper's ElasticDeviceMesh split): each device
+    # rings only its intra-node slice over the WAN (DiLoCo) axis and the
+    # full vector is rebuilt intra-node — per-device WAN bytes / n_local.
+    # Distributed backend only (train.step.DistSyncBackend); codebooks
+    # become per-slice, so results are bit-identical to the PER-SLICE
+    # simulator rather than the flat one (tested).
+    hierarchical: bool = False
 
     @property
     def ring(self) -> RingConfig:

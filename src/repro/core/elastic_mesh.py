@@ -60,6 +60,38 @@ class SlotAssignment:
         return mask
 
 
+@dataclasses.dataclass(frozen=True)
+class HierarchySpec:
+    """The paper's ElasticDeviceMesh split of the outer sync: the WAN
+    ring runs ONLY across the DiLoCo axis (one leader stream per site),
+    while the remaining mesh axes form the fast intra-node group. The
+    distributed sync (``train.step.DistSyncPrograms``) rings each
+    device's 1/n_local slice over ``wan_axis`` and rebuilds the full
+    vector with an intra-node all-gather — per-device WAN bytes drop by
+    ``n_local``. ``local_rank`` ordering matches
+    :meth:`ElasticDeviceMesh.local_rank` (row-major over the non-DiLoCo
+    axes), which is also the order ``P(wan_axis, local_axes)`` shards
+    and ``all_gather`` over ``local_axes`` re-concatenates."""
+
+    wan_axis: str
+    local_axes: tuple[str, ...]
+    n_local: int
+
+    @property
+    def split(self) -> bool:
+        """True when there is an intra-node group to split over."""
+        return self.n_local > 1
+
+
+def hierarchy(mesh: jax.sharding.Mesh,
+              diloco_axis: str) -> HierarchySpec:
+    """WAN/intra-node split of ``mesh`` around the DiLoCo axis."""
+    local = tuple(a for a in mesh.axis_names if a != diloco_axis)
+    n_local = int(np.prod([mesh.shape[a] for a in local],
+                          dtype=np.int64)) if local else 1
+    return HierarchySpec(diloco_axis, local, n_local)
+
+
 class ElasticDeviceMesh:
     """Fixed-capacity mesh + slot assignment + weight computation."""
 

@@ -275,18 +275,25 @@ class CommOverlapLedger:
         self._cur: dict | None = None
 
     def begin_sync(self, hop_seconds: float) -> None:
-        """A new outer sync's comm window opens (at the boundary)."""
+        """A new outer sync's comm window opens (at the boundary).
+        ``hop_seconds`` is the default per-hop transfer time; individual
+        hops may override it via ``dispatch_hop(seconds=...)``."""
         assert self._cur is None, "previous sync window still open"
         self._cur = {"hop_s": float(hop_seconds), "hops": 0,
-                     "t_open": self.clock}
+                     "charged_s": 0.0, "t_open": self.clock}
 
-    def dispatch_hop(self, n: int = 1) -> None:
-        """``n`` ring hops handed to the wire at the current clock."""
+    def dispatch_hop(self, n: int = 1, seconds: float | None = None) -> None:
+        """``n`` ring hops handed to the wire at the current clock.
+        ``seconds`` charges each of these hops its ACTUAL transfer time
+        (hop payloads are uneven when bucket sub-chunks don't divide the
+        shard, and each hop crosses a different link); None falls back to
+        the window's uniform ``hop_seconds``."""
         assert self._cur is not None, "no sync window open"
+        hop_s = self._cur["hop_s"] if seconds is None else float(seconds)
         for _ in range(n):
-            self.busy_until = max(self.busy_until, self.clock) \
-                + self._cur["hop_s"]
+            self.busy_until = max(self.busy_until, self.clock) + hop_s
             self._cur["hops"] += 1
+            self._cur["charged_s"] += hop_s
 
     def compute(self, seconds: float) -> None:
         """A compute window (inner-phase scan chunk) ran."""
@@ -296,7 +303,7 @@ class CommOverlapLedger:
         """Close the window: the wire's remaining debt is exposed."""
         assert self._cur is not None, "no sync window open"
         cur, self._cur = self._cur, None
-        total = cur["hops"] * cur["hop_s"]
+        total = cur["charged_s"]
         exposed = max(0.0, self.busy_until - self.clock)
         exposed = min(exposed, total)   # debt older than this window
         #                                 belongs to earlier records
@@ -304,7 +311,7 @@ class CommOverlapLedger:
         rec = {"comm_total_s": total, "comm_exposed_s": exposed,
                "comm_hidden_s": total - exposed,
                "hidden_frac": (total - exposed) / total if total else 1.0,
-               "torn": False}
+               "hops": cur["hops"], "torn": False}
         self.records.append(rec)
         return rec
 
@@ -319,7 +326,8 @@ class CommOverlapLedger:
         self.clock += total
         self.busy_until = self.clock
         rec = {"comm_total_s": total, "comm_exposed_s": total,
-               "comm_hidden_s": 0.0, "hidden_frac": 0.0, "torn": True}
+               "comm_hidden_s": 0.0, "hidden_frac": 0.0,
+               "hops": resync_hops, "torn": True}
         self.records.append(rec)
         return rec
 

@@ -69,18 +69,28 @@ def _bytes_per_elem(quant: str) -> float:
     return {"int8": 1.0, "int4": 0.5, "fp32": 4.0}[quant]
 
 
-def ring_wire_bytes(numel: int, n_workers: int, quant: str = "int8",
-                    buckets: int = 1) -> int:
-    """Per-worker bytes on the wire for one all-reduce (both phases)."""
+def ring_hop_bytes(numel: int, n_workers: int, quant: str = "int8",
+                   buckets: int = 1) -> float:
+    """Per-worker bytes of ONE wire hop (every hop carries one chunk of
+    ``buckets`` sub-buckets plus their codebook sidebands; the chunk is
+    rounded up so padding rides the wire too)."""
     if n_workers <= 1:
-        return 0
-    # mirror _pad_to_chunks: the chunk is rounded up to a multiple of
-    # the bucket count, so padding elements ride the wire too
+        return 0.0
     chunk = -(-numel // n_workers)
     chunk = -(-chunk // buckets) * buckets
     payload = chunk * _bytes_per_elem(quant)
     sideband = 0 if quant == "fp32" else 4 * NUM_BUCKETS * buckets
-    return int(2 * (n_workers - 1) * (payload + sideband))
+    return float(payload + sideband)
+
+
+def ring_wire_bytes(numel: int, n_workers: int, quant: str = "int8",
+                    buckets: int = 1) -> int:
+    """Per-worker bytes on the wire for one all-reduce (both phases):
+    2·(n−1) hops of :func:`ring_hop_bytes` each."""
+    if n_workers <= 1:
+        return 0
+    return int(2 * (n_workers - 1)
+               * ring_hop_bytes(numel, n_workers, quant, buckets))
 
 
 # -- chunk/bucket helpers -----------------------------------------------------
@@ -288,15 +298,26 @@ def _roll1(payload):
     return tuple(jnp.roll(p, 1, axis=0) for p in payload)
 
 
-# -- hop bodies (shared by the one-shot simulator and RingSyncOp) ------------
+# -- hop bodies (shared by the one-shot simulator, RingSyncOp, and the
+#    distributed per-hop shard_map programs in train.step) -------------------
+#
+# ``k`` is always the RING size; the row count is ``positions.shape[0]``
+# (all k positions in the simulator, ONE row per device inside a manual
+# shard_map region, where ``positions = inv[axis_index][None]`` and
+# ``shift`` is a ``ppermute`` along the ring instead of ``jnp.roll``).
+# vmap over one row is bit-identical to the stacked vmap on XLA:CPU
+# (tested), which is what makes the distributed path hop-for-hop
+# bit-identical to the simulator.
 
 
 def _rs_hop_rows(s, accs, k: int, chunk: int, bsize: int, nb: int,
-                 cfg: RingConfig, fused_operands=None):
-    """One reduce-scatter hop across all ring positions/buckets.
+                 cfg: RingConfig, fused_operands=None, *,
+                 positions=None, shift=_roll1):
+    """One reduce-scatter hop across the given ring positions/buckets.
     ``fused_operands=(a_flat, t_pos, w_pos)`` routes the transmit
     through the fused pseudo-gradient quantizer (hop 0 only)."""
-    positions = jnp.arange(k)
+    if positions is None:
+        positions = jnp.arange(k)
     send_idx = (positions - s) % k
     recv_idx = (positions - s - 1) % k
     staged = []
@@ -316,7 +337,7 @@ def _rs_hop_rows(s, accs, k: int, chunk: int, bsize: int, nb: int,
             staged.append(_quant_rows(
                 _get_bucket_rows(accs, send_idx, b, chunk, bsize), cfg))
     for b, (payload, deq) in enumerate(staged):
-        payload = _roll1(payload)
+        payload = shift(payload)
         acc_vals = _get_bucket_rows(accs, recv_idx, b, chunk, bsize)
         accs = _set_bucket_rows(
             accs, recv_idx, b,
@@ -326,11 +347,12 @@ def _rs_hop_rows(s, accs, k: int, chunk: int, bsize: int, nb: int,
 
 
 def _ag_init_rows(accs, k: int, chunk: int, bsize: int, nb: int,
-                  cfg: RingConfig):
+                  cfg: RingConfig, *, positions=None):
     """All-gather prologue: every owner quantizes its reduced chunk ONCE
     (per bucket); the codes are then forwarded verbatim so every worker
     decodes identical bytes. Returns (accs, per-bucket payloads)."""
-    positions = jnp.arange(k)
+    if positions is None:
+        positions = jnp.arange(k)
     own_idx = (positions + 1) % k
     payloads = []
     for b in range(nb):
@@ -343,16 +365,17 @@ def _ag_init_rows(accs, k: int, chunk: int, bsize: int, nb: int,
 
 
 def _ag_hop_rows(s, accs, payloads, k: int, chunk: int, bsize: int,
-                 nb: int, cfg: RingConfig):
+                 nb: int, cfg: RingConfig, *, positions=None, shift=_roll1):
     """One all-gather hop: shift every bucket's forwarded codes one
     position and decode in place. Buckets write disjoint regions, so
     hop-major order here equals the bucket-major order bit-for-bit."""
-    positions = jnp.arange(k)
+    if positions is None:
+        positions = jnp.arange(k)
     recv_idx = (positions - s) % k
     deq = _row_deq(cfg, bsize)
     new_payloads = []
     for b in range(nb):
-        payload = _roll1(payloads[b])
+        payload = shift(payloads[b])
         accs = _set_bucket_rows(accs, recv_idx, b, deq(payload),
                                 chunk, bsize)
         new_payloads.append(payload)

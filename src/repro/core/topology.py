@@ -95,10 +95,15 @@ def solve_greedy(w: np.ndarray, restarts: int = 8,
                  seed: int = 0) -> tuple[int, ...]:
     """Greedy + pairwise-swap improvement; near-optimal for large n."""
     n = w.shape[0]
+    if n <= 2:
+        return tuple(range(n))
     rng = np.random.default_rng(seed)
+    # NN construction is deterministic given the start node, so colliding
+    # starts would duplicate work — draw distinct starts (0 first).
+    starts = [0] + [int(s) for s in
+                    rng.permutation(np.arange(1, n))[:max(0, restarts - 1)]]
     best, best_val = None, -np.inf
-    for r in range(restarts):
-        start = int(rng.integers(n)) if r else 0
+    for start in starts:
         order = [start]
         left = set(range(n)) - {start}
         while left:
@@ -161,14 +166,35 @@ class BandwidthMonitor:
             for j in range(i + 1, self.n):
                 self.observe(i, j, float(w[i, j]))
 
+    def ring_bottleneck(self, order=None) -> float | None:
+        """Measured bottleneck bandwidth (Gb/s) of ``order`` (default: the
+        current ring), or None while any edge on it is still unobserved."""
+        order = self.order if order is None else tuple(order)
+        n = len(order)
+        if n <= 1:
+            return None
+        edges = [self.bandwidth[order[i], order[(i + 1) % n]]
+                 for i in range(n)]
+        if not all(np.isfinite(e) for e in edges):
+            return None
+        return float(min(edges))
+
     def maybe_reorder(self) -> tuple[bool, tuple[int, ...]]:
         """(changed, order). ``changed`` implies the caller must recompile
-        the sync step with the new static ring permutation."""
-        w = np.where(np.isfinite(self.bandwidth), self.bandwidth, 0.0)
-        if w.sum() == 0:
+        the sync step with the new static ring permutation.
+
+        Unobserved links (still ``inf``) are UNKNOWN, not zero: until every
+        edge on the current ring has an observation we cannot score it, so
+        we never reorder off a partially-observed matrix (a spurious
+        reorder costs a recompile)."""
+        cur_val = self.ring_bottleneck()
+        if cur_val is None:
             return False, self.order
+        # unobserved edges score 0 only as *candidates* — the solver will
+        # route around them, and can never beat a fully-observed ring with
+        # a cycle through an unmeasured link
+        w = np.where(np.isfinite(self.bandwidth), self.bandwidth, 0.0)
         best = optimize_ring_order(w)
-        cur_val = cycle_bottleneck(w, self.order)
         best_val = cycle_bottleneck(w, best)
         if best_val > 0 and cur_val < self.reorder_ratio * best_val:
             self.order = best

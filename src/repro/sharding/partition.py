@@ -64,6 +64,21 @@ def with_leading(pspec_tree: Any, axis: str | None) -> Any:
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def wan_ring_specs(wan_axis: str,
+                   local_axes: tuple[str, ...] = ()) -> tuple[P, P]:
+    """Specs for the distributed outer-sync ring buffers.
+
+    Returns ``(row_spec, acc_spec)``: per-worker flat rows — pseudo-
+    gradients, thetas, weights — are sharded over the WAN (DiLoCo) axis
+    only (``P(wan_axis)``); the in-flight ring accumulator/payload
+    buffers additionally split their slice dim over the intra-node axes
+    in hierarchical mode (``P(wan_axis, local_axes)`` — the paper's
+    ElasticDeviceMesh split, see ``core.elastic_mesh.hierarchy``)."""
+    row = P(wan_axis)
+    acc = P(wan_axis, local_axes) if local_axes else row
+    return row, acc
+
+
 def batch_pspec(plan: ParallelismPlan,
                 batch_size: int | None = None,
                 mesh_axes: dict[str, int] | None = None) -> P:

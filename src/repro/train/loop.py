@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import diloco as dl
+from repro.core import ring_reduce as rr
 from repro.core import topology
 from repro.core.elastic_mesh import SlotAssignment
 from repro.core.fault_tolerance import (ClusterSimulator,
@@ -65,19 +66,30 @@ class TrainerConfig:
     # 'delayed'). <=2 distinct chunk lengths -> <=2 compilations.
     inner_chunks: int = 1
     # modeled WAN link for the CommOverlapLedger's logical-time
-    # hidden/exposed accounting (paper: ~4 Gb/s internet links)
+    # hidden/exposed accounting (paper: ~4 Gb/s internet links);
+    # used only until the BandwidthMonitor has observed every edge of
+    # the current ring — then the ring's actual bottleneck link rules
     sync_link_bytes_per_s: float = 500e6
+    # unit conversion for BandwidthMonitor matrices (Gb/s -> bytes/s)
+    link_bytes_per_gbps: float = 125e6
 
 
 class ElasticTrainer:
     def __init__(self, model, cfg: TrainerConfig, data_cfg: DataConfig,
                  init_params, sim: ClusterSimulator, *,
                  batch_provider: Callable | None = None,
-                 boundary_hook: Callable | None = None):
+                 boundary_hook: Callable | None = None,
+                 sync_backend=None):
         self.model = model
         self.cfg = cfg
         self.data_cfg = data_cfg
         self.sim = sim
+        # sync_backend (train.step.DistSyncBackend) stages the outer
+        # sync as real per-hop shard_map collectives over a mesh's
+        # DiLoCo axis instead of the single-device simulator ring;
+        # bit-identical by construction, so everything downstream of
+        # begin() is shared
+        self.sync_backend = sync_backend
         # batch_provider(global_step, h, k) -> stacked (H, k, ...) batch
         # pytree: replaces the TokenPipeline feed (the RL tier's
         # rollout-buffer batcher plugs in here); boundary_hook(t, self)
@@ -123,6 +135,12 @@ class ElasticTrainer:
         # diloco.begin_outer_sync_sim; persists across run() calls)
         self._ef_begins = 0
         self.comm_ledger = CommOverlapLedger()
+        # bandwidth-honest ledger window: the sim ring dispatches
+        # 2*(k-1) hops, but only the live workers' 2*(n_live-1) carry
+        # bytes on a real cluster — the rest are charged 0s
+        self._live_hops = 0
+        self._window_hop_i = 0
+        self.reorders = 0            # accepted ring reorders (recompiles)
         self.history: list[dict] = []
         self._pipelines = {}
         self.ckpt_store = None
@@ -220,7 +238,7 @@ class ElasticTrainer:
             if self.overlap:
                 self.comm_ledger.compute((hi - lo) * sec_per_step)
                 if self._inflight is not None and self._inflight.step():
-                    self.comm_ledger.dispatch_hop()
+                    self._dispatch_ledger_hop()
         return jnp.concatenate(losses, axis=0)
 
     def _pipeline(self, slot: int) -> TokenPipeline:
@@ -268,6 +286,7 @@ class ElasticTrainer:
                 changed, order = self.bw.maybe_reorder()
                 if changed:
                     self.ring_order = order
+                    self.reorders += 1
 
             # elastic weighted sync with mid-collective retry
             weights = self.slots.live_mask(
@@ -443,7 +462,26 @@ class ElasticTrainer:
             self.params, tree["params"])
         self.opt_state = jax.vmap(self.optimizer.init)(self.params)
 
+    def _begin_sync(self, weights, ef_slot: int) -> dl.OuterSyncHandle:
+        """Stage the outer sync: through the distributed backend when
+        one is plugged in, the simulator ring otherwise (same handle
+        surface either way)."""
+        if self.sync_backend is not None:
+            return self.sync_backend.begin(
+                self.params, self.outer, self.cfg.diloco,
+                ring_order=self.ring_order[: self.k], weights=weights,
+                ef_slot=ef_slot)
+        return dl.begin_outer_sync_sim(
+            self.params, self.outer, self.cfg.diloco,
+            ring_order=self.ring_order[: self.k], weights=weights,
+            ef_slot=ef_slot)
+
     def _outer_sync(self, weights):
+        if self.sync_backend is not None:
+            # non-overlapped path through the distributed collectives:
+            # begin + immediate finish (EF residual is slot-free here)
+            h = self._begin_sync(jnp.asarray(weights), ef_slot=0)
+            return dl.finish_outer_sync_sim(h, self.params, self.outer)
         return dl.outer_sync_sim(self.params, self.outer,
                                  self.cfg.diloco,
                                  ring_order=self.ring_order[: self.k],
@@ -451,17 +489,39 @@ class ElasticTrainer:
 
     # -- overlapped outer sync (diloco.overlap == 'delayed') ------------------
 
+    def _link_rate(self) -> float:
+        """Bytes/s of the slowest link on the CURRENT ring, from the
+        BandwidthMonitor's EWMA matrix — the hop that paces a ring
+        all-reduce. Falls back to the uniform modeled link until every
+        ring edge has an observation."""
+        bn = self.bw.ring_bottleneck(self.ring_order[: self.k])
+        if bn is None or bn <= 0:
+            return self.cfg.sync_link_bytes_per_s
+        return bn * self.cfg.link_bytes_per_gbps
+
     def _hop_seconds(self, weights) -> float:
-        """Modeled wire time of ONE sim ring hop: the live workers'
-        per-worker wire bytes spread over the sim's hop count (the sim
-        rings over all k slots; the real cluster rings over the live
-        ones — total bytes are what the link actually carries)."""
+        """Modeled wire time of ONE live ring hop: the actual per-hop
+        bytes of the n_live-worker ring (chunk payload + codebook
+        sideband, ``ring_reduce.ring_hop_bytes``) over the ring's
+        bottleneck-link rate."""
         n_live = max(1, int(np.sum(np.asarray(weights) > 0)))
-        total = dl.sync_wire_bytes(
-            jax.tree.map(lambda p: p[0], self.params), n_live,
-            self.cfg.diloco)
-        hops = max(1, 2 * (self.k - 1))
-        return total / hops / self.cfg.sync_link_bytes_per_s
+        numel = sum(int(np.prod(l.shape[1:], dtype=np.int64))
+                    for l in jax.tree.leaves(self.params))
+        ring = self.cfg.diloco.ring
+        per_hop = rr.ring_hop_bytes(numel, n_live, quant=ring.quant,
+                                    buckets=ring.buckets)
+        return per_hop / self._link_rate()
+
+    def _dispatch_ledger_hop(self) -> None:
+        """Charge one dispatched hop to the ledger. The sim ring always
+        walks 2*(k-1) hops, but only 2*(n_live-1) of them carry bytes
+        on the real cluster — the dead-slot remainder is charged 0s so
+        the ledger reflects what the wire actually moves."""
+        if self._window_hop_i < self._live_hops:
+            self.comm_ledger.dispatch_hop()
+        else:
+            self.comm_ledger.dispatch_hop(seconds=0.0)
+        self._window_hop_i += 1
 
     def _participants(self, weights) -> frozenset:
         w = np.asarray(weights)
@@ -481,10 +541,7 @@ class ElasticTrainer:
              under the next inner phase from the very start.
         """
         w = jnp.asarray(np.asarray(weights), jnp.float32)
-        h_new = dl.begin_outer_sync_sim(
-            self.params, self.outer, self.cfg.diloco,
-            ring_order=self.ring_order[: self.k], weights=w,
-            ef_slot=self._ef_begins % 2)
+        h_new = self._begin_sync(w, ef_slot=self._ef_begins % 2)
         self._ef_begins += 1
         rec: dict = {"hops": h_new.hops_total}
         prev = self._inflight
@@ -501,8 +558,11 @@ class ElasticTrainer:
         self.sim.note_sync_begin(t, self._participants(weights))
         self._inflight = h_new
         self.comm_ledger.begin_sync(self._hop_seconds(weights))
+        n_live = max(1, int(np.sum(np.asarray(weights) > 0)))
+        self._live_hops = 2 * (n_live - 1)
+        self._window_hop_i = 0
         if h_new.step():
-            self.comm_ledger.dispatch_hop()
+            self._dispatch_ledger_hop()
         return rec
 
     def _fallback_resync(self, plan) -> dict:
@@ -529,7 +589,7 @@ class ElasticTrainer:
         """Dispatch every remaining hop of ``handle`` (exposed comm:
         the boundary is waiting on the wire)."""
         while handle.step():
-            self.comm_ledger.dispatch_hop()
+            self._dispatch_ledger_hop()
 
     def _reset_to_anchor(self) -> None:
         for_slot = self.outer.anchor

@@ -380,6 +380,353 @@ def build_outer_sync(model, plan, mesh, diloco_cfg: dl.DiLoCoConfig,
     return sync, outer_specs
 
 
+# -- distributed overlapped outer sync (per-hop shard_map collectives) -------
+
+
+class DistSyncPrograms:
+    """Jitted per-hop ``shard_map`` collectives for the distributed
+    outer-sync ring: one program per hop KIND (reduce-scatter, fused
+    first hop, all-gather prologue, all-gather forward), the hop index
+    riding traced so one compilation serves every hop.
+
+    The hop BODIES are the simulator's (`ring_reduce._rs_hop_rows` /
+    `_ag_hop_rows`), run at ONE ring position per device: inside the
+    manual region ``positions = inv[axis_index(dax)][None]`` and the
+    payload shift is the static ``ppermute`` along the bandwidth-
+    ordered ring instead of ``jnp.roll``. Per-row math is identical and
+    vmap over one row is bit-identical to the stacked vmap on XLA:CPU,
+    so the distributed reduction is hop-for-hop bit-identical to the
+    simulator (tested in tests/test_distributed.py). The in-flight
+    accumulator and forwarded-code payloads thread BETWEEN programs as
+    opaque flat shards (spec ``P(dax)`` / ``P(dax, local)``), like the
+    PR 5 per-shard anchor buffer.
+
+    Hierarchical mode (``core.elastic_mesh.HierarchySpec``, the paper's
+    ElasticDeviceMesh split): each device rings only its intra-node
+    slice (1/n_local of the vector) over the WAN axis, and the full
+    vector is rebuilt with an intra-node ``all_gather`` at finalize —
+    per-device WAN bytes drop by n_local. With replicated inner params
+    every local copy of the pseudo-gradient is identical, so the slice
+    by local rank IS the intra-node reduce-scatter (psum_scatter /
+    n_local, exactly). Quantization codebooks become per-slice, so
+    hierarchical results are bit-identical to the PER-SLICE simulator
+    (concat of slice sims), not to the flat one.
+
+    A changed ring order is a new static ``ppermute`` permutation:
+    ``DistSyncBackend`` rebuilds these programs whenever
+    ``BandwidthMonitor.maybe_reorder`` reports a change (the reorder ->
+    recompile lifecycle; the paper pays the analogous process-group
+    re-rendezvous cost).
+    """
+
+    def __init__(self, mesh, dax: str, size: int, cfg, ring_order=None,
+                 hierarchy=None):
+        from repro.core import ring_reduce as rr
+        self.mesh, self.dax = mesh, dax
+        self.cfg = cfg
+        self.k = k = int(mesh.shape[dax])
+        self.size = size
+        order = (tuple(ring_order) if ring_order is not None
+                 else tuple(range(k)))
+        assert sorted(order) == list(range(k)), \
+            "ring order must be a permutation of the DiLoCo slots"
+        assert k > 1, "use RingSyncOp for the degenerate 1-worker ring"
+        self.ring_order = order
+        self.hier = hierarchy if (hierarchy is not None
+                                  and hierarchy.split) else None
+        lnames = self.hier.local_axes if self.hier else ()
+        self.n_local = nl = self.hier.n_local if self.hier else 1
+        self.slice_len = sl = -(-size // nl)
+        nb = max(1, cfg.buckets)
+        chunk = -(-sl // k)
+        bsize = -(-chunk // nb)
+        chunk = bsize * nb
+        self.chunk, self.bsize, self.nb = chunk, bsize, nb
+        self.padded = k * chunk
+
+        inv = np.argsort(np.asarray(order))
+        inv_dev = jnp.asarray(inv)
+        perm_fwd = [(order[p], order[(p + 1) % k]) for p in range(k)]
+        row_spec, acc_spec = partition.wan_ring_specs(dax, lnames)
+        self._row_sharding = NamedSharding(mesh, row_spec)
+        self._rep_sharding = NamedSharding(mesh, P())
+        hier = self.hier is not None
+
+        def _positions():
+            # this device's ring position, as a 1-row batch for the
+            # shared row-wise hop bodies
+            return inv_dev[jax.lax.axis_index(dax)][None]
+
+        def _shift(payload):
+            # position p's payload moves to position p+1 — the ring's
+            # static wire permutation (the sim's jnp.roll(+1) analogue)
+            return tuple(jax.lax.ppermute(p, dax, perm_fwd)
+                         for p in payload)
+
+        # hierarchical buffers carry a local-slice dim the row-wise
+        # bodies don't know about: squeeze/restore around each hop
+        _sq = (lambda a: a[:, 0]) if hier else (lambda a: a)
+        _usq = (lambda a: a[:, None]) if hier else (lambda a: a)
+        _psq = (lambda p: jax.tree.map(lambda x: x[:, 0], p)) if hier \
+            else (lambda p: p)
+        _pusq = (lambda p: jax.tree.map(lambda x: x[:, None], p)) \
+            if hier else (lambda p: p)
+        geo = (k, chunk, bsize, nb, cfg)
+
+        def rs_body(s, accs):
+            return _usq(rr._rs_hop_rows(
+                s, _sq(accs), *geo, positions=_positions(),
+                shift=_shift))
+
+        def rs_fused_body(s, accs, a_flat, t_row, w_row):
+            return _usq(rr._rs_hop_rows(
+                s, _sq(accs), *geo, (a_flat, t_row, w_row),
+                positions=_positions(), shift=_shift))
+
+        def ag_init_body(accs):
+            a, p = rr._ag_init_rows(_sq(accs), *geo,
+                                    positions=_positions())
+            return _usq(a), _pusq(p)
+
+        def ag_body(s, accs, payloads):
+            a, p = rr._ag_hop_rows(s, _sq(accs), _psq(payloads), *geo,
+                                   positions=_positions(), shift=_shift)
+            return _usq(a), _pusq(p)
+
+        def _local_rank():
+            # row-major over the non-DiLoCo axes — must match
+            # ElasticDeviceMesh.local_rank and the all_gather order
+            r, stride = 0, 1
+            for name in reversed(list(mesh.shape.keys())):
+                if name == dax:
+                    continue
+                r = r + jax.lax.axis_index(name) * stride
+                stride *= int(mesh.shape[name])
+            return r
+
+        def prep_hier_body(pg, w):
+            # (1, size) worker row -> this device's weighted, ring-
+            # padded intra-node slice (1, 1, padded)
+            row = pg.astype(jnp.float32) * w[:, None]
+            row = jnp.pad(row, ((0, 0), (0, nl * sl - size)))
+            piece = jax.lax.dynamic_slice_in_dim(
+                row, _local_rank() * sl, sl, axis=-1)
+            piece = jnp.pad(piece, ((0, 0), (0, self.padded - sl)))
+            return piece[:, None]
+
+        def fin_hier_body(accs):
+            # rebuild the full vector intra-node: gather every local
+            # slice (valid region only) back into worker rows
+            row = accs[:, 0, :sl]
+            return jax.lax.all_gather(row, lnames, axis=1, tiled=True)
+
+        def _sm(f, ins, outs):
+            return jax.jit(compat.shard_map(
+                f, mesh=mesh, in_specs=ins, out_specs=outs,
+                check_vma=False))
+
+        self.rs = _sm(rs_body, (P(), acc_spec), acc_spec)
+        self.rs_fused = None if hier else _sm(
+            rs_fused_body, (P(), acc_spec, P(), row_spec, row_spec),
+            acc_spec)
+        self.ag_init = _sm(ag_init_body, (acc_spec,),
+                           (acc_spec, acc_spec))
+        self.ag = _sm(ag_body, (P(), acc_spec, acc_spec),
+                      (acc_spec, acc_spec))
+        self._prep_hier = _sm(prep_hier_body, (row_spec, row_spec),
+                              acc_spec) if hier else None
+        self._fin_hier = _sm(fin_hier_body, (acc_spec,),
+                             row_spec) if hier else None
+        self._acc_sharding = NamedSharding(mesh, acc_spec)
+
+    # -- buffer staging -------------------------------------------------------
+
+    def prep(self, xs, weights):
+        """Weighted, ring-padded accumulator rows, placed on the mesh
+        (worker-major: row d = device d's position's accumulator)."""
+        if self.hier:
+            return self._prep_hier(
+                jax.device_put(xs, self._row_sharding),
+                jax.device_put(weights, self._row_sharding))
+        accs = xs.astype(jnp.float32) * weights[:, None]
+        accs = jnp.pad(accs, ((0, 0), (0, self.padded - self.size)))
+        return jax.device_put(accs, self._acc_sharding)
+
+    def prep_fused(self, a_flat, thetas, weights):
+        """Ring-padded fused first-hop operands on the mesh (anchor
+        replicated, theta/weight rows over the WAN axis)."""
+        pad = self.padded - self.size
+        a = jnp.pad(a_flat.astype(jnp.float32), (0, pad))
+        t = jnp.pad(thetas.astype(jnp.float32), ((0, 0), (0, pad)))
+        return (jax.device_put(a, self._rep_sharding),
+                jax.device_put(t, self._row_sharding),
+                jax.device_put(weights, self._row_sharding))
+
+    def finalize(self, accs, total_w):
+        """Post-all-gather accumulator -> (k, size) reduced rows on the
+        default device (identical rows; same eager slice/divide as
+        RingSyncOp.finish, so values are bit-identical to the sim)."""
+        if self.hier:
+            accs = self._fin_hier(accs)
+        out = jnp.asarray(jax.device_get(accs))[:, : self.size]
+        if self.cfg.average:
+            out = out / jnp.maximum(total_w, 1e-20)
+        return out
+
+
+class DistRingSyncOp:
+    """Distributed mirror of :class:`ring_reduce.RingSyncOp` with the
+    same public surface (``step``/``finish``/``restart``/``pending``/
+    ``hops_total``/``hops_done``), so ``diloco.OuterSyncHandle``,
+    ``finish_outer_sync_sim`` and ``resync_outer_sim`` operate on it
+    unchanged. Each ``step()`` dispatches ONE wire hop as a jitted
+    shard_map collective and returns as soon as it is enqueued — no
+    ``block_until_ready`` anywhere — so the transfer rides under the
+    next inner-phase scan chunk. Like the sim op, it RETAINS its inputs
+    for the torn-reduction fallback: ``restart`` re-reduces the
+    retained rows over the survivors through the same distributed
+    programs (bit-identical to the sim restart)."""
+
+    def __init__(self, programs: DistSyncPrograms, xs,
+                 weights=None, fused_src=None):
+        pr = programs
+        k, orig = xs.shape
+        assert k == pr.k and orig == pr.size, \
+            f"geometry mismatch: op ({k}, {orig}) vs programs " \
+            f"({pr.k}, {pr.size})"
+        self.programs = pr
+        self.cfg = pr.cfg
+        self.k, self.orig_size = k, orig
+        self.ring_order = pr.ring_order
+        self.xs = xs.astype(jnp.float32)
+        self.weights = (jnp.ones((k,), jnp.float32) if weights is None
+                        else weights)
+        self.fused_src = fused_src
+        self.hops_done = 0
+        self._out = None
+        self._total_w = jnp.sum(self.weights)
+        self.hops_total = 2 * (k - 1)
+        self._fused0 = (fused_src is not None and self.cfg.fused
+                        and self.cfg.quant == "int8"
+                        and pr.rs_fused is not None)
+        self._accs = pr.prep(self.xs, self.weights)
+        if self._fused0:
+            a_flat, thetas = fused_src
+            self._a_dev, self._t_dev, self._w_dev = pr.prep_fused(
+                a_flat, thetas, self.weights)
+        self._payloads = None
+
+    @property
+    def pending(self) -> bool:
+        return self.hops_done < self.hops_total
+
+    def step(self) -> bool:
+        """Dispatch ONE wire hop (async collective); True iff a hop was
+        dispatched."""
+        if self._out is not None or not self.pending:
+            return False
+        i, k, pr = self.hops_done, self.k, self.programs
+        if i < k - 1:
+            if i == 0 and self._fused0:
+                self._accs = pr.rs_fused(
+                    jnp.int32(0), self._accs, self._a_dev,
+                    self._t_dev, self._w_dev)
+            else:
+                self._accs = pr.rs(jnp.int32(i), self._accs)
+        else:
+            s = i - (k - 1)
+            if s == 0:
+                self._accs, self._payloads = pr.ag_init(self._accs)
+            self._accs, self._payloads = pr.ag(
+                jnp.int32(s), self._accs, self._payloads)
+        self.hops_done += 1
+        return True
+
+    def finish(self):
+        if self._out is None:
+            while self.pending:
+                self.step()
+            self._out = self.programs.finalize(self._accs,
+                                               self._total_w)
+            self._accs = self._payloads = None   # free in-flight state
+        return self._out
+
+    def restart(self, weights):
+        """Torn-reduction fallback: synchronously re-reduce the
+        RETAINED inputs over the survivors through the same distributed
+        programs (no recompile — weights ride traced)."""
+        return DistRingSyncOp(self.programs, self.xs, weights=weights,
+                              fused_src=self.fused_src).finish()
+
+
+class DistSyncBackend:
+    """Plugs the per-hop distributed collectives into ``ElasticTrainer``
+    (pass ``sync_backend=DistSyncBackend(mesh, dax)`` to the trainer).
+
+    ``begin`` mirrors ``diloco.begin_outer_sync_sim`` — literally the
+    same pseudo-gradient front half (``_sim_pseudograds``), including
+    the slot-parity two-slot error-feedback residual — but stages the
+    ring as a :class:`DistRingSyncOp` over the mesh's DiLoCo axis, so
+    distributed ``overlap='delayed'`` is bit-identical to the simulator
+    path on the same plan. Hop programs are rebuilt whenever the ring
+    order (or geometry) changes — ``recompiles`` counts builds, the
+    first one included."""
+
+    def __init__(self, mesh, dax: str, hierarchical: bool | None = None):
+        from repro.core import elastic_mesh
+        self.mesh, self.dax = mesh, dax
+        self._split = elastic_mesh.hierarchy(mesh, dax)
+        # None -> follow DiLoCoConfig.hierarchical per begin() call
+        self.hierarchical = hierarchical
+        self.recompiles = 0
+        self._programs: DistSyncPrograms | None = None
+        self._key = None
+
+    def _want_hier(self, cfg) -> bool:
+        use = (cfg.hierarchical if self.hierarchical is None
+               else self.hierarchical)
+        return bool(use) and self._split.split
+
+    def begin(self, stacked_params, state, cfg, ring_order=None,
+              weights=None, ef_slot: int = 0) -> dl.OuterSyncHandle:
+        """Distributed analogue of ``diloco.begin_outer_sync_sim``."""
+        from repro.core.ring_reduce import RingSyncOp
+        k, _, a_flat, pgs, new_residuals, fused_src = \
+            dl._sim_pseudograds(stacked_params, state, cfg,
+                                ef_slot=ef_slot)
+        assert k == int(self.mesh.shape[self.dax]), \
+            f"trainer has {k} DiLoCo slots but mesh axis " \
+            f"{self.dax!r} has {self.mesh.shape[self.dax]}"
+        if weights is None:
+            weights = jnp.ones((k,), jnp.float32)
+        if k == 1:
+            op = RingSyncOp(pgs, ring_order=ring_order, cfg=cfg.ring,
+                            weights=weights, fused_src=fused_src)
+            return dl.OuterSyncHandle(op, cfg, a_flat, new_residuals,
+                                      weights, k, ef_slot=ef_slot)
+        hier = self._want_hier(cfg)
+        if hier:
+            # per-slice codebooks make the fused whole-vector transmit
+            # inapplicable; the materialized slice is quantized instead
+            # (bit-identical values — quantize_pseudograd(a,t,w) ==
+            # quantize(w*(a-t)) is a tested invariant)
+            fused_src = None
+        order = (tuple(ring_order) if ring_order is not None
+                 else tuple(range(k)))
+        key = (k, pgs.shape[-1], cfg.ring, order, hier)
+        if key != self._key:
+            self._programs = DistSyncPrograms(
+                self.mesh, self.dax, pgs.shape[-1], cfg.ring,
+                ring_order=order,
+                hierarchy=self._split if hier else None)
+            self._key = key
+            self.recompiles += 1
+        op = DistRingSyncOp(self._programs, pgs, weights=weights,
+                            fused_src=fused_src)
+        return dl.OuterSyncHandle(op, cfg, a_flat, new_residuals,
+                                  weights, k, ef_slot=ef_slot)
+
+
 # -- serve --------------------------------------------------------------------
 
 

@@ -428,6 +428,43 @@ def test_ledger_fully_exposed_without_compute():
     assert rec["hidden_frac"] == pytest.approx(0.0)
 
 
+def test_ledger_per_hop_seconds_override():
+    """Bandwidth-honest charging: hops may carry different wire times
+    (live hops at the bottleneck-link rate, dead-slot hops 0 s) — the
+    window total is the SUM of what was actually charged, not
+    hops * hop_seconds."""
+    led = CommOverlapLedger()
+    led.begin_sync(hop_seconds=1.0)
+    led.dispatch_hop()                      # default: 1.0 s
+    led.dispatch_hop(seconds=2.5)           # slow link
+    led.compute(3.0)                        # hides what is in flight
+    led.dispatch_hop(2, seconds=0.0)        # dead-slot hops: free
+    rec = led.finish_sync()
+    assert rec["hops"] == 4
+    assert rec["comm_total_s"] == pytest.approx(3.5)
+    assert rec["comm_hidden_s"] == pytest.approx(3.0)
+    assert rec["comm_exposed_s"] == pytest.approx(0.5)
+
+
+def test_ledger_uneven_bucket_charges():
+    """Per-hop charges that don't divide the total evenly (the int8
+    codebook sideband makes hop bytes a non-round number) must sum
+    exactly — no residual from a uniform total/hops split."""
+    led = CommOverlapLedger()
+    charges = [0.7, 0.7, 0.7, 1.3, 1.3, 1.3]   # 6 hops, total 6.0
+    led.begin_sync(hop_seconds=999.0)          # default must be unused
+    for c in charges:
+        led.dispatch_hop(seconds=c)
+    rec = led.finish_sync()
+    assert rec["hops"] == len(charges)
+    assert rec["comm_total_s"] == pytest.approx(sum(charges))
+    # tear_sync still prices the resync at the window's default rate
+    led.begin_sync(hop_seconds=0.5)
+    led.dispatch_hop(seconds=0.1)
+    rec = led.tear_sync(resync_hops=4)
+    assert rec["comm_total_s"] == pytest.approx(2.0)
+
+
 def test_ledger_partial_and_tear():
     led = CommOverlapLedger()
     led.begin_sync(hop_seconds=2.0)

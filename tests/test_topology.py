@@ -79,3 +79,83 @@ def test_monitor_no_spurious_reorder():
     changed, _ = mon.maybe_reorder()
     changed2, _ = mon.maybe_reorder()
     assert not changed2  # stable link quality -> no recompile churn
+
+
+def test_monitor_skips_reorder_until_ring_fully_observed():
+    """Regression: unobserved links (EWMA still inf) used to be scored
+    as 0-bandwidth edges of the CURRENT ring, making any candidate look
+    infinitely better and triggering spurious reorders. With only half
+    the matrix observed, the monitor must hold the identity order."""
+    mon = topology.BandwidthMonitor(4, reorder_ratio=1.5)
+    m = np.full((4, 4), np.inf)
+    np.fill_diagonal(m, 0.0)
+    # observe only the links among {0, 1}: ring edges 1-2, 2-3, 3-0
+    # remain unobserved
+    m[0, 1] = m[1, 0] = 0.01   # terrible observed link
+    mon.observe_matrix(m)
+    assert mon.ring_bottleneck() is None
+    changed, order = mon.maybe_reorder()
+    assert not changed
+    assert order == tuple(range(4))
+    # once every ring edge is observed, reordering resumes: the 0-1
+    # edge is the bottleneck and a better cycle avoiding it exists
+    full = np.full((4, 4), 10.0)
+    np.fill_diagonal(full, 0.0)
+    full[0, 1] = full[1, 0] = 0.01
+    for _ in range(50):    # drive the EWMA to the sampled values
+        mon.observe_matrix(full)
+    assert mon.ring_bottleneck() is not None
+    changed, order = mon.maybe_reorder()
+    assert changed
+    edges = set(zip(order, order[1:] + order[:1]))
+    assert (0, 1) not in edges and (1, 0) not in edges
+
+
+def test_ring_bottleneck_reports_min_observed_edge():
+    mon = topology.BandwidthMonitor(3)
+    m = np.array([[0.0, 4.0, 2.0],
+                  [4.0, 0.0, 8.0],
+                  [2.0, 8.0, 0.0]])
+    mon.observe_matrix(m)
+    # identity ring 0->1->2->0 edges: 4, 8, 2
+    assert abs(mon.ring_bottleneck() - 2.0) < 1e-9
+    assert abs(mon.ring_bottleneck((0, 2, 1)) - 2.0) < 1e-9
+    # single-worker ring has no WAN edges
+    assert topology.BandwidthMonitor(1).ring_bottleneck() is None
+
+
+def test_greedy_trivial_rings():
+    """n <= 2: there is exactly one cycle — no restarts, no swaps."""
+    assert topology.solve_greedy(np.zeros((1, 1))) == (0,)
+    w = np.array([[0.0, 5.0], [5.0, 0.0]])
+    assert topology.solve_greedy(w) == (0, 1)
+    assert topology.solve_exact(w) == (0, 1)
+
+
+def test_greedy_matches_exact_on_small_rings():
+    """With distinct restart starts the greedy pass covers every NN
+    tree on small n, so (with the swap refinement) it must match the
+    exact max-min bottleneck on n <= 5."""
+    for n in (3, 4, 5):
+        for seed in range(8):
+            w = _rand_w(np.random.default_rng(seed), n)
+            g = topology.solve_greedy(w, restarts=n, seed=seed)
+            e = topology.solve_exact(w)
+            assert sorted(g) == list(range(n))
+            assert abs(topology.cycle_bottleneck(w, g)
+                       - topology.cycle_bottleneck(w, e)) < 1e-9, \
+                f"n={n} seed={seed}"
+
+
+def test_greedy_restart_starts_are_distinct():
+    """Colliding random starts used to duplicate whole NN+swap passes;
+    starts must now be distinct nodes (0 first, then a permutation)."""
+    n = 6
+    w = _rand_w(np.random.default_rng(7), n)
+    rng = np.random.default_rng(123)
+    starts = [0] + [int(s) for s in
+                    rng.permutation(np.arange(1, n))[:n - 1]]
+    assert len(set(starts)) == len(starts) == n
+    # restarts beyond n-1 extra cannot exceed the node count
+    order = topology.solve_greedy(w, restarts=50, seed=123)
+    assert sorted(order) == list(range(n))
