@@ -12,7 +12,15 @@ scenarios:
   phase (CommOverlapLedger logical time), delayed-application loss
   trajectory vs the synchronous run, and a worker dying mid-overlap
   recovering through the synchronous fallback bit-consistently
-  (two identical runs produce bit-identical anchors).
+  (two identical runs produce bit-identical anchors);
+* ``robust_agg`` — the untrusted-contributor defense (PR 10
+  acceptance): an 8-worker cluster with two persistent attackers
+  (node 6 alternates nan/signflip, node 7 ships 1e6x updates) run
+  with the admission layer lands an anchor BIT-IDENTICAL to a clean
+  6-worker cluster's, while the undefended foil is destroyed; the
+  clean run records zero false quarantines, and the distributed
+  shard_map backend reaches the same admission decisions and the
+  same anchor bit-for-bit (subprocess with 8 forced host devices).
 
 The seed path (reproduced verbatim below as ``_seed_*``) re-flattened
 the anchor pytree once per worker inside a vmap (plus once more in the
@@ -228,7 +236,8 @@ def _bucket_quality(seed: int, smoke: bool) -> list[dict]:
 
 
 def _make_trainer(overlap: str, chunks: int, inner: int, events=(),
-                  workers: int = 3, max_workers: int = 4):
+                  workers: int = 3, max_workers: int = 4,
+                  validation=None):
     import jax as _jax
 
     from repro.configs import CONFIGS
@@ -245,7 +254,8 @@ def _make_trainer(overlap: str, chunks: int, inner: int, events=(),
     tcfg = TrainerConfig(
         diloco=dl.DiLoCoConfig(inner_steps=inner, quant="int8",
                                overlap=overlap),
-        inner_lr=3e-3, max_workers=max_workers, inner_chunks=chunks)
+        inner_lr=3e-3, max_workers=max_workers, inner_chunks=chunks,
+        validation=validation)
     return ElasticTrainer(model, tcfg, dcfg, params,
                           ClusterSimulator(list(range(workers)),
                                            events=list(events)))
@@ -459,6 +469,168 @@ def _overlap_distributed(seed: int, smoke: bool) -> dict:
     return _json.loads(out.stdout.strip().splitlines()[-1])
 
 
+def _robust_poison_events(steps: int):
+    from repro.core.fault_tolerance import EventKind, NodeEvent
+
+    mode = ["nan", "signflip"]
+    return [NodeEvent(t, EventKind.POISON, 6, arg=mode[t % 2])
+            for t in range(steps)] + \
+           [NodeEvent(t, EventKind.POISON, 7, arg="huge")
+            for t in range(steps)]
+
+
+def _robust_agg_scenario(seed: int, smoke: bool) -> dict:
+    """Untrusted-contributor defense end-to-end: 2-of-8 workers ship
+    poisoned pseudo-gradients every boundary (node 6 alternates
+    nan/signflip, node 7 sends 1e6x-norm updates). Defended run vs
+    clean 6-worker run (must be bit-identical — quarantined slots are
+    indistinguishable from never-filled slots), vs undefended foil
+    (must diverge). Clean run doubles as the false-positive probe."""
+    from repro.core import validation as vd
+
+    inner, steps = (2, 3) if smoke else (3, 4)
+    ev = _robust_poison_events(steps)
+
+    t0 = time.perf_counter()
+    defended = _make_trainer("none", 1, inner, events=ev, workers=8,
+                             max_workers=8,
+                             validation=vd.ValidationConfig())
+    defended.run(steps)
+    t_def = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    clean = _make_trainer("none", 1, inner, workers=6, max_workers=8,
+                          validation=vd.ValidationConfig())
+    clean.run(steps)
+    t_clean = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    undefended = _make_trainer("none", 1, inner, events=ev, workers=8,
+                               max_workers=8)
+    undefended.run(steps)
+    t_undef = time.perf_counter() - t0
+
+    ad = np.asarray(defended.outer.anchor_flat)
+    ac = np.asarray(clean.outer.anchor_flat)
+    au = np.asarray(undefended.outer.anchor_flat)
+    first = (defended.quarantine_events[0]
+             if defended.quarantine_events else None)
+    return {
+        "workers": 8, "poisoned_nodes": [6, 7], "inner_steps": inner,
+        "outer_steps": steps,
+        "defended_matches_clean_bitwise": bool(np.array_equal(ad, ac)),
+        "defended_anchor_finite": bool(np.isfinite(ad).all()),
+        "undefended_anchor_finite": bool(np.isfinite(au).all()),
+        "false_quarantines_clean": len(clean.quarantine_events),
+        "false_violations_clean": len(clean.sim.violations),
+        "first_catch_step": first["outer_step"] if first else None,
+        "first_catch_nodes": sorted(first["quarantined"])
+            if first else [],
+        "violating_nodes": sorted({v[1]
+                                   for v in defended.sim.violations}),
+        "requarantines_node6":
+            int(defended.sim.hb.nodes[6].quarantines),
+        # admission overhead: defended wall over the undefended same-
+        # size run (gates + one extra restart-reduce per rejection)
+        "wall_s_defended": t_def, "wall_s_undefended": t_undef,
+        "wall_s_clean": t_clean,
+        "admission_overhead_frac": (t_def - t_undef)
+            / max(t_undef, 1e-9),
+        "distributed": _robust_distributed(seed, smoke),
+    }
+
+
+def _robust_distributed(seed: int, smoke: bool) -> dict:
+    """The DISTRIBUTED half of the robust_agg acceptance, in a
+    subprocess with 8 forced host devices: the same poisoned schedule
+    through DistSyncBackend's per-hop shard_map collectives. The
+    admission gates judge host-side float64 copies of the staged rows
+    plus the chunk-norm sideband, so the backend must reach the SAME
+    quarantine decisions and the SAME anchor, bit-for-bit, as the
+    single-device simulator trainer."""
+    import json as _json
+    import pathlib
+    import subprocess
+    import sys
+    import textwrap
+
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    inner, steps = (2, 3) if smoke else (3, 4)
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        import sys, json
+        sys.path.insert(0, {src!r})
+        import jax, numpy as np, jax.numpy as jnp
+        from repro import compat
+        from repro.configs import CONFIGS
+        from repro.core import diloco as dl
+        from repro.core import validation as vd
+        from repro.core.fault_tolerance import (ClusterSimulator,
+                                                EventKind, NodeEvent)
+        from repro.data.pipeline import DataConfig
+        from repro.models.registry import get_model
+        from repro.train import step as ts
+        from repro.train.loop import ElasticTrainer, TrainerConfig
+
+        K, INNER, STEPS = 8, {inner}, {steps}
+        MODE = ["nan", "signflip"]
+
+        def events():
+            return ([NodeEvent(t, EventKind.POISON, 6,
+                               arg=MODE[t % 2]) for t in range(STEPS)]
+                    + [NodeEvent(t, EventKind.POISON, 7, arg="huge")
+                       for t in range(STEPS)])
+
+        def make_trainer(backend=None):
+            cfg = CONFIGS["mamba2-130m"].reduced()
+            model = get_model(cfg)
+            params, _ = model.init(jax.random.PRNGKey(0))
+            dcfg = DataConfig(vocab=cfg.vocab, seq_len=32,
+                              batch_per_worker=2,
+                              total_steps=INNER * 32)
+            tcfg = TrainerConfig(
+                diloco=dl.DiLoCoConfig(inner_steps=INNER,
+                                       quant="int8"),
+                inner_lr=3e-3, max_workers=K,
+                validation=vd.ValidationConfig())
+            return ElasticTrainer(model, tcfg, dcfg, params,
+                                  ClusterSimulator(list(range(K)),
+                                                   events=events()),
+                                  sync_backend=backend)
+
+        mesh = compat.make_mesh(
+            (K,), ("data",), devices=np.asarray(jax.devices())[:K])
+        tr = make_trainer(backend=ts.DistSyncBackend(mesh, "data"))
+        tr.run(STEPS)
+        tr_sim = make_trainer()
+        tr_sim.run(STEPS)
+
+        def decisions(t):
+            return [[e["outer_step"], sorted(e["quarantined"]),
+                     sorted((s, sorted(r))
+                            for s, r in e["flagged"].items())]
+                    for e in t.quarantine_events]
+
+        print(json.dumps({{
+            "bit_identical_to_sim": bool(jnp.array_equal(
+                tr.outer.anchor_flat, tr_sim.outer.anchor_flat)),
+            "decisions_identical":
+                decisions(tr) == decisions(tr_sim)
+                and tr.sim.violations == tr_sim.sim.violations,
+            "anchor_finite": bool(
+                jnp.isfinite(tr.outer.anchor_flat).all()),
+            "quarantined_nodes":
+                sorted({{v[1] for v in tr.sim.violations}}),
+        }}))
+    """).format(src=src, inner=inner, steps=steps)
+    out = subprocess.run([sys.executable, "-c", prog],
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return _json.loads(out.stdout.strip().splitlines()[-1])
+
+
 def _measure(seed: int = 0, smoke: bool = False) -> dict:
     rng = np.random.default_rng(seed)
     params = _model(rng, N_ELEMS_SMOKE if smoke else N_ELEMS)
@@ -497,12 +669,15 @@ def _measure(seed: int = 0, smoke: bool = False) -> dict:
         "buckets": _bucket_quality(seed, smoke),
         "overlap": _overlap_scenario(seed, smoke),
         "overlap_distributed": _overlap_distributed(seed, smoke),
+        "robust_agg": _robust_agg_scenario(seed, smoke),
     }
 
 
 def _rows(m: dict) -> list[str]:
     ov = m["overlap"]
     od = m["overlap_distributed"]
+    ra = m["robust_agg"]
+    rd = ra["distributed"]
     best = max(m["buckets"], key=lambda b: b["cosine_vs_fp32"])
     return [
         common.csv_row("sync/outer_sync_fused", m["fused_outer_sync_s"]
@@ -543,6 +718,20 @@ def _rows(m: dict) -> list[str]:
             f"recompiles={od['recompiles']};"
             f"spurious_stable={od['spurious_reorders_stable']};"
             f"bit_identical={od['bit_identical_to_sim']}"),
+        common.csv_row(
+            "sync/robust_agg", 0.0,
+            f"defended_matches_clean="
+            f"{ra['defended_matches_clean_bitwise']};"
+            f"undefended_finite={ra['undefended_anchor_finite']};"
+            f"false_quarantines={ra['false_quarantines_clean']};"
+            f"first_catch_step={ra['first_catch_step']};"
+            f"caught={ra['first_catch_nodes']};"
+            f"overhead_frac={ra['admission_overhead_frac']:.2f}"),
+        common.csv_row(
+            "sync/robust_agg_distributed", 0.0,
+            f"bit_identical={rd['bit_identical_to_sim']};"
+            f"decisions_identical={rd['decisions_identical']};"
+            f"quarantined={rd['quarantined_nodes']}"),
     ]
 
 

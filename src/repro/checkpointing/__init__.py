@@ -8,7 +8,8 @@ from repro.checkpointing.p2p import (CheckpointServer, ChecksumError,
                                      EmptyPeerError, FetchError,
                                      PeerClosedError, PeerConn,
                                      PeerConnPool, PeerTimeoutError,
-                                     RetryPolicy, RetryableFetchError,
+                                     RetryDeadlineError, RetryPolicy,
+                                     RetryableFetchError,
                                      fetch_checkpoint, retry_call)
 from repro.checkpointing.snapshot import AsyncSnapshotter
 from repro.checkpointing.store import (ChunkCorruptError,
@@ -22,7 +23,7 @@ __all__ = [
     "save", "save_async", "restore", "latest_step",
     "CheckpointServer", "fetch_checkpoint", "PeerConn", "PeerConnPool",
     "FetchError", "PeerClosedError", "ChecksumError", "EmptyPeerError",
-    "RetryableFetchError", "PeerTimeoutError",
+    "RetryableFetchError", "PeerTimeoutError", "RetryDeadlineError",
     "RetryPolicy", "retry_call",
     "ChunkStore", "ChunkCorruptError", "ChunkMissingError",
     "DeltaCheckpointer", "DeltaConfig", "DeltaChainError",

@@ -69,6 +69,14 @@ class PeerTimeoutError(FetchError, TimeoutError):
     stall exactly like a crash — typed, catch-and-failover."""
 
 
+class RetryDeadlineError(FetchError, TimeoutError):
+    """A retry loop ran out of TOTAL wall-clock budget
+    (``RetryPolicy.max_elapsed_s`` / ``StreamingFetcher``
+    ``max_elapsed_s``): under churn, per-attempt backoff can stack
+    unboundedly — the deadline caps the whole ladder. Chains the last
+    underlying failure as ``__cause__``."""
+
+
 # -- retry / backoff ----------------------------------------------------------
 
 
@@ -92,15 +100,25 @@ class RetryPolicy:
     retry_on: tuple = (PeerClosedError, ChecksumError,
                        RetryableFetchError, PeerTimeoutError, OSError)
     no_retry: tuple = (EmptyPeerError,)
+    # total wall-clock budget across ALL attempts (None = unbounded):
+    # once the elapsed time plus the next backoff would cross it, the
+    # loop raises RetryDeadlineError instead of sleeping
+    max_elapsed_s: float | None = None
 
 
 def retry_call(fn, *, policy: RetryPolicy | None = None,
-               describe: str = "", sleep=time.sleep, rng=None):
+               describe: str = "", sleep=time.sleep, rng=None,
+               clock=time.monotonic):
     """Run ``fn()`` under ``policy``; re-raises the last error once the
-    attempts are exhausted. ``sleep``/``rng`` are injectable for
-    deterministic tests (``rng.random()`` in [0, 1) drives jitter)."""
+    attempts are exhausted. ``sleep``/``rng``/``clock`` are injectable
+    for deterministic tests (``rng.random()`` in [0, 1) drives jitter).
+    With ``policy.max_elapsed_s`` set, the TOTAL wall-clock across
+    attempts (including the about-to-happen backoff sleep) is capped:
+    crossing it raises :class:`RetryDeadlineError` from the last
+    underlying failure."""
     policy = policy or RetryPolicy()
     roll = rng.random if rng is not None else random.random
+    t0 = clock()
     last: BaseException | None = None
     for attempt in range(max(1, policy.attempts)):
         try:
@@ -113,7 +131,14 @@ def retry_call(fn, *, policy: RetryPolicy | None = None,
                 raise
             delay = min(policy.max_delay,
                         policy.base_delay * (2 ** attempt))
-            sleep(delay * (1.0 + policy.jitter * roll()))
+            delay *= 1.0 + policy.jitter * roll()
+            if policy.max_elapsed_s is not None and \
+                    (clock() - t0) + delay > policy.max_elapsed_s:
+                raise RetryDeadlineError(
+                    f"retry budget {policy.max_elapsed_s}s exhausted "
+                    f"after {attempt + 1} attempts"
+                    + (f" ({describe})" if describe else "")) from e
+            sleep(delay)
     raise last  # pragma: no cover — loop always returns or raises
 
 

@@ -37,7 +37,8 @@ from typing import Any, Sequence
 
 from repro.checkpointing import delta as _delta
 from repro.checkpointing.gossip import ChunkGossip
-from repro.checkpointing.p2p import FetchError, PeerConn
+from repro.checkpointing.p2p import (FetchError, PeerConn,
+                                     RetryDeadlineError)
 from repro.checkpointing.store import ChunkStore
 from repro.checkpointing.swarm import (NoPeersError, SwarmFetchError,
                                        _manifest_chain_any, swarm_fetch)
@@ -54,6 +55,7 @@ class StreamingFetcher:
                  step: int | None = None, range_chunks: int = 8,
                  timeout: float = 20.0, max_rounds: int = 8,
                  round_wait: float = 0.05,
+                 max_elapsed_s: float | None = None,
                  gossip: ChunkGossip | None = None):
         self.store = store if isinstance(store, ChunkStore) \
             else ChunkStore(store)
@@ -64,6 +66,12 @@ class StreamingFetcher:
         self.timeout = timeout
         self.max_rounds = max_rounds
         self.round_wait = round_wait
+        # total wall-clock budget for the whole recovery (None =
+        # unbounded): retry rounds under churn back off repeatedly, so
+        # without a deadline a joiner can spin far past the point where
+        # re-fetching from scratch would be cheaper
+        self.max_elapsed_s = max_elapsed_s
+        self._deadline: float | None = None
         self.gossip = gossip or ChunkGossip(peers, timeout=timeout)
         for addr in peers:
             self.gossip.add_peer(addr)
@@ -85,8 +93,20 @@ class StreamingFetcher:
         self._thread.start()
         return self
 
+    def _check_deadline(self, last: Exception | None = None) -> None:
+        """Raise :class:`RetryDeadlineError` once the total recovery
+        budget is spent (checked before every between-round backoff)."""
+        if self._deadline is not None and \
+                time.monotonic() > self._deadline:
+            raise RetryDeadlineError(
+                f"streaming recovery budget {self.max_elapsed_s}s "
+                f"exhausted in state {self.state!r} "
+                f"(round {self._rounds})") from last
+
     def _run(self) -> None:
         self._t0 = time.perf_counter()
+        if self.max_elapsed_s is not None:
+            self._deadline = time.monotonic() + self.max_elapsed_s
         try:
             chain = self._discover()
             self._stream(chain)
@@ -107,6 +127,7 @@ class StreamingFetcher:
                 step = self.gossip.latest_step()
             if step is not None:
                 break
+            self._check_deadline()
             time.sleep(self.round_wait * (attempt + 1))
         if step is None:
             raise NoPeersError("no live peer holds a checkpoint")
@@ -172,6 +193,7 @@ class StreamingFetcher:
                     # round
                     if isinstance(e, SwarmFetchError) and e.failures:
                         self._merge_failures(e.failures)
+                    self._check_deadline(last)
                     time.sleep(self.round_wait)
                     self.gossip.poll_once()
                     # if the caller didn't pin a step and ours

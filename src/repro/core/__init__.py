@@ -1,27 +1,34 @@
 """PRIME core: the paper's contribution as composable JAX modules."""
-from repro.core.diloco import (DiLoCoConfig, OuterState,
+from repro.core.diloco import (DiLoCoConfig, OuterState, SyncAbortedError,
                                bandwidth_reduction_factor,
                                init_outer_state, init_outer_state_sim,
                                outer_sync, outer_sync_sim, sync_wire_bytes)
 from repro.core.elastic_mesh import ElasticDeviceMesh, SlotAssignment
 from repro.core.fault_tolerance import (ClusterSimulator, EventKind,
                                         HeartbeatMonitor, NodeEvent,
+                                        NodeState, QuarantinePolicy,
                                         RetryPolicy)
-from repro.core.ring_reduce import (RingConfig, ring_all_reduce,
-                                    ring_wire_bytes,
+from repro.core.ring_reduce import (RingConfig, chunk_norms,
+                                    ring_all_reduce, ring_wire_bytes,
                                     simulate_ring_all_reduce)
 from repro.core.sync_engine import SyncEngine
 from repro.core.topology import (BandwidthMonitor, cycle_bottleneck,
-                                 optimize_ring_order)
+                                 exclude_slots, optimize_ring_order)
+from repro.core.validation import (AdmissionReport, AdmissionStats,
+                                   ValidationConfig, poison_pseudograd,
+                                   validate_pseudograds)
 
 __all__ = [
-    "DiLoCoConfig", "OuterState", "init_outer_state",
+    "DiLoCoConfig", "OuterState", "SyncAbortedError", "init_outer_state",
     "init_outer_state_sim", "outer_sync", "outer_sync_sim",
     "sync_wire_bytes", "bandwidth_reduction_factor",
     "ElasticDeviceMesh", "SlotAssignment",
     "ClusterSimulator", "EventKind", "HeartbeatMonitor", "NodeEvent",
-    "RetryPolicy",
-    "RingConfig", "ring_all_reduce", "ring_wire_bytes",
+    "NodeState", "QuarantinePolicy", "RetryPolicy",
+    "RingConfig", "chunk_norms", "ring_all_reduce", "ring_wire_bytes",
     "simulate_ring_all_reduce", "SyncEngine",
-    "BandwidthMonitor", "cycle_bottleneck", "optimize_ring_order",
+    "BandwidthMonitor", "cycle_bottleneck", "exclude_slots",
+    "optimize_ring_order",
+    "AdmissionReport", "AdmissionStats", "ValidationConfig",
+    "poison_pseudograd", "validate_pseudograds",
 ]

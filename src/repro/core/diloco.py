@@ -43,6 +43,11 @@ from repro.kernels import ops as qops
 from repro.optim.nesterov import NesterovSGD, NesterovState
 
 
+class SyncAbortedError(RuntimeError):
+    """An in-flight outer sync was aborted (trainer teardown or a
+    rejected/discarded reduction); its result must never be applied."""
+
+
 @dataclasses.dataclass(frozen=True)
 class DiLoCoConfig:
     inner_steps: int = 100          # H (paper: 100; DiLoCo paper: up to 500)
@@ -310,18 +315,64 @@ class OuterSyncHandle:
         self.ef_slot = ef_slot
         self.weights = weights
         self.k = k
+        self.aborted = False
 
     def step(self) -> bool:
         """Dispatch the next ring hop; True iff one was dispatched."""
+        if self.aborted:
+            return False
         return self.op.step()
 
     @property
     def hops_total(self) -> int:
-        return self.op.hops_total
+        return 0 if self.aborted else self.op.hops_total
 
     @property
     def hops_done(self) -> int:
-        return self.op.hops_done
+        return 0 if self.aborted else self.op.hops_done
+
+    def abort(self) -> None:
+        """Discard this boundary's sync: drop the staged accumulators
+        and retained inputs so nothing can be applied. Further
+        ``finish``/``resync`` raises :class:`SyncAbortedError`."""
+        self.aborted = True
+        self.op = None
+
+    def norm_sideband(self):
+        """(k, k * buckets) per-chunk norm sideband of the retained
+        pseudo-gradient rows (admission layer / localization)."""
+        if self.aborted:
+            raise SyncAbortedError("norm_sideband on an aborted sync")
+        return self.op.norm_sideband()
+
+    def sanitize(self, slots) -> None:
+        """Zero the retained rows of ``slots`` so a subsequent
+        ``restart`` re-reduces only clean contributions.
+
+        Zero-WEIGHTING a corrupted row is NOT enough: ``NaN * 0 == NaN``
+        and the op's staged accumulators were built from the raw rows,
+        so after sanitizing the caller must RESTART the reduction (the
+        staged partial state is contaminated and is discarded by
+        ``restart``), never ``finish`` it.
+        """
+        if self.aborted:
+            raise SyncAbortedError("sanitize on an aborted sync")
+        if not slots:
+            return
+        idx = jnp.asarray(sorted(slots), dtype=jnp.int32)
+        op = self.op
+        op.xs = op.xs.at[idx].set(0.0)
+        if op.fused_src is not None:
+            # fused first-hop tx reads (anchor, thetas): a zero row in
+            # pg-space means theta == anchor for that slot
+            a_flat, thetas = op.fused_src
+            thetas = thetas.at[idx].set(a_flat)
+            op.fused_src = (a_flat, thetas)
+        if self.cfg.error_feedback:
+            # the EF rewrite folded the corrupted rows into the new
+            # residuals — a poisoned residual would re-inject NaNs into
+            # the NEXT boundary's pseudo-gradients
+            self.new_residuals = self.new_residuals.at[idx].set(0.0)
 
 
 def begin_outer_sync_sim(stacked_params, state: OuterState,
@@ -350,6 +401,8 @@ def begin_outer_sync_sim(stacked_params, state: OuterState,
 
 def _finish_apply(handle: OuterSyncHandle, reduced, stacked_params,
                   state: OuterState):
+    if handle.aborted:
+        raise SyncAbortedError("apply on an aborted sync")
     any_params = jax.tree.map(lambda p: p[0], stacked_params)
     res = _commit_residual(state, handle.new_residuals, handle.ef_slot)
     new_params, new_state = _apply_outer(
@@ -384,6 +437,8 @@ def finish_outer_sync_sim(handle: OuterSyncHandle, stacked_params,
     measurably overshoots: 40–120% worse held-out anchor loss on the
     BENCH_sync overlap scenario, vs ~3% for this formulation
     (delayed-vs-synchronous, same data/steps)."""
+    if handle.aborted:
+        raise SyncAbortedError("finish on an aborted sync")
     return _finish_apply(handle, handle.op.finish(), stacked_params,
                          state)
 
@@ -397,6 +452,8 @@ def resync_outer_sim(handle: OuterSyncHandle, stacked_params,
     (``weights`` with the dead workers zeroed) and apply — every
     survivor derives the identical result from identical retained
     inputs, so recovery is bit-consistent."""
+    if handle.aborted:
+        raise SyncAbortedError("resync on an aborted sync")
     return _finish_apply(handle, handle.op.restart(weights),
                          stacked_params, state)
 

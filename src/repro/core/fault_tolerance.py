@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 from typing import Callable, Iterable
 
 
@@ -40,6 +41,10 @@ class NodeState(enum.Enum):
     LIVE = "live"
     LEFT = "left"            # graceful (deathrattle)
     DEAD = "dead"            # evicted by heartbeat timeout
+    QUARANTINED = "quarantined"  # admission violation: excluded from the
+    #                              sync (zero weight, tail of the ring)
+    #                              but still heartbeating; re-admitted on
+    #                              probation after N clean outer steps
 
 
 @dataclasses.dataclass
@@ -48,6 +53,18 @@ class Node:
     state: NodeState = NodeState.JOINING
     last_heartbeat: float = -1.0
     joined_at: float = 0.0
+    # -- contribution reputation (untrusted-contributor defense) -----------
+    violations: int = 0        # admission checks failed, lifetime
+    clean_credits: int = 0     # contributions accepted, lifetime
+    quarantines: int = 0       # times quarantined (escalates probation)
+    quarantine_steps: int = 0  # outer steps served in CURRENT quarantine
+
+    @property
+    def reputation(self) -> float:
+        """Accepted fraction of judged contributions in [0, 1]
+        (1.0 for a node never judged)."""
+        judged = self.violations + self.clean_credits
+        return self.clean_credits / judged if judged else 1.0
 
 
 class HeartbeatMonitor:
@@ -70,7 +87,8 @@ class HeartbeatMonitor:
 
     def heartbeat(self, node_id: int, now: float) -> None:
         n = self.nodes.get(node_id)
-        if n is not None and n.state in (NodeState.LIVE, NodeState.JOINING):
+        if n is not None and n.state in (NodeState.LIVE, NodeState.JOINING,
+                                         NodeState.QUARANTINED):
             n.last_heartbeat = now
 
     def deathrattle(self, node_id: int) -> None:
@@ -83,7 +101,8 @@ class HeartbeatMonitor:
         returns the newly evicted ids."""
         evicted = []
         for n in self.nodes.values():
-            if n.state in (NodeState.LIVE, NodeState.JOINING) and \
+            if n.state in (NodeState.LIVE, NodeState.JOINING,
+                           NodeState.QUARANTINED) and \
                     now - n.last_heartbeat > self.timeout:
                 n.state = NodeState.DEAD
                 evicted.append(n.node_id)
@@ -92,6 +111,10 @@ class HeartbeatMonitor:
     def live_ids(self) -> list[int]:
         return sorted(n.node_id for n in self.nodes.values()
                       if n.state == NodeState.LIVE)
+
+    def quarantined_ids(self) -> list[int]:
+        return sorted(n.node_id for n in self.nodes.values()
+                      if n.state == NodeState.QUARANTINED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +161,11 @@ class EventKind(enum.Enum):
     #                                ChunkPeer stops answering for a
     #                                while); membership is unaffected —
     #                                subscribers throttle/kill the peer
+    POISON = "poison"              # node's contribution is corrupted
+    #                                this outer step (arg = mode:
+    #                                'nan' | 'huge' | 'signflip' |
+    #                                'bitflip'); membership unchanged —
+    #                                the admission layer must catch it
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +173,27 @@ class NodeEvent:
     outer_step: int
     kind: EventKind
     node_id: int
+    arg: str = ""                  # kind-specific payload (POISON mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantinePolicy:
+    """Quarantine / probation knobs for the contribution-admission
+    layer. A violating node is QUARANTINED immediately (zero sync
+    weight, tail of the ring); after ``probation_steps`` outer steps of
+    quarantine it is re-admitted as a joiner (anchor reset, zero-weight
+    first round). Repeat offenders serve escalating probations:
+    ``probation_steps * escalation**(quarantines - 1)``, capped at
+    ``max_probation_steps``."""
+
+    probation_steps: int = 2
+    escalation: float = 2.0
+    max_probation_steps: int = 16
+
+    def required_steps(self, quarantines: int) -> int:
+        n = self.probation_steps * self.escalation ** max(
+            0, quarantines - 1)
+        return min(int(n), self.max_probation_steps)
 
 
 class ClusterSimulator:
@@ -158,7 +207,8 @@ class ClusterSimulator:
     def __init__(self, initial_nodes: Iterable[int],
                  events: Iterable[NodeEvent] = (),
                  heartbeat: HeartbeatMonitor | None = None,
-                 seconds_per_outer_step: float = 60.0):
+                 seconds_per_outer_step: float = 60.0,
+                 quarantine: QuarantinePolicy | None = None):
         self.hb = heartbeat or HeartbeatMonitor()
         self.events = sorted(events, key=lambda e: e.outer_step)
         self.now = 0.0
@@ -171,13 +221,60 @@ class ClusterSimulator:
         # loses that peer mid-transfer)
         self._subscribers: list[Callable[[NodeEvent], None]] = []
         self._inflight_sync: dict | None = None
+        self.quarantine = quarantine or QuarantinePolicy()
+        # (outer_step, node_id, reasons) of every recorded violation
+        self.violations: list[tuple[int, int, tuple[str, ...]]] = []
         for nid in initial_nodes:
             self.hb.register(nid, self.now)
             self.hb.mark_live(nid)
 
     def subscribe(self, fn: Callable[[NodeEvent], None]) -> None:
-        """Call ``fn(event)`` whenever an event is applied."""
+        """Call ``fn(event)`` whenever an event is applied. A raising
+        subscriber is DROPPED (and warned about) rather than wedging
+        the event pump — one faulty observer must not take the
+        membership machinery down with it."""
         self._subscribers.append(fn)
+
+    def _notify(self, ev: NodeEvent) -> None:
+        for fn in list(self._subscribers):
+            try:
+                fn(ev)
+            except Exception as e:  # noqa: BLE001 — isolation boundary
+                try:
+                    self._subscribers.remove(fn)
+                except ValueError:
+                    pass
+                warnings.warn(
+                    f"ClusterSimulator subscriber {fn!r} raised "
+                    f"{type(e).__name__}: {e} — dropped", RuntimeWarning,
+                    stacklevel=2)
+
+    # -- contribution admission / quarantine ---------------------------------
+
+    def record_violation(self, node_id: int, outer_step: int,
+                         reasons: Iterable[str] = ()) -> bool:
+        """The admission layer rejected this node's contribution:
+        quarantine it (LIVE nodes only). Returns True iff the node
+        transitioned to QUARANTINED."""
+        n = self.hb.nodes.get(node_id)
+        self.violations.append((outer_step, node_id, tuple(reasons)))
+        if n is None or n.state != NodeState.LIVE:
+            return False
+        n.violations += 1
+        n.quarantines += 1
+        n.quarantine_steps = 0
+        n.state = NodeState.QUARANTINED
+        return True
+
+    def record_clean(self, node_ids: Iterable[int]) -> None:
+        """The admission layer accepted these nodes' contributions."""
+        for nid in node_ids:
+            n = self.hb.nodes.get(nid)
+            if n is not None and n.state == NodeState.LIVE:
+                n.clean_credits += 1
+
+    def quarantined_ids(self) -> list[int]:
+        return self.hb.quarantined_ids()
 
     # -- in-flight overlapped sync -------------------------------------------
 
@@ -201,17 +298,36 @@ class ClusterSimulator:
     def begin_outer_step(self, outer_step: int) -> dict:
         """Apply events for this step; return the sync plan:
         {'live': [...], 'stragglers': [...], 'joined': [...],
-        'left': [...], 'announced': [...], 'sync_torn': [...]}.
+        'left': [...], 'announced': [...], 'sync_torn': [...],
+        'quarantined': [...], 'readmitted': [...], 'poison': {...}}.
 
         ``sync_torn`` lists in-flight-sync participants that left the
         cluster at this boundary (crash eviction or graceful leave
-        while their pseudo-gradient reduction was still on the wire)."""
+        while their pseudo-gradient reduction was still on the wire).
+        ``quarantined`` lists nodes serving quarantine THIS step;
+        ``readmitted`` lists nodes whose probation completed at this
+        boundary (the trainer treats them exactly like joiners: anchor
+        reset, zero-weight first round). ``poison`` maps node id ->
+        corruption mode the harness injects into that node's
+        contribution this step."""
+        # -- probation: quarantined nodes serve one step per boundary;
+        # completed probations re-admit as joiners
+        readmitted = []
+        for nid in self.hb.quarantined_ids():
+            n = self.hb.nodes[nid]
+            n.quarantine_steps += 1
+            if n.quarantine_steps >= self.quarantine.required_steps(
+                    n.quarantines):
+                n.state = NodeState.LIVE
+                n.quarantine_steps = 0
+                readmitted.append(nid)
+
         joined, left, stragglers, announced = [], [], [], []
+        poison: dict[int, str] = {}
         for ev in self.events:
             if ev.outer_step != outer_step:
                 continue
-            for fn in self._subscribers:
-                fn(ev)
+            self._notify(ev)
             if ev.kind in (EventKind.ANNOUNCE, EventKind.STALL):
                 # no membership change: ANNOUNCE kicks off a streaming
                 # fetch via the subscriber hooks; STALL is a peer-level
@@ -231,11 +347,15 @@ class ClusterSimulator:
                 self.crashed.add(ev.node_id)
             elif ev.kind == EventKind.STRAGGLE:
                 stragglers.append(ev.node_id)
+            elif ev.kind == EventKind.POISON:
+                poison[ev.node_id] = ev.arg or "nan"
 
         # advance logical time by one inner phase; crashed nodes stop
-        # heartbeating and age out (6 s timeout << 38 min inner phase)
+        # heartbeating and age out (6 s timeout << 38 min inner phase).
+        # Quarantined nodes KEEP heartbeating: they are excluded from
+        # the sync, not from the cluster.
         self.now += self.dt
-        for nid in self.hb.live_ids():
+        for nid in self.hb.live_ids() + self.hb.quarantined_ids():
             if nid not in self.crashed:
                 self.hb.heartbeat(nid, self.now)
         evicted = self.hb.sweep(self.now)
@@ -249,7 +369,11 @@ class ClusterSimulator:
         return {"live": live,
                 "stragglers": [s for s in stragglers if s in live],
                 "joined": joined, "left": sorted(set(left)),
-                "announced": announced, "sync_torn": torn}
+                "announced": announced, "sync_torn": torn,
+                "quarantined": self.hb.quarantined_ids(),
+                "readmitted": [r for r in readmitted
+                               if r in live],
+                "poison": poison}
 
 
 # -- logical-time overlap accounting ------------------------------------------

@@ -148,6 +148,34 @@ def _int8_deq(cfg: RingConfig):
     return lambda p: qops.dequantize(qops.Quantized(*p), impl=cfg.impl)
 
 
+# -- chunk-norm sideband (contribution admission / localization) -------------
+
+
+def chunk_norms(xs, buckets: int = 1) -> np.ndarray:
+    """Per-(chunk, bucket) L2 norms of stacked contributions.
+
+    ``xs``: (k, D) per-worker rows. Returns (k, k * buckets) float64 —
+    one column per wire sub-bucket, laid out exactly like the ring's
+    chunk geometry (same ceil-div padding as :func:`_pad_to_chunks`), so
+    an admission layer can localize WHICH chunk of WHICH slot carries
+    garbage. Pure host-side numpy: the simulator and the distributed
+    path compute bit-identical sidebands from their (bit-identical)
+    retained pseudo-gradients.
+    """
+    rows = np.asarray(xs, dtype=np.float64)
+    k, size = rows.shape
+    nb = max(1, buckets)
+    chunk = -(-size // k)
+    bsize = -(-chunk // nb)
+    chunk = bsize * nb
+    pad = k * chunk - size
+    if pad:
+        rows = np.concatenate([rows, np.zeros((k, pad))], axis=1)
+    safe = np.nan_to_num(rows, nan=0.0, posinf=0.0, neginf=0.0)
+    sq = safe.reshape(k, k * nb, bsize)
+    return np.sqrt(np.sum(sq * sq, axis=2))
+
+
 # -- distributed ring (inside shard_map, manual over `axis_name`) ------------
 
 
@@ -604,3 +632,8 @@ class RingSyncOp:
         return simulate_ring_all_reduce(
             self.xs, ring_order=self.ring_order, cfg=self.cfg,
             weights=weights, fused_src=self.fused_src)
+
+    def norm_sideband(self) -> np.ndarray:
+        """(k, k * buckets) per-chunk norm sideband of the retained
+        inputs (:func:`chunk_norms`) for the admission layer."""
+        return chunk_norms(self.xs, self.cfg.buckets)

@@ -138,6 +138,23 @@ def optimize_ring_order(bandwidth: np.ndarray,
     return solve_greedy(w)
 
 
+def exclude_slots(order, excluded) -> tuple[int, ...]:
+    """Quarantine-aware ring order: keep the relative order of the
+    retained slots and move ``excluded`` slots to the TAIL (in their
+    original relative order).
+
+    The result is still a permutation of ``order`` — excluded slots
+    stay in the ring geometry (they contribute zero-weighted rows), but
+    they no longer sit between healthy peers, so a wedged or
+    quarantined contributor cannot stall a healthy-to-healthy wire
+    edge. When the excluded slots already sit at the tail the order is
+    unchanged — no recompile of the distributed hop programs."""
+    excluded = set(excluded)
+    kept = tuple(s for s in order if s not in excluded)
+    tail = tuple(s for s in order if s in excluded)
+    return kept + tail
+
+
 class BandwidthMonitor:
     """Models the paper's background bandwidth-probing process.
 

@@ -45,7 +45,7 @@ sizing, paged greedy output is asserted bitwise equal to
 from __future__ import annotations
 
 import hashlib
-from collections import deque
+from collections import OrderedDict, deque
 
 import jax
 import jax.numpy as jnp
@@ -68,14 +68,22 @@ class BlockPool:
     """Host-side free-list allocator with refcounts over the physical
     KV block pool. Block 0 (trash) is never handed out.
 
-    ``on_pressure(pool, short)`` is the eviction hook stub for future
-    preemption: called before an allocation fails, it may release
-    blocks (e.g. by preempting a low-priority stream); allocation is
-    re-checked after. ``on_free(bid, tags)`` fires when a block's
-    refcount reaches zero — the engine uses it to drop the block's
-    prefix-index entries."""
+    ``on_pressure(pool, short)`` is the eviction hook: called before an
+    allocation fails, it may release blocks (e.g. by evicting cold
+    prefix blocks, or preempting a low-priority stream); allocation is
+    re-checked after. ``on_free(bid, tags)`` fires when a block leaves
+    the pool's ownership — the engine uses it to drop the block's
+    prefix-index entries.
 
-    def __init__(self, n_blocks: int, *, on_pressure=None, on_free=None):
+    With ``retain_tagged=True`` a tagged (prefix-indexed) block whose
+    refcount reaches zero is PARKED on the ``cold`` LRU list instead of
+    freed: its KV and index entries survive, so a later request with
+    the same prefix revives it via :meth:`incref` at zero cost.
+    ``evict``/``evict_cold`` turn cold blocks back into free ones (and
+    only then fire ``on_free``)."""
+
+    def __init__(self, n_blocks: int, *, on_pressure=None, on_free=None,
+                 retain_tagged: bool = False):
         if n_blocks < 2:
             raise ValueError("pool needs >= 2 blocks (one is trash)")
         self.n_blocks = n_blocks
@@ -84,12 +92,21 @@ class BlockPool:
         self.tags: dict[int, list] = {}
         self.on_pressure = on_pressure
         self.on_free = on_free
+        self.retain_tagged = retain_tagged
+        # zero-ref tagged blocks, oldest-parked first (LRU eviction
+        # order); values are unused
+        self.cold: OrderedDict[int, None] = OrderedDict()
         self.stats = {"allocs": 0, "frees": 0, "peak_used": 0,
-                      "exhausted": 0}
+                      "exhausted": 0, "parked": 0, "revived": 0,
+                      "evicted": 0}
 
     @property
     def used(self) -> int:
         return self.n_blocks - 1 - len(self.free)
+
+    @property
+    def cold_count(self) -> int:
+        return len(self.cold)
 
     def alloc(self, n: int) -> list[int]:
         if n <= 0:
@@ -109,22 +126,58 @@ class BlockPool:
         return ids
 
     def incref(self, bid: int) -> None:
+        if not self.ref[bid] and bid in self.cold:
+            # prefix match on a parked block: revive it from the cold
+            # list — the whole point of retaining
+            del self.cold[bid]
+            self.ref[bid] = 1
+            self.stats["revived"] += 1
+            return
         assert self.ref[bid] > 0, f"incref on free block {bid}"
         self.ref[bid] += 1
 
     def decref(self, bid: int) -> bool:
-        """Drop one ref; frees the block (and fires ``on_free`` with
-        its tags) when the count reaches zero. Returns True if freed."""
+        """Drop one ref. At zero the block frees (firing ``on_free``
+        with its tags) — unless ``retain_tagged`` and it carries tags,
+        in which case it parks on the cold LRU list with index entries
+        intact. Returns True if freed."""
         assert self.ref[bid] > 0, f"decref on free block {bid}"
         self.ref[bid] -= 1
         if self.ref[bid]:
             return False
+        if self.retain_tagged and self.tags.get(bid):
+            self.cold[bid] = None        # most-recently-parked at end
+            self.stats["parked"] += 1
+            return False
+        self._free_block(bid)
+        return True
+
+    def _free_block(self, bid: int) -> None:
         tags = self.tags.pop(bid, [])
         if self.on_free is not None:
             self.on_free(bid, tags)
         self.free.append(bid)
         self.stats["frees"] += 1
-        return True
+
+    def evict(self, bid: int) -> None:
+        """Free one cold block: drops its index entries (``on_free``)
+        and returns it to the free list."""
+        assert bid in self.cold, f"evict on non-cold block {bid}"
+        del self.cold[bid]
+        self._free_block(bid)
+        self.stats["evicted"] += 1
+
+    def evict_cold(self, n: int) -> int:
+        """Evict up to ``n`` cold blocks, oldest-parked first (LRU).
+        Returns the number evicted — the standard ``on_pressure``
+        policy when prefix retention is on."""
+        evicted = 0
+        while evicted < n and self.cold:
+            bid, _ = self.cold.popitem(last=False)
+            self._free_block(bid)
+            self.stats["evicted"] += 1
+            evicted += 1
+        return evicted
 
     def tag(self, bid: int, item) -> None:
         self.tags.setdefault(bid, []).append(item)
@@ -250,6 +303,7 @@ class PagedEngine(ContinuousEngine):
                  pool_blocks: int | None = None,
                  capacity_blocks: int | None = None,
                  share_prefix: bool = True,
+                 cache_prefixes: bool = False,
                  prefill_chunk: int | None = None, **kw):
         kw.pop("overlap_admission", None)   # admission is host-stateful
         kw.pop("batch_admit", None)         # per-request (block alloc)
@@ -267,7 +321,17 @@ class PagedEngine(ContinuousEngine):
             n_blocks=pool_blocks, capacity_blocks=capacity_blocks,
             rolling=self.rolling)
         self.capacity = self.nb * self.blk if self.nb else self.max_len
-        self.pool = BlockPool(n_blocks, on_free=self._on_block_free)
+        # cache_prefixes: keep zero-ref prefix-tagged blocks parked on
+        # the pool's cold LRU list so repeat prompts hit even after
+        # every sharer retired; admission under pressure evicts the
+        # coldest instead of raising. Off by default: the dense foil
+        # invariant is refcount-zero-frees-exactly-at-retire.
+        self.cache_prefixes = bool(cache_prefixes)
+        self.pool = BlockPool(
+            n_blocks, on_free=self._on_block_free,
+            retain_tagged=self.cache_prefixes,
+            on_pressure=(self._on_pool_pressure if self.cache_prefixes
+                         else None))
         self._extend = None
         if model.prefill_extend is not None and not self.rolling:
             self._extend = jax.jit(model.prefill_extend)
@@ -713,11 +777,15 @@ class PagedEngine(ContinuousEngine):
             else:
                 self.prefix.tails.pop(key, None)
 
+    def _on_pool_pressure(self, pool: BlockPool, short: int) -> None:
+        pool.evict_cold(short)
+
     def flush_prefix_cache(self) -> None:
         """Invalidate all content-addressed prefix state. REQUIRED
         after a params swap (RL policy adoption): cached KV and logits
-        are policy-dependent. Live requests keep their blocks; only the
-        sharing map clears."""
+        are policy-dependent. Live requests keep their blocks; parked
+        cold blocks (whose KV is now stale) free outright."""
+        self.pool.evict_cold(len(self.pool.cold))
         if self.prefix is not None:
             self.prefix.clear()
         self.pool.tags.clear()
@@ -734,5 +802,8 @@ class PagedEngine(ContinuousEngine):
             prefix_hit_rate=(self.stats["prefix_hit_tokens"]
                              / prompt_toks if prompt_toks else 0.0),
             cow_forks=self.stats["cow_forks"],
-            paged_extends=self.stats["paged_extends"])
+            paged_extends=self.stats["paged_extends"],
+            cold_blocks=self.pool.cold_count,
+            blocks_revived=self.pool.stats["revived"],
+            blocks_evicted=self.pool.stats["evicted"])
         return s

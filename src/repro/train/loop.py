@@ -33,6 +33,7 @@ import numpy as np
 from repro.core import diloco as dl
 from repro.core import ring_reduce as rr
 from repro.core import topology
+from repro.core import validation as vd
 from repro.core.elastic_mesh import SlotAssignment
 from repro.core.fault_tolerance import (ClusterSimulator,
                                         CommOverlapLedger, RetryPolicy)
@@ -72,6 +73,13 @@ class TrainerConfig:
     sync_link_bytes_per_s: float = 500e6
     # unit conversion for BandwidthMonitor matrices (Gb/s -> bytes/s)
     link_bytes_per_gbps: float = 125e6
+    # contribution-admission layer (untrusted-contributor defense):
+    # None disables it; with a ValidationConfig every outer sync's
+    # pseudo-gradients pass the admission gates BEFORE any reduced
+    # value is applied, flagged contributors are sanitized out of the
+    # reduce and quarantined via the ClusterSimulator's reputation
+    # state machine (see core/validation.py, docs/sync_pipeline.md)
+    validation: vd.ValidationConfig | None = None
 
 
 class ElasticTrainer:
@@ -141,6 +149,11 @@ class ElasticTrainer:
         self._live_hops = 0
         self._window_hop_i = 0
         self.reorders = 0            # accepted ring reorders (recompiles)
+        # contribution admission: running cross-step norm statistics +
+        # a log of every sanitize/quarantine decision
+        self._adm_stats = (vd.AdmissionStats(cfg.validation)
+                           if cfg.validation is not None else None)
+        self.quarantine_events: list[dict] = []
         self.history: list[dict] = []
         self._pipelines = {}
         self.ckpt_store = None
@@ -280,6 +293,11 @@ class ElasticTrainer:
             losses = self._run_inner_phase(batches, active)
             global_step += h
 
+            # fault-harness POISON events corrupt the scheduled nodes'
+            # contributions AFTER the inner phase, before the sync —
+            # exactly what a faulty peer injects into the ring
+            self._apply_poison(plan.get("poison", {}), t)
+
             # bandwidth-aware ring re-ordering (paper §2.5)
             if bandwidth_sampler is not None:
                 self.bw.observe_matrix(bandwidth_sampler(t))
@@ -288,13 +306,22 @@ class ElasticTrainer:
                     self.ring_order = order
                     self.reorders += 1
 
-            # elastic weighted sync with mid-collective retry
+            # elastic weighted sync with mid-collective retry;
+            # re-admitted (probation-complete) nodes re-enter like
+            # joiners: zero weight for their first round
             weights = self.slots.live_mask(
                 plan["live"],
-                zero_weight_ids=plan["joined"] + plan["stragglers"])
+                zero_weight_ids=plan["joined"] + plan["stragglers"]
+                + list(plan.get("readmitted", ())))
 
+            adm_report = None
             if self.overlap:
                 overlap_rec = self._overlapped_boundary(t, weights)
+                adm_report = overlap_rec.pop("_report", None)
+                attempts = 1
+            elif self._validation_on():
+                overlap_rec = None
+                adm_report = self._validated_outer_sync(t, weights)
                 attempts = 1
             else:
                 overlap_rec = None
@@ -322,6 +349,12 @@ class ElasticTrainer:
                        self.cfg.diloco)}
             if overlap_rec is not None:
                 rec["overlap"] = overlap_rec
+            if adm_report is not None:
+                rec["admission"] = {
+                    "accepted": adm_report.accepted,
+                    "flagged": {s: list(r) for s, r in
+                                adm_report.flagged.items()},
+                    "quarantined": list(adm_report.quarantined_nodes)}
             if fallback_rec is not None:
                 rec["sync_fallback"] = fallback_rec
             # streamed recovery that completed during this inner phase
@@ -462,6 +495,21 @@ class ElasticTrainer:
             self.params, tree["params"])
         self.opt_state = jax.vmap(self.optimizer.init)(self.params)
 
+    def _quarantined_slots(self) -> list[int]:
+        return sorted(
+            self.slots.slot_of[nid]
+            for nid in self.sim.quarantined_ids()
+            if nid in self.slots.slot_of)
+
+    def _ring_for_sync(self) -> tuple[int, ...]:
+        """Quarantine-aware ring order: quarantined slots move to the
+        tail (zero-weighted rows don't sit between healthy peers).
+        When they already are at the tail the order — and therefore
+        the distributed hop programs — is unchanged."""
+        order = tuple(self.ring_order[: self.k])
+        q = self._quarantined_slots()
+        return topology.exclude_slots(order, q) if q else order
+
     def _begin_sync(self, weights, ef_slot: int) -> dl.OuterSyncHandle:
         """Stage the outer sync: through the distributed backend when
         one is plugged in, the simulator ring otherwise (same handle
@@ -469,11 +517,11 @@ class ElasticTrainer:
         if self.sync_backend is not None:
             return self.sync_backend.begin(
                 self.params, self.outer, self.cfg.diloco,
-                ring_order=self.ring_order[: self.k], weights=weights,
+                ring_order=self._ring_for_sync(), weights=weights,
                 ef_slot=ef_slot)
         return dl.begin_outer_sync_sim(
             self.params, self.outer, self.cfg.diloco,
-            ring_order=self.ring_order[: self.k], weights=weights,
+            ring_order=self._ring_for_sync(), weights=weights,
             ef_slot=ef_slot)
 
     def _outer_sync(self, weights):
@@ -484,8 +532,142 @@ class ElasticTrainer:
             return dl.finish_outer_sync_sim(h, self.params, self.outer)
         return dl.outer_sync_sim(self.params, self.outer,
                                  self.cfg.diloco,
-                                 ring_order=self.ring_order[: self.k],
+                                 ring_order=self._ring_for_sync(),
                                  weights=weights)
+
+    # -- contribution admission (untrusted-contributor defense) ---------------
+
+    def _validation_on(self) -> bool:
+        v = self.cfg.validation
+        return v is not None and v.enabled
+
+    def _apply_poison(self, poison: dict, t: int) -> None:
+        """Corrupt the scheduled LIVE nodes' post-phase params in
+        pseudo-gradient space (``p' = a - poison(a - p)``) so the
+        contribution the next sync stages is exactly what a faulty
+        peer would inject. Seeded per (node, step) — deterministic."""
+        if not poison:
+            return
+        from repro.core.sync_engine import SyncEngine
+        any_params = jax.tree.map(lambda p: p[0], self.params)
+        eng = SyncEngine.for_tree(any_params)
+        a_flat = (self.outer.anchor_flat
+                  if self.outer.anchor_flat is not None
+                  else eng.flatten(self.outer.anchor))
+        a_np = np.asarray(a_flat, np.float32)
+        live = set(self.sim.hb.live_ids())
+        for nid in sorted(poison):
+            if nid not in live:
+                # quarantined/dead nodes have no contribution to spoil
+                continue
+            slot = self.slots.slot_of.get(nid)
+            if slot is None:
+                continue
+            p_flat = np.asarray(eng.flatten(
+                jax.tree.map(lambda p: p[slot], self.params)),
+                np.float32)
+            rng = np.random.default_rng([nid, t])
+            bad = vd.poison_pseudograd(a_np - p_flat, poison[nid], rng)
+            new_p = eng.unflatten(jnp.asarray(a_np - bad),
+                                  like=any_params)
+            self.params = jax.tree.map(
+                lambda stacked, leaf: stacked.at[slot].set(
+                    leaf.astype(stacked.dtype)),
+                self.params, new_p)
+
+    def _admission_check(self, handle: dl.OuterSyncHandle,
+                         t: int) -> vd.AdmissionReport:
+        """Judge the staged pseudo-gradients BEFORE any reduced value
+        is applied; quarantine flagged contributors and feed the
+        accepted rows back into the cross-step statistics. Pure
+        host-side float64 on the retained rows + the chunk-norm
+        sideband, so the simulator and the distributed backend reach
+        bit-identical decisions."""
+        report = vd.validate_pseudograds(
+            np.asarray(handle.op.xs, np.float64),
+            np.asarray(handle.weights, np.float64),
+            handle.norm_sideband(), self._adm_stats,
+            self.cfg.validation)
+        slot_node = {slot: nid
+                     for nid, slot in self.slots.slot_of.items()}
+        for slot in sorted(report.flagged):
+            nid = slot_node.get(slot)
+            if nid is not None and self.sim.record_violation(
+                    nid, t, report.flagged[slot]):
+                report.quarantined_nodes.append(nid)
+        self.sim.record_clean(
+            [slot_node[s] for s in report.accepted if s in slot_node])
+        self._adm_stats.update(report)
+        if report.sanitize:
+            self.quarantine_events.append({
+                "outer_step": t,
+                "flagged": {s: list(r)
+                            for s, r in report.flagged.items()},
+                "bad_chunks": {s: list(c)
+                               for s, c in report.bad_chunks.items()},
+                "quarantined": list(report.quarantined_nodes)})
+        return report
+
+    def _validated_outer_sync(self, t: int, weights) -> vd.AdmissionReport:
+        """Non-overlapped outer sync behind the admission gates:
+        begin -> judge -> (sanitize + restart over the clean survivors)
+        or finish. The staged accumulators already absorbed the raw
+        rows (and NaN * 0 == NaN), so a rejected population is never
+        finished — the sanitized rows are RE-REDUCED from scratch via
+        the torn-reduction restart path."""
+        w = jnp.asarray(np.asarray(weights), jnp.float32)
+        h = self._begin_sync(w, ef_slot=0)
+        report = self._admission_check(h, t)
+        if report.sanitize:
+            h.sanitize(report.sanitize)
+            w2 = np.asarray(w, np.float32).copy()
+            for slot in report.sanitize:
+                if slot < len(w2):
+                    w2[slot] = 0.0
+            self.params, self.outer = dl.resync_outer_sim(
+                h, self.params, self.outer, jnp.asarray(w2))
+        else:
+            self.params, self.outer = dl.finish_outer_sync_sim(
+                h, self.params, self.outer)
+        return report
+
+    # -- teardown -------------------------------------------------------------
+
+    def close(self, discard: bool = False) -> dict | None:
+        """Tear down any in-flight overlapped sync so an interrupted
+        run can't leave hop buffers or a torn accumulator behind.
+        ``discard=False`` drains and applies it (clean finish);
+        ``discard=True`` aborts it — the partial reduction is dropped
+        and the handle poisoned (``SyncAbortedError`` on any further
+        use). Pending async snapshots are flushed either way."""
+        h, self._inflight = self._inflight, None
+        rec = None
+        if h is not None and not h.aborted:
+            if discard:
+                h.abort()
+                rec = {"discarded": True,
+                       "ledger": self.comm_ledger.tear_sync(
+                           resync_hops=0)}
+            else:
+                self._drain_hops(h)
+                rec = {"discarded": False,
+                       "ledger": self.comm_ledger.finish_sync()}
+                self.params, self.outer = dl.finish_outer_sync_sim(
+                    h, self.params, self.outer)
+            self.sim.note_sync_end()
+        if self.snapshotter is not None:
+            self.snapshotter.flush()
+        return rec
+
+    def __enter__(self) -> "ElasticTrainer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        # an exception mid-overlap leaves the reduction torn: discard
+        # it (a partial accumulator must never be applied); on a clean
+        # exit the in-flight sync drains and applies
+        self.close(discard=exc_type is not None)
+        return False
 
     # -- overlapped outer sync (diloco.overlap == 'delayed') ------------------
 
@@ -543,7 +725,11 @@ class ElasticTrainer:
         w = jnp.asarray(np.asarray(weights), jnp.float32)
         h_new = self._begin_sync(w, ef_slot=self._ef_begins % 2)
         self._ef_begins += 1
-        rec: dict = {"hops": h_new.hops_total}
+        # admission gates run on the STAGED rows before any hop is
+        # dispatched — a flagged contribution never rides the wire
+        report = (self._admission_check(h_new, t)
+                  if self._validation_on() else None)
+        rec: dict = {"hops": h_new.hops_total, "_report": report}
         prev = self._inflight
         if prev is not None:
             self._drain_hops(prev)
@@ -555,6 +741,25 @@ class ElasticTrainer:
             # worker to the (unchanged) anchor; this phase's progress
             # arrives via the delayed application at the next boundary
             self._reset_to_anchor()
+        if report is not None and report.sanitize:
+            # rejected population: sanitize the retained rows and apply
+            # this boundary's sync RIGHT NOW as a synchronous re-reduce
+            # over the clean survivors (to its own anchor snapshot —
+            # the same lineage the delayed apply would have used). The
+            # whole re-reduction is exposed comm, charged like a torn
+            # sync; nothing stays in flight.
+            h_new.sanitize(report.sanitize)
+            w2 = np.asarray(h_new.weights, np.float32).copy()
+            for slot in report.sanitize:
+                if slot < len(w2):
+                    w2[slot] = 0.0
+            self.params, self.outer = dl.resync_outer_sim(
+                h_new, self.params, self.outer, jnp.asarray(w2))
+            self.comm_ledger.begin_sync(self._hop_seconds(weights))
+            rec["rejected"] = self.comm_ledger.tear_sync(
+                resync_hops=h_new.hops_total)
+            self._inflight = None
+            return rec
         self.sim.note_sync_begin(t, self._participants(weights))
         self._inflight = h_new
         self.comm_ledger.begin_sync(self._hop_seconds(weights))

@@ -658,6 +658,14 @@ class DistRingSyncOp:
         return DistRingSyncOp(self.programs, self.xs, weights=weights,
                               fused_src=self.fused_src).finish()
 
+    def norm_sideband(self):
+        """Per-chunk norm sideband of the retained rows — the SAME
+        host-side ``ring_reduce.chunk_norms`` the simulator op uses, so
+        both paths judge bit-identical values (the admission layer's
+        bit-identity hinges on this)."""
+        from repro.core import ring_reduce as rr
+        return rr.chunk_norms(self.xs, self.cfg.buckets)
+
 
 class DistSyncBackend:
     """Plugs the per-hop distributed collectives into ``ElasticTrainer``

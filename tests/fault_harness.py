@@ -31,11 +31,15 @@ from repro.core.fault_tolerance import EventKind, NodeEvent
 
 
 def seeded_events(seed: int, n_outer: int, joiner_ids,
-                  crash_ids, stall_ids, *, announce_lead: int = 1
-                  ) -> list[NodeEvent]:
+                  crash_ids, stall_ids, *, poison_ids=(),
+                  announce_lead: int = 1) -> list[NodeEvent]:
     """A reproducible membership schedule: every joiner gets an
     ANNOUNCE ``announce_lead`` steps before its JOIN; crashes and
-    stalls land at seeded steps."""
+    stalls land at seeded steps. ``poison_ids`` nodes turn adversarial
+    at a seeded step and STAY adversarial: a POISON event every step
+    from then on, cycling through the corruption modes."""
+    from repro.core.validation import POISON_MODES
+
     rng = np.random.default_rng(seed)
     events: list[NodeEvent] = []
     for nid in joiner_ids:
@@ -49,6 +53,12 @@ def seeded_events(seed: int, n_outer: int, joiner_ids,
     for nid in stall_ids:
         events.append(NodeEvent(int(rng.integers(1, n_outer)),
                                 EventKind.STALL, nid))
+    for nid in poison_ids:
+        start = int(rng.integers(0, max(1, n_outer - 1)))
+        mode0 = int(rng.integers(len(POISON_MODES)))
+        for i, t in enumerate(range(start, n_outer)):
+            mode = POISON_MODES[(mode0 + i) % len(POISON_MODES)]
+            events.append(NodeEvent(t, EventKind.POISON, nid, arg=mode))
     return sorted(events, key=lambda e: e.outer_step)
 
 

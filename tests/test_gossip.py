@@ -247,6 +247,57 @@ def test_retry_call_no_retry_carveout_and_exhaustion():
     assert len(calls) == pol.attempts
 
 
+def test_retry_call_total_deadline_is_typed_and_checked_pre_sleep():
+    """``max_elapsed_s`` caps the TOTAL wall-clock across attempts:
+    the budget check includes the about-to-happen backoff, so the call
+    fails fast instead of sleeping past the deadline. Deterministic via
+    injected sleep + clock."""
+    from repro.checkpointing import (FetchError, PeerTimeoutError,
+                                     RetryDeadlineError, RetryPolicy,
+                                     retry_call)
+
+    t = [0.0]
+    calls = []
+
+    def stalled():
+        calls.append(1)
+        raise PeerTimeoutError("deadline")
+
+    pol = RetryPolicy(attempts=100, base_delay=1.0, max_delay=1.0,
+                      jitter=0.0, max_elapsed_s=2.5)
+    with pytest.raises(RetryDeadlineError) as ei:
+        retry_call(stalled, policy=pol, describe="probe",
+                   sleep=lambda s: t.__setitem__(0, t[0] + s),
+                   clock=lambda: t[0])
+    # slept 0+1 and 1+1; the third backoff would cross 2.5s — raised
+    # instead, attempts budget (100) nowhere near exhausted
+    assert len(calls) == 3 and t[0] == 2.0
+    # typed for both retry-loop and timeout-based callers; chains the
+    # underlying error and names the budget + call
+    assert isinstance(ei.value, FetchError)
+    assert isinstance(ei.value, TimeoutError)
+    assert isinstance(ei.value.__cause__, PeerTimeoutError)
+    assert "2.5" in str(ei.value) and "probe" in str(ei.value)
+
+
+def test_streaming_fetcher_honors_recovery_budget(tmp_path):
+    """A joiner whose swarm never materializes must stop spinning once
+    its total recovery budget is spent — surfaced as the same typed
+    ``RetryDeadlineError`` via ``wait_ready``."""
+    from repro.checkpointing import (RetryDeadlineError,
+                                     StreamingFetcher)
+
+    f = StreamingFetcher([], tmp_path / "store", like=None,
+                         max_rounds=1000, round_wait=0.01,
+                         max_elapsed_s=1e-6)
+    f.start()
+    with pytest.raises(RetryDeadlineError):
+        f.wait_ready(timeout=10.0)
+    assert f.failed and isinstance(f.error, RetryDeadlineError)
+    assert f._rounds < 1000                # did not spin the rounds out
+    f.close()
+
+
 def test_gossip_miss_expiry_under_stalled_transport():
     """A peer that accepts but never answers inside the deadline
     (PeerTimeoutError, not a dead socket) must burn misses and expire

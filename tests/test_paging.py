@@ -77,6 +77,43 @@ def test_block_pool_pressure_hook_can_rescue():
     assert pool.alloc(1) == [1]            # hook freed exactly enough
 
 
+def test_block_pool_cold_lru_park_revive_evict():
+    freed = []
+    pool = BlockPool(6, retain_tagged=True,
+                     on_free=lambda bid, tags: freed.append(bid))
+    a, b, c = pool.alloc(3)
+    pool.tag(a, ("block", b"da"))
+    pool.tag(b, ("block", b"db"))
+    # untagged block frees outright; tagged ones park, oldest first
+    assert pool.decref(c) is True and freed == [c]
+    assert pool.decref(a) is False and pool.decref(b) is False
+    assert list(pool.cold) == [a, b] and pool.used == 2
+    # revival: prefix hit increfs a zero-ref cold block back to life
+    pool.incref(a)
+    assert a not in pool.cold and pool.ref[a] == 1
+    assert pool.stats["revived"] == 1
+    # LRU: re-parking moves a to most-recent; eviction takes b first
+    pool.decref(a)
+    assert list(pool.cold) == [b, a]
+    assert pool.evict_cold(1) == 1 and freed == [c, b]
+    pool.evict(a)                          # targeted evict
+    assert not pool.cold and pool.used == 0 and freed == [c, b, a]
+    assert pool.stats["evicted"] == 2
+
+
+def test_block_pool_pressure_evicts_cold_lru():
+    pool = BlockPool(4, retain_tagged=True)
+    pool.on_pressure = lambda p, short: p.evict_cold(short)
+    blocks = pool.alloc(3)
+    for bid in blocks:
+        pool.tag(bid, ("block", bytes([bid])))
+        pool.decref(bid)
+    assert pool.cold_count == 3            # pool "full" but all cold
+    got = pool.alloc(2)                    # evicts the 2 coldest
+    assert got == blocks[:2] and pool.cold_count == 1
+    assert pool.stats["evicted"] == 2
+
+
 def test_chain_digests_commit_to_prefix():
     p1 = np.arange(2, 42, dtype=np.int32)            # 40 tokens
     p2 = np.concatenate([p1[:32], p1[32:] + 7])      # diverges in tail
@@ -223,6 +260,70 @@ def test_flush_prefix_cache_forces_reprefill(dense_world):
     assert not eng.prefix.blocks and not eng.prefix.tails
     _drain(eng, [(1, q.copy(), 4)])
     assert eng.stats["prefills"] == 2      # no stale-policy hit
+
+
+def test_cache_prefixes_hit_survives_retire(dense_world):
+    """cache_prefixes=True parks retired prefix blocks on the cold
+    list: an identical prompt submitted AFTER the first fully retired
+    still admits with zero prefill, and outputs match the dense
+    engine."""
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(31)
+    q = rng.integers(2, cfg.vocab, size=32).astype(np.int32)
+    spec = [(0, q.copy(), 6)]
+    dense = _drain(ContinuousEngine(model, params, batch_slots=2,
+                                    max_len=MAX_LEN,
+                                    decode_chunk=CHUNK), spec)
+    eng = PagedEngine(model, params, batch_slots=2, max_len=MAX_LEN,
+                      decode_chunk=CHUNK, cache_prefixes=True)
+    first = _drain(eng, spec)
+    assert eng.pool.cold_count > 0         # blocks parked, not freed
+    assert eng.prefix.blocks               # index entries survive
+    second = _drain(eng, [(1, q.copy(), 6)])
+    assert first == dense and second == dense
+    assert eng.stats["prefills"] == 1      # repeat was a full hit
+    assert eng.pool.stats["revived"] > 0
+    # without retention the same repeat re-prefills from scratch
+    cold_off = PagedEngine(model, params, batch_slots=2,
+                           max_len=MAX_LEN, decode_chunk=CHUNK)
+    _drain(cold_off, spec)
+    assert cold_off.pool.used == 0 and not cold_off.pool.cold
+    _drain(cold_off, [(1, q.copy(), 6)])
+    assert cold_off.stats["prefills"] == 2
+
+
+def test_cache_prefixes_pressure_evicts_instead_of_deferring(
+        dense_world):
+    """Under pool pressure admission evicts the coldest parked prefix
+    instead of deferring/raising: sequential distinct prompts through a
+    pool with room for ~one request keep admitting immediately."""
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(37)
+    eng = PagedEngine(model, params, batch_slots=1, max_len=MAX_LEN,
+                      decode_chunk=CHUNK, pool_blocks=7,
+                      cache_prefixes=True)
+    spec = [(i, rng.integers(2, cfg.vocab, size=40).astype(np.int32),
+             8) for i in range(3)]
+    dense = _drain(ContinuousEngine(model, params, batch_slots=1,
+                                    max_len=MAX_LEN,
+                                    decode_chunk=CHUNK), spec)
+    assert _drain(eng, spec) == dense
+    assert eng.pool.stats["evicted"] > 0   # cold LRU made room
+    assert eng.stats["admit_deferred"] == 0
+
+
+def test_flush_prefix_cache_frees_cold_blocks(dense_world):
+    cfg, model, params = dense_world
+    rng = np.random.default_rng(41)
+    q = rng.integers(2, cfg.vocab, size=32).astype(np.int32)
+    eng = PagedEngine(model, params, batch_slots=2, max_len=MAX_LEN,
+                      decode_chunk=CHUNK, cache_prefixes=True)
+    _drain(eng, [(0, q.copy(), 4)])
+    assert eng.pool.cold_count > 0 and eng.pool.used > 0
+    eng.flush_prefix_cache()               # policy swap: KV now stale
+    assert eng.pool.cold_count == 0 and eng.pool.used == 0
+    _drain(eng, [(1, q.copy(), 4)])
+    assert eng.stats["prefills"] == 2      # no stale hit
 
 
 # -- capacity: exhaustion, deferral, chunked long prompts ---------------------
